@@ -1,0 +1,101 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""§Perf hillclimb driver: runs named optimization variants of the three
+chosen cells through the dry-run pipeline and records the roofline deltas.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb            # all variants
+  PYTHONPATH=src python -m benchmarks.hillclimb mamba2     # one cell
+
+The iteration log (hypothesis / napkin math / result) lives in
+EXPERIMENTS.md §Perf; this script produces the measured numbers it cites.
+"""
+import json
+import sys
+
+import jax
+
+from repro.configs.base import DECODE_32K, TRAIN_4K
+from repro.launch.dryrun import run_cell
+
+OUT = "experiments/perf"
+
+#: (cell-key, arch, cell, variant-name, cfg_overrides, fsdp[, accum])
+VARIANTS = [
+    # arctic fit completion: fsdp + 4-way gradient accumulation drops the
+    # per-microbatch activation peak ~4x (the B2 residual)
+    ("arctic3", "arctic-480b", TRAIN_4K, "it3_fsdp_accum4", {}, True, 4),
+    # --- Cell A: mamba2-130m train_4k (paper-representative: TrIM-1D +
+    #     SSD chunked; worst memory/compute ratio among train cells) ---
+    ("mamba2", "mamba2-130m", TRAIN_4K, "it1_sharded_padded_ce", {}, False),
+    ("mamba2", "mamba2-130m", TRAIN_4K, "it2_chunked_ce",
+     {"ce_impl": "chunked"}, False),
+    ("mamba2", "mamba2-130m", TRAIN_4K, "it3_ssd_bf16",
+     {"ce_impl": "chunked", "ssd_bf16": True}, False),
+    ("mamba2", "mamba2-130m", TRAIN_4K, "it4_remat_none",
+     {"ce_impl": "chunked", "ssd_bf16": True, "remat": "none"}, False),
+    # it2/it3 refuted -> revert to padded CE + f32 scores; vary structure
+    ("mamba2b", "mamba2-130m", TRAIN_4K, "it5_remat_none_only",
+     {"remat": "none"}, False),
+    ("mamba2b", "mamba2-130m", TRAIN_4K, "it6_chunk128",
+     {"remat": "none", "ssm_chunk": 128}, False),
+    ("mamba2b", "mamba2-130m", TRAIN_4K, "it7_chunk64",
+     {"remat": "none", "ssm_chunk": 64}, False),
+    # remat=none exceeds 16 GB/chip activations (fits_hbm False): keep the
+    # remat=dots fit and take the chunk-size win alone
+    ("mamba2c", "mamba2-130m", TRAIN_4K, "it8_chunk128_dots",
+     {"ssm_chunk": 128}, False),
+    # --- Cell B: arctic-480b train_4k (most collective-bound) ---
+    ("arctic", "arctic-480b", TRAIN_4K, "it1_index_gather_dispatch",
+     {}, False),
+    ("arctic", "arctic-480b", TRAIN_4K, "it2_fsdp",
+     {}, True),
+    # --- Cell C: mistral-large-123b decode_32k (serve; misses HBM) ---
+    ("mistral", "mistral-large-123b", DECODE_32K, "it1_kv_seqshard",
+     {"decode_kv_seqshard": True}, False),
+    ("mistral", "mistral-large-123b", DECODE_32K, "it2_kv_seqshard_fsdp",
+     {"decode_kv_seqshard": True}, True),
+    # it2 fits but the per-step weight all-gathers dominate; the 2d layout
+    # (seq over data+model, batch replicated, partial-sum matmuls) should
+    # drop the memory term ~16x with only tiny activation psums.
+    ("mistral2", "mistral-large-123b", DECODE_32K, "it3_serve2d",
+     {"decode_kv_seqshard": "2d"}, True),
+]
+
+
+def main() -> None:
+    os.makedirs(OUT, exist_ok=True)
+    only = set(sys.argv[1:])
+    for key, arch, cell, name, overrides, fsdp, *rest in VARIANTS:
+        accum = rest[0] if rest else 1
+        if only and key not in only:
+            continue
+        tag = f"{arch}__{cell.name}__{name}"
+        print(f"[perf] {tag} ...", flush=True)
+        try:
+            rec = run_cell(arch, cell, multi_pod=False, fsdp=fsdp,
+                           cfg_overrides=overrides, accum=accum)
+        except Exception as e:
+            print(f"[perf] FAIL {tag}: {e}")
+            import traceback
+            traceback.print_exc()
+            continue
+        finally:
+            jax.clear_caches()
+        rec["variant"] = name
+        with open(os.path.join(OUT, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        r = rec["roofline"]
+        print(f"[perf]   compute {r['compute_s']*1e3:.2f}ms  "
+              f"memory {r['memory_s']*1e3:.2f}ms  "
+              f"collective {r['collective_s']*1e3:.2f}ms  "
+              f"bound {r['step_time_bound_s']*1e3:.2f}ms  "
+              f"useful {r['useful_flops_ratio']:.3f}  "
+              f"fits={rec['fits_hbm']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,208 @@
+"""Benchmark harness — one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all sections
+  PYTHONPATH=src python -m benchmarks.run table1 fig7
+
+Sections print CSV rows (`section,name,...`) so downstream tooling (and
+EXPERIMENTS.md) can consume them directly. Sections:
+
+  table1   VGG-16 per-layer throughput / PE util / memory accesses vs the
+           paper's printed TrIM columns (Table I).
+  table2   AlexNet, incl. the 11x11/5x5 kernel-tiling path (Table II).
+  table3   State-of-the-art FPGA comparison re-derivation (Table III).
+  fig7     Design-space exploration (throughput / psum size / BW).
+  baselines TrIM vs Eyeriss-RS vs im2col-WS memory-access models.
+  engine   Bit-faithful engine emulator timing + counter validation.
+  kernels  Pallas kernel (interpret) vs oracle timing on small shapes.
+  roofline Dry-run roofline table (reads experiments/dryrun/*.json).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.trim.explore import FIG7_GRID, derive_fpga_parameters, explore
+from repro.core.trim.model import (ALEXNET_BATCH, ALEXNET_LAYERS,
+                                   PAPER_ENGINE, PAPER_TABLE1_TRIM,
+                                   PAPER_TABLE1_TRIM_TOTALS,
+                                   PAPER_TABLE1_EYERISS_TOTALS,
+                                   PAPER_TABLE2_TRIM,
+                                   PAPER_TABLE2_TRIM_TOTALS,
+                                   PAPER_TABLE2_EYERISS_TOTALS, VGG16_BATCH,
+                                   VGG16_LAYERS, eyeriss_rs_memory_accesses,
+                                   layer_gops, network_gops, network_report,
+                                   pe_utilization, trim_memory_accesses,
+                                   ws_im2col_memory_accesses)
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def _timeit(fn, n=3) -> float:
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def bench_table1() -> None:
+    print("section,name,gops_model,gops_paper,pe_util_model,pe_util_paper,"
+          "offchip_M_model,offchip_M_paper,onchip_M_model,onchip_M_paper")
+    for l in VGG16_LAYERS:
+        g_p, u_p, on_p, off_p = PAPER_TABLE1_TRIM[l.name]
+        acc = trim_memory_accesses(l, batch=VGG16_BATCH)
+        print(f"table1,{l.name},{layer_gops(l):.1f},{g_p},"
+              f"{pe_utilization(l):.2f},{u_p},"
+              f"{acc.off_chip:.2f},{off_p},{acc.onchip_equiv:.2f},{on_p}")
+    tot = network_gops(VGG16_LAYERS)
+    accs = [trim_memory_accesses(l, batch=VGG16_BATCH) for l in VGG16_LAYERS]
+    print(f"table1,TOTAL,{tot:.1f},{PAPER_TABLE1_TRIM_TOTALS['gops']},"
+          f",,{sum(a.off_chip for a in accs):.1f},"
+          f"{PAPER_TABLE1_TRIM_TOTALS['off_chip_M']},"
+          f"{sum(a.onchip_equiv for a in accs):.2f},"
+          f"{PAPER_TABLE1_TRIM_TOTALS['on_chip_M']}")
+
+
+def bench_table2() -> None:
+    print("section,name,gops_model,gops_paper,offchip_M_model,"
+          "offchip_M_paper")
+    for l in ALEXNET_LAYERS:
+        g_p, u_p, on_p, off_p = PAPER_TABLE2_TRIM[l.name]
+        acc = trim_memory_accesses(l, batch=ALEXNET_BATCH)
+        print(f"table2,{l.name},{layer_gops(l):.2f},{g_p},"
+              f"{acc.off_chip:.2f},{off_p}")
+    print(f"table2,TOTAL,{network_gops(ALEXNET_LAYERS):.1f},"
+          f"{PAPER_TABLE2_TRIM_TOTALS['gops']},,")
+
+
+def bench_table3() -> None:
+    """Table III re-derivation: our engine's peak throughput + the published
+    competitor figures (device/power figures are from the paper)."""
+    rows = [
+        ("Sense-TVLSI23", 1024, 200e6, 409.6, 11.0),
+        ("TCASI24-WS", 256, 150e6, 76.8, 1.398),
+        ("TCASII24-RS", 243, 150e6, 72.9, 8.25),
+    ]
+    print("section,name,pes,clock_MHz,peak_gops,power_W,gops_per_W")
+    for name, pes, clk, gops, p in rows:
+        print(f"table3,{name},{pes},{clk/1e6:.0f},{gops},{p},{gops/p:.2f}")
+    eng = PAPER_ENGINE
+    print(f"table3,TrIM(this work),{eng.n_pes},{eng.f_clk_hz/1e6:.0f},"
+          f"{eng.peak_gops},4.329,{eng.peak_gops/4.329:.2f}")
+
+
+def bench_fig7() -> None:
+    print("section,P_N,P_M,n_pes,gops,psum_Mb,bw_bits")
+    for p in explore():
+        print(f"fig7,{p.P_N},{p.P_M},{p.n_pes},{p.gops:.1f},"
+              f"{p.psum_buffer_Mb:.2f},{p.io_bandwidth_bits}")
+    pn, pm = derive_fpga_parameters()
+    print(f"fig7,derived_fpga_params,{pn},{pm},,,")
+
+
+def bench_baselines() -> None:
+    print("section,network,model,ifmap_M,weight_M,onchip_equiv_M,total_M")
+    for net_name, layers, batch in (("vgg16", VGG16_LAYERS, VGG16_BATCH),
+                                    ("alexnet", ALEXNET_LAYERS,
+                                     ALEXNET_BATCH)):
+        for model_name, fn in (("trim", trim_memory_accesses),
+                               ("eyeriss_rs", eyeriss_rs_memory_accesses),
+                               ("im2col_ws", ws_im2col_memory_accesses)):
+            accs = [fn(l, batch=batch) if model_name != "trim"
+                    else fn(l, PAPER_ENGINE, batch=batch) for l in layers]
+            print(f"baselines,{net_name},{model_name},"
+                  f"{sum(a.ifmap_reads for a in accs):.1f},"
+                  f"{sum(a.weight_reads for a in accs):.1f},"
+                  f"{sum(a.onchip_equiv for a in accs):.2f},"
+                  f"{sum(a.total for a in accs):.1f}")
+
+
+def bench_engine() -> None:
+    from repro.core.trim.engine import TrimEngine, reference_conv_layer
+    from repro.core.trim.model import ConvLayerSpec, TrimEngineConfig
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 256, (8, 28, 28), dtype=np.uint8)
+    w = rng.integers(-128, 128, (8, 8, 3, 3)).astype(np.int8)
+    eng = TrimEngine(TrimEngineConfig(P_N=4, P_M=4), check_widths=False)
+    us = _timeit(lambda: eng.run_layer(x, w), n=3)
+    out, trace = eng.run_layer(x, w)
+    ref = reference_conv_layer(x, w)
+    ok = bool((out == ref).all())
+    print("section,name,us_per_call,derived")
+    print(f"engine,emulator_28x28x8x8,{us:.0f},exact={ok}:"
+          f"steps={trace.steps}")
+
+
+def bench_kernels() -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    from repro.kernels.trim_conv2d import trim_conv2d_pallas
+    from repro.kernels.trim_matmul import trim_matmul_pallas
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 16, 16, 16), jnp.float32)
+    w = jax.random.normal(key, (3, 3, 16, 16), jnp.float32)
+    print("section,name,us_per_call,derived")
+    us_ref = _timeit(lambda: jax.block_until_ready(ref.conv2d_ref(x, w)))
+    err = float(np.abs(np.asarray(
+        trim_conv2d_pallas(x, w, tile_h=8, block_c=16, block_f=16,
+                           interpret=True))
+        - np.asarray(ref.conv2d_ref(x, w))).max())
+    print(f"kernels,conv2d_oracle_16x16x16,{us_ref:.0f},"
+          f"interpret_allclose_err={err:.1e}")
+    a = jax.random.normal(key, (256, 256))
+    b = jax.random.normal(key, (256, 256))
+    us_mm = _timeit(lambda: jax.block_until_ready(ref.matmul_ref(a, b)))
+    errm = float(np.abs(np.asarray(
+        trim_matmul_pallas(a, b, block_m=64, block_n=64, block_k=64,
+                           interpret=True)) - np.asarray(a @ b)).max())
+    print(f"kernels,matmul_oracle_256,{us_mm:.0f},"
+          f"interpret_allclose_err={errm:.1e}")
+
+
+def bench_roofline() -> None:
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    print("section,arch,shape,mesh,compute_s,memory_s,collective_s,"
+          "dominant,useful_ratio,fits_hbm,step_bound_s")
+    if not files:
+        print(f"roofline,NO_ARTIFACTS,run `python -m repro.launch.dryrun` "
+              f"first (looked in {DRYRUN_DIR}),,,,,,,,")
+        return
+    for f in files:
+        r = json.load(open(f))
+        ro = r.get("roofline", {})
+        mesh = "multi" if r.get("multi_pod") else "single"
+        print(f"roofline,{r['arch']},{r['shape']},{mesh},"
+              f"{ro.get('compute_s', 0):.4f},{ro.get('memory_s', 0):.4f},"
+              f"{ro.get('collective_s', 0):.4f},{ro.get('dominant','?')},"
+              f"{ro.get('useful_flops_ratio', 0):.3f},"
+              f"{r.get('fits_hbm')},{ro.get('step_time_bound_s', 0):.4f}")
+
+
+SECTIONS = {
+    "table1": bench_table1,
+    "table2": bench_table2,
+    "table3": bench_table3,
+    "fig7": bench_fig7,
+    "baselines": bench_baselines,
+    "engine": bench_engine,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(SECTIONS)
+    for n in names:
+        SECTIONS[n]()
+
+
+if __name__ == "__main__":
+    main()

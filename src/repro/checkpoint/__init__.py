@@ -1,0 +1,3 @@
+"""Sharded checkpointing with async write and elastic restore."""
+from repro.checkpoint.manager import (CheckpointManager, latest_step,
+                                      save_pytree, restore_pytree)

@@ -1,0 +1,51 @@
+"""Architecture registry: one module per assigned architecture (+ the
+paper's own CNNs). ``get_config(name)`` / ``get_smoke(name)`` select by the
+assigned id (--arch flag).
+"""
+from repro.configs.base import (ALL_SHAPES, DECODE_32K, LONG_500K,
+                                PREFILL_32K, REGISTRY, TRAIN_4K, ModelConfig,
+                                ShapeCell, get_config, register)
+
+# LM-family architectures (importing registers them)
+from repro.configs import llava_next_34b          # noqa: F401
+from repro.configs import llama4_maverick_400b_a17b  # noqa: F401
+from repro.configs import arctic_480b             # noqa: F401
+from repro.configs import starcoder2_3b           # noqa: F401
+from repro.configs import gemma_7b                # noqa: F401
+from repro.configs import granite_3_2b            # noqa: F401
+from repro.configs import mistral_large_123b      # noqa: F401
+from repro.configs import seamless_m4t_large_v2   # noqa: F401
+from repro.configs import jamba_1_5_large_398b    # noqa: F401
+from repro.configs import mamba2_130m             # noqa: F401
+
+_SMOKES = {
+    m.CONFIG.name: m.SMOKE for m in (
+        llava_next_34b, llama4_maverick_400b_a17b, arctic_480b,
+        starcoder2_3b, gemma_7b, granite_3_2b, mistral_large_123b,
+        seamless_m4t_large_v2, jamba_1_5_large_398b, mamba2_130m)
+}
+
+ARCH_IDS = tuple(sorted(REGISTRY))
+
+# CNN-family (the paper's own workloads) — separate registry: they are
+# selected by the CNN examples/benchmarks, not the LM dry-run cells.
+from repro.configs import vgg16 as _vgg16         # noqa: E402
+from repro.configs import alexnet as _alexnet     # noqa: E402
+
+CNN_REGISTRY = {"vgg16": _vgg16.CONFIG, "alexnet": _alexnet.CONFIG}
+CNN_SMOKES = {"vgg16": _vgg16.SMOKE, "alexnet": _alexnet.SMOKE}
+
+
+def get_smoke(name: str, dtype=None) -> ModelConfig:
+    """Reduced config of the same family. Smoke tests run in f32 by default
+    (bit-stable train/serve agreement on CPU); pass dtype=jnp.bfloat16 to
+    exercise the production dtype."""
+    import jax.numpy as jnp
+    return _SMOKES[name].with_overrides(dtype=dtype or jnp.float32)
+
+
+def shape_cells(cfg: ModelConfig):
+    """The ShapeCell list this architecture runs (long_500k gated on
+    subquadratic — see DESIGN.md §5)."""
+    by_name = {c.name: c for c in ALL_SHAPES}
+    return tuple(by_name[s] for s in cfg.shapes)

@@ -1,0 +1,18 @@
+"""alexnet — the paper's second benchmark CNN (Table II): exercises the
+large-kernel tiling path (11x11 and 5x5 kernels split into 3x3 tiles, §V).
+"""
+from repro.core.trim.model import ALEXNET_LAYERS, ConvLayerSpec
+from repro.nn.conv import ALEXNET_CNN, CNNConfig
+
+CONFIG = ALEXNET_CNN
+
+#: reduced smoke config keeping the large-kernel + stride structure
+SMOKE = CNNConfig(
+    "alexnet-smoke",
+    layers=(
+        # 23x23 --11x11 s4--> 4x4 --5x5 p2--> 4x4 --3x3 p1--> 4x4
+        ConvLayerSpec("CL1", 23, 23, 11, 3, 8, stride=4, pad=0),
+        ConvLayerSpec("CL2", 4, 4, 5, 8, 16, pad=2),
+        ConvLayerSpec("CL3", 4, 4, 3, 16, 16, pad=1),
+    ),
+    pool_after=(), classifier=(32,), n_classes=10, input_hw=(23, 23))

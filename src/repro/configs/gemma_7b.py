@@ -1,0 +1,19 @@
+"""gemma-7b [dense] — 28L d_model=3072 16H (kv=16) d_ff=24576 vocab=256000,
+GeGLU, head_dim=256 (q/kv width 4096 != d_model — true Gemma geometry),
+embeddings scaled by sqrt(d_model), tied readout. [arXiv:2403.08295; hf]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="gemma-7b", family="dense",
+    n_layers=28, d_model=3072, n_q=16, n_kv=16, head_dim=256,
+    d_ff=24576, vocab=256000, mlp_kind="geglu", norm="rmsnorm",
+    rope_theta=1e4, tie_embeddings=True, scale_embed=True,
+    vocab_pad_to=128,
+    source="arXiv:2403.08295; hf",
+))
+
+SMOKE = CONFIG.with_overrides(
+    name="gemma-7b-smoke", n_layers=2, d_model=64, n_q=4, n_kv=4,
+    head_dim=16, d_ff=128, vocab=512, vocab_pad_to=64, remat="none",
+    chunk_k=64)

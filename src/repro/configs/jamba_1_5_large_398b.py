@@ -1,0 +1,33 @@
+"""jamba-1.5-large-398b [hybrid] — 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576, MoE 16e top-2, Mamba+attention 1:7 interleave.
+[arXiv:2403.19887; hf]
+
+Schedule (period 8): attention at layer i % 8 == 4, Mamba elsewhere;
+MoE (16e top-2) on odd layers, dense MLP on even layers — the published
+Jamba interleave. Hardware adaptation (DESIGN.md §9): the Mamba mixer is
+implemented as Mamba-2 SSD (chunked, MXU-friendly) rather than Jamba's
+Mamba-1 selective scan; state size 128, headdim 128, 8 B/C groups.
+subquadratic=True: this arch runs the long_500k cell.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    n_layers=72, d_model=8192, n_q=64, n_kv=8, head_dim=128,
+    d_ff=24576, vocab=65536, mlp_kind="swiglu", norm="rmsnorm",
+    rope_theta=1e4, tie_embeddings=False, vocab_pad_to=128,
+    n_experts=16, top_k=2, moe_every=2, moe_offset=1,
+    attn_every=8, attn_offset=4,
+    ssm_d_state=128, ssm_d_conv=4, ssm_expand=2, ssm_headdim=128,
+    ssm_n_groups=8, ssm_chunk=256,
+    fsdp=True, decode_kv_seqshard="model",
+    subquadratic=True,
+    shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+    source="arXiv:2403.19887; hf",
+))
+
+SMOKE = CONFIG.with_overrides(
+    name="jamba-1.5-large-398b-smoke", n_layers=8, d_model=64, n_q=8,
+    n_kv=2, head_dim=8, d_ff=128, vocab=512, vocab_pad_to=64, n_experts=4,
+    ssm_d_state=16, ssm_headdim=16, ssm_n_groups=2, ssm_chunk=32,
+    remat="none", chunk_k=64)

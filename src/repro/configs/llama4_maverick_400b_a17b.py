@@ -1,0 +1,27 @@
+"""llama4-maverick-400b-a17b [moe] — 48L d_model=5120 40H (GQA kv=8)
+d_ff=8192 vocab=202048, MoE 128e top-1, early fusion.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+
+Config note (DESIGN.md §5): the assigned row with *every* layer MoE gives
+~775 B params; Llama-4 Maverick interleaves dense/MoE layers and adds a
+shared expert. With MoE on odd layers + shared expert this lands at
+~397 B total / ~13 B active — matching the 400b-a17b name. Documented
+deviation: interleave + shared expert.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llama4-maverick-400b-a17b", family="moe",
+    n_layers=48, d_model=5120, n_q=40, n_kv=8, head_dim=128,
+    d_ff=8192, vocab=202048, mlp_kind="swiglu", norm="rmsnorm",
+    rope_theta=5e5, tie_embeddings=False, vocab_pad_to=128,
+    n_experts=128, top_k=1, moe_every=2, moe_offset=1, shared_expert=True,
+    capacity_factor=1.25,
+    fsdp=True, decode_kv_seqshard="model",
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+))
+
+SMOKE = CONFIG.with_overrides(
+    name="llama4-maverick-400b-a17b-smoke", n_layers=4, d_model=64, n_q=8,
+    n_kv=2, head_dim=8, d_ff=128, vocab=512, vocab_pad_to=64, n_experts=4,
+    remat="none", chunk_k=64)

@@ -1,0 +1,24 @@
+"""llava-next-34b [vlm] — 60L d_model=7168 56H (GQA kv=8) d_ff=20480
+vocab=64000, anyres tiling. [hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+
+The vision frontend (anyres tile patchify) is a STUB per the assignment:
+``input_specs`` supplies precomputed patch embeddings (B, 576, d) — one
+24x24 base tile — prepended to the text sequence. The backbone is the
+assigned 60-layer geometry (Yi-34B-like).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llava-next-34b", family="vlm",
+    n_layers=60, d_model=7168, n_q=56, n_kv=8, head_dim=128,
+    d_ff=20480, vocab=64000, mlp_kind="swiglu", norm="rmsnorm",
+    rope_theta=5e6, tie_embeddings=False, vocab_pad_to=128,
+    frontend_tokens=576,
+    fsdp=True, decode_kv_seqshard="model",
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified",
+))
+
+SMOKE = CONFIG.with_overrides(
+    name="llava-next-34b-smoke", n_layers=2, d_model=64, n_q=8, n_kv=2,
+    head_dim=8, d_ff=128, vocab=512, vocab_pad_to=64, frontend_tokens=8,
+    remat="none", chunk_k=64)

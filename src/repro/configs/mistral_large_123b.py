@@ -1,0 +1,19 @@
+"""mistral-large-123b [dense] — 88L d_model=12288 96H (GQA kv=8)
+d_ff=28672 vocab=32768. [hf:mistralai/Mistral-Large-Instruct-2407;
+unverified]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mistral-large-123b", family="dense",
+    n_layers=88, d_model=12288, n_q=96, n_kv=8, head_dim=128,
+    d_ff=28672, vocab=32768, mlp_kind="swiglu", norm="rmsnorm",
+    rope_theta=1e6, tie_embeddings=False, vocab_pad_to=128,
+    fsdp=True, decode_kv_seqshard="model",
+    source="hf:mistralai/Mistral-Large-Instruct-2407; unverified",
+))
+
+SMOKE = CONFIG.with_overrides(
+    name="mistral-large-123b-smoke", n_layers=2, d_model=64, n_q=8, n_kv=2,
+    head_dim=8, d_ff=128, vocab=512, vocab_pad_to=64, remat="none",
+    chunk_k=64)

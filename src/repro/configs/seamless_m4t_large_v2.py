@@ -1,0 +1,24 @@
+"""seamless-m4t-large-v2 [audio] — enc-dec, 24L encoder + 24L decoder,
+d_model=1024 16H (kv=16) d_ff=8192 vocab=256206. [arXiv:2308.11596; hf]
+
+The speech frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings (B, S_src, d). The decoder is a causal token
+LM with per-layer cross-attention into the encoder output. Decode shapes
+use a fixed source length of 4096 frames (cross-KV) with the self-KV cache
+at the assigned seq_len (DESIGN.md §5).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="seamless-m4t-large-v2", family="encdec",
+    n_layers=24, n_enc_layers=24, d_model=1024, n_q=16, n_kv=16,
+    head_dim=64, d_ff=8192, vocab=256206, mlp_kind="gelu",
+    norm="layernorm", rope_theta=1e4, tie_embeddings=True,
+    vocab_pad_to=128,
+    source="arXiv:2308.11596; hf",
+))
+
+SMOKE = CONFIG.with_overrides(
+    name="seamless-m4t-large-v2-smoke", n_layers=2, n_enc_layers=2,
+    d_model=64, n_q=4, n_kv=4, head_dim=16, d_ff=128, vocab=518,
+    vocab_pad_to=64, remat="none", chunk_k=64)

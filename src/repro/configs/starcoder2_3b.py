@@ -1,0 +1,17 @@
+"""starcoder2-3b [dense] — 30L d_model=3072 24H (GQA kv=2) d_ff=12288
+vocab=49152, GQA + RoPE. [arXiv:2402.19173; hf]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="starcoder2-3b", family="dense",
+    n_layers=30, d_model=3072, n_q=24, n_kv=2, head_dim=128,
+    d_ff=12288, vocab=49152, mlp_kind="gelu", norm="layernorm",
+    rope_theta=1e5, tie_embeddings=True, vocab_pad_to=128,
+    source="arXiv:2402.19173; hf",
+))
+
+SMOKE = CONFIG.with_overrides(
+    name="starcoder2-3b-smoke", n_layers=2, d_model=64, n_q=8, n_kv=2,
+    head_dim=8, d_ff=128, vocab=512, vocab_pad_to=64, remat="none",
+    chunk_k=64)

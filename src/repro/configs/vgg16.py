@@ -1,0 +1,19 @@
+"""vgg16 — the paper's primary case study (13 CLs, §IV-§V, Table I).
+
+CNN-family config: selectable via --arch vgg16 in the CNN examples and
+benchmarks; runs through the TrIM conv kernels / the bit-faithful engine.
+"""
+from repro.core.trim.model import VGG16_LAYERS, ConvLayerSpec
+from repro.nn.conv import VGG16_CNN, CNNConfig
+
+CONFIG = VGG16_CNN
+
+#: reduced smoke config: same family (3x3 stacks + pools), tiny maps
+SMOKE = CNNConfig(
+    "vgg16-smoke",
+    layers=(
+        ConvLayerSpec("CL1", 16, 16, 3, 3, 8),
+        ConvLayerSpec("CL2", 16, 16, 3, 8, 8),
+        ConvLayerSpec("CL3", 8, 8, 3, 8, 16),
+    ),
+    pool_after=(1,), classifier=(32,), n_classes=10, input_hw=(16, 16))

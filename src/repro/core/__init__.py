@@ -1,0 +1,1 @@
+"""Core: the paper's primary contribution (TrIM dataflow) in JAX/numpy."""

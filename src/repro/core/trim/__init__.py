@@ -1,0 +1,37 @@
+"""TrIM — Triangular Input Movement systolic dataflow (Sestito et al., TCAS-I 2024).
+
+The paper's primary contribution, implemented at three fidelity levels:
+
+- :mod:`repro.core.trim.model`    — the analytical model (paper eqs. 1-4) plus
+  memory-access models for TrIM, Eyeriss-RS and im2col-WS baselines.
+- :mod:`repro.core.trim.engine`   — bit-faithful functional emulator of the
+  Slice/Core/Engine hierarchy (uint8 x int8 -> int32, step-by-step schedule).
+- :mod:`repro.core.trim.slice_sim`— cycle-level simulator of a single TrIM slice
+  (PE array + shift-register buffers) used to validate the triangular movement
+  and the external-fetch overhead claim (~1.8% for 3x3 over 224x224).
+- :mod:`repro.core.trim.explore`  — design-space exploration (paper Fig. 7).
+
+The TPU-native realization of the same dataflow lives in
+:mod:`repro.kernels.trim_conv2d` (Pallas).
+"""
+from repro.core.trim.model import (  # noqa: F401
+    ConvLayerSpec,
+    TrimEngineConfig,
+    VGG16_LAYERS,
+    ALEXNET_LAYERS,
+    layer_ops,
+    engine_cycles,
+    layer_gops,
+    pe_utilization,
+    steady_pe_activity,
+    psum_buffer_bits,
+    io_bandwidth_bits,
+    trim_memory_accesses,
+    ws_im2col_memory_accesses,
+    eyeriss_rs_memory_accesses,
+    network_report,
+)
+from repro.core.trim.engine import (  # noqa: F401
+    TrimEngine,
+    trim_conv_layer,
+)

@@ -1,0 +1,66 @@
+"""Quantization utilities for the TrIM CNN path (paper §III-A precision).
+
+The paper's PEs consume B-bit *unsigned* integer inputs and B-bit *signed*
+integer weights (B = 8 on the FPGA), producing signed psums whose width grows
+as 2B+K (slice bottom row) + ceil(log2 K) (slice adder tree) + ceil(log2 P_M)
+(core tree) + ceil(log2 M) (engine temporal accumulation). Final activations
+are re-quantized to B bits before leaving the engine.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class QuantParams:
+    scale: float
+    zero_point: int = 0
+
+
+def quantize_activations_u8(x: np.ndarray) -> Tuple[np.ndarray, QuantParams]:
+    """Asymmetric uint8 quantization (inputs are unsigned in the paper)."""
+    lo, hi = float(x.min()), float(x.max())
+    hi = max(hi, lo + 1e-8)
+    scale = (hi - lo) / 255.0
+    zp = int(round(-lo / scale))
+    q = np.clip(np.round(x / scale) + zp, 0, 255).astype(np.uint8)
+    return q, QuantParams(scale, zp)
+
+
+def quantize_weights_i8(w: np.ndarray) -> Tuple[np.ndarray, QuantParams]:
+    """Symmetric int8 quantization (weights are signed in the paper)."""
+    amax = max(float(np.abs(w).max()), 1e-8)
+    scale = amax / 127.0
+    q = np.clip(np.round(w / scale), -127, 127).astype(np.int8)
+    return q, QuantParams(scale, 0)
+
+
+def dequantize_psums(psums: np.ndarray, act: QuantParams, wgt: QuantParams,
+                     w_int: np.ndarray) -> np.ndarray:
+    """int32 psums -> float, correcting for the activation zero point.
+
+    conv(q_x, q_w) = conv(x, w)/(s_x*s_w) + zp * sum(q_w); the correction term
+    is per-output-channel.
+    """
+    corr = w_int.astype(np.int64).sum(axis=tuple(range(1, w_int.ndim)))
+    shaped = corr.reshape((-1,) + (1,) * (psums.ndim - 1))
+    return (psums.astype(np.float64) - act.zero_point * shaped) * (
+        act.scale * wgt.scale)
+
+
+def requantize_u8(psums: np.ndarray, out_scale: float,
+                  act: QuantParams, wgt: QuantParams,
+                  w_int: np.ndarray) -> np.ndarray:
+    """Engine output stage: psums -> B-bit activations for the next layer."""
+    f = dequantize_psums(psums, act, wgt, w_int)
+    return np.clip(np.round(f / out_scale), 0, 255).astype(np.uint8)
+
+
+def psum_bit_width(B: int, K: int, P_M: int, M: int) -> int:
+    """The paper's worst-case engine-output width (§III-A/§III-C)."""
+    return (2 * B + K + math.ceil(math.log2(K))
+            + math.ceil(math.log2(max(M, 2))))

@@ -1,0 +1,3 @@
+"""Deterministic sharded data pipeline."""
+from repro.data.pipeline import (SyntheticLMDataset, SyntheticImageDataset,
+                                 FileTokenDataset)  # noqa: F401

@@ -1,0 +1,27 @@
+"""Distributed runtime: logical sharding rules, step builders, collectives."""
+from repro.distributed.sharding import (  # noqa: F401
+    LOGICAL_RULES,
+    MeshContext,
+    activate_mesh,
+    logical_to_spec,
+    shard,
+    param_pspec,
+    zero1_pspec,
+)
+from repro.distributed.steps import (  # noqa: F401
+    StepConfig,
+    make_train_state,
+    train_state_shapes,
+    make_train_step,
+    jit_train_step,
+    make_prefill_step,
+    make_decode_step,
+    state_pspec,
+    batch_pspec,
+    cache_pspec,
+)
+from repro.distributed.trainer import (  # noqa: F401
+    TrainLoopConfig,
+    train_loop,
+    StragglerMonitor,
+)

@@ -1,0 +1,220 @@
+"""Step builders: pjit-ready train_step / prefill / decode functions with
+logical-rule shardings, gradient accumulation, NaN-step skip, and optional
+int8-compressed data-parallel gradient reduction.
+
+All builders return plain python functions *plus* the sharding trees needed
+to jit them on a mesh; ``jit_on_mesh`` assembles the jitted callable. The
+launch layer lowers the same functions with ShapeDtypeStructs for the
+multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.compression import compressed_grads
+from repro.distributed.sharding import (MeshContext, activate_mesh,
+                                        fsdp_pspec, logical_to_spec,
+                                        param_pspec, zero1_pspec)
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+
+
+@dataclass(frozen=True)
+class StepConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    adamw: AdamWConfig = field(default_factory=AdamWConfig)
+    accum: int = 1                    # gradient-accumulation microbatches
+    aux_weight: float = 0.01          # MoE load-balance loss weight
+    skip_nonfinite: bool = True       # NaN/Inf step -> keep old state
+    compress_grads: bool = False      # int8 DP gradient reduction
+
+
+def make_train_state(model, rng) -> Dict[str, Any]:
+    params = model.init(rng)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def train_state_shapes(model, rng=None) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree of the train state (no allocation)."""
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    return jax.eval_shape(lambda r: make_train_state(model, r), rng)
+
+
+def batch_pspec(batch_shapes, ctx: Optional[MeshContext] = None):
+    """Shard every batch leaf's leading dim over the DP axes; replicate the
+    rest. extra/src embeds additionally keep trailing dims replicated."""
+    def one(leaf):
+        axes = ["batch"] + [None] * (len(leaf.shape) - 1)
+        return logical_to_spec(axes, leaf.shape, ctx)
+    return jax.tree.map(one, batch_shapes)
+
+
+def state_pspec(state_shapes, ctx: Optional[MeshContext] = None,
+                fsdp: bool = False):
+    pfn = fsdp_pspec if fsdp else param_pspec
+    return {
+        "params": pfn(state_shapes["params"], ctx),
+        "opt": {
+            "m": zero1_pspec(state_shapes["opt"]["m"], ctx),
+            "v": zero1_pspec(state_shapes["opt"]["v"], ctx),
+            "step": P(),
+        },
+    }
+
+
+def _to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model, scfg: StepConfig = StepConfig(),
+                    mesh: Optional[Mesh] = None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        out = model.loss(params, batch)
+        if isinstance(out, tuple) and isinstance(out[1], dict):
+            loss, mets = out
+        else:
+            loss, mets = out, {}
+        return loss, mets
+
+    def grads_of(params, batch, ef=None):
+        if scfg.compress_grads and mesh is not None:
+            if ef is not None:
+                return compressed_grads(loss_fn, params, batch, mesh, ef)
+            return (*compressed_grads(loss_fn, params, batch, mesh), None)
+        return (*jax.value_and_grad(loss_fn, has_aux=True)(params, batch),
+                None)
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        ef = state.get("ef")
+        new_ef = ef
+        if scfg.accum > 1:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (loss, mets), g, _ = grads_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), mets
+            micro_batch = jax.tree.map(
+                lambda x: x.reshape((scfg.accum, x.shape[0] // scfg.accum)
+                                    + x.shape[1:]), batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), mets_all = jax.lax.scan(
+                micro, (g0, jnp.zeros((), jnp.float32)), micro_batch)
+            grads = jax.tree.map(lambda g: g / scfg.accum, grads)
+            loss = loss / scfg.accum
+            mets = jax.tree.map(lambda m: m[-1], mets_all)
+        else:
+            (loss, mets), grads, new_ef = grads_of(params, batch, ef)
+
+        lr = warmup_cosine(opt["step"], peak_lr=scfg.peak_lr,
+                           warmup_steps=scfg.warmup_steps,
+                           total_steps=scfg.total_steps)
+        new_params, new_opt, opt_mets = adamw_update(
+            grads, opt, params, lr, scfg.adamw)
+
+        if scfg.skip_nonfinite:
+            ok = jnp.isfinite(loss) & jnp.isfinite(opt_mets["grad_norm"])
+            new_params = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new_params, params)
+            new_opt = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new_opt, opt)
+            opt_mets["skipped"] = (~ok).astype(jnp.float32)
+
+        metrics = {"loss": loss, "lr": lr, **mets, **opt_mets}
+        new_state = {"params": new_params, "opt": new_opt}
+        if ef is not None:
+            new_state["ef"] = new_ef if new_ef is not None else ef
+        return new_state, metrics
+
+    return train_step
+
+
+def jit_train_step(model, scfg: StepConfig, mesh: Mesh, batch_shapes,
+                   donate: bool = True):
+    """Jitted train step with explicit in/out shardings for `mesh`."""
+    with activate_mesh(mesh) as ctx:
+        shapes = train_state_shapes(model)
+        sspec = state_pspec(shapes, ctx)
+        bspec = batch_pspec(batch_shapes, ctx)
+        step = make_train_step(model, scfg, mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(_to_shardings(sspec, mesh),
+                          _to_shardings(bspec, mesh)),
+            out_shardings=(_to_shardings(sspec, mesh), None),
+            donate_argnums=(0,) if donate else ())
+    return jitted, sspec, bspec
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+
+def cache_pspec(cache_shapes, ctx: Optional[MeshContext] = None):
+    """KV caches (NP, B, S, kv_eff, D): batch over DP, kv heads over model.
+    Mamba caches: SSD state (NP, B, H, P, S) shards heads over model; the
+    conv window (NP, B, K-1, CC) shards channels over model."""
+    def one(path, leaf):
+        ndim = len(leaf.shape)
+        names = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                         for p in path)
+        if "mamba" in names:
+            axes = ([None, "batch", "heads", None, None] if ndim == 5
+                    else [None, "batch", None, "d_inner"])
+        elif "kv_seq2" in names:          # 2d serve: seq over data+model
+            axes = [None, "batch_pod", "kv_seq2", None, None]
+        elif "kv_seq" in names:           # seq-sharded unrepeated KV
+            axes = [None, "batch", "kv_seq", None, None]
+        elif ndim == 5:                   # stacked (cross-)KV (NP,B,S,H,D)
+            axes = [None, "batch", "kv_len", "kv_heads", None]
+        else:
+            axes = [None, "batch"] + [None] * max(ndim - 2, 0)
+        axes = axes[:ndim] + [None] * (ndim - len(axes))
+        return logical_to_spec(axes, leaf.shape, ctx)
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def make_prefill_step(model) -> Callable:
+    def prefill_step(params, batch, cache):
+        kw = {}
+        if "extra_embeds" in batch:
+            kw["extra_embeds"] = batch["extra_embeds"]
+        if "src_embeds" in batch:   # enc-dec
+            return model.prefill(params, batch["src_embeds"],
+                                 batch["tokens"], cache)
+        return model.prefill(params, batch["tokens"], cache, **kw)
+    return prefill_step
+
+
+def make_decode_step(model) -> Callable:
+    def decode_step(params, token, cache, pos):
+        return model.decode_step(params, token, cache, pos)
+    return decode_step
+
+
+def serve_shardings(model, cache_shapes, mesh: Mesh):
+    with activate_mesh(mesh) as ctx:
+        pspec = param_pspec(
+            jax.eval_shape(model.init, jax.random.PRNGKey(0)), ctx)
+        cspec = cache_pspec(cache_shapes, ctx)
+    return (_to_shardings(pspec, mesh), _to_shardings(cspec, mesh))

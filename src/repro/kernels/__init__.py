@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the paper's compute hot-spots + the §Perf
+attention kernel, each with a jit'd wrapper (ops.py) and a pure-jnp oracle
+(ref.py) asserted against in tests:
+
+- trim_conv2d — the paper's TrIM dataflow on the TPU memory hierarchy
+  (single-fetch haloed input tiles, weight-stationary, VMEM psum accum).
+- trim_conv1d — TrIM-1D causal depthwise conv (the Mamba short-conv).
+- trim_matmul — the K=1 degenerate TrIM (weight-stationary blocked GEMM).
+- flash_attention — fused streaming-softmax attention (scores in VMEM),
+  the answer to the dominant roofline memory term (§Perf).
+- trim_ssd — the Mamba2 chunked SSD scan with the (CS, CS) quadratic block
+  VMEM-resident and the inter-chunk state carried in scratch (the TrIM
+  psum-buffer pattern; the mamba2 train cell's deep §Perf fix).
+"""
+from repro.kernels.ops import trim_conv1d, trim_conv2d, trim_matmul  # noqa: F401
+from repro.kernels.flash_attention import (  # noqa: F401
+    flash_attention_pallas, flash_attention_ref)
+from repro.kernels.trim_ssd import trim_ssd_pallas  # noqa: F401

@@ -1,0 +1,85 @@
+"""Public jit'd wrappers around the Pallas kernels, with CPU fallback.
+
+On TPU these call the compiled Pallas kernels; on CPU they default to the
+pure-jnp oracles (``ref.py``) for speed, or run the Pallas kernels in
+interpret mode when ``force_pallas=True`` (that is what the kernel tests do
+to validate the kernel bodies themselves).
+
+Striding for the conv path is done here by decimation of the stride-1
+result — exactly the hardware's behaviour for AlexNet CL1 (§V: full
+stride-1 sweep, downstream decimation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.trim_conv1d import trim_conv1d_pallas
+from repro.kernels.trim_conv2d import trim_conv2d_pallas
+from repro.kernels.trim_matmul import trim_matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding",
+                                             "force_pallas", "tile_h",
+                                             "block_c", "block_f", "groups"))
+def trim_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
+                padding: Optional[int] = None, force_pallas: bool = False,
+                tile_h: int = 8, block_c: int = 128, block_f: int = 128,
+                groups: int = 1) -> jax.Array:
+    """TrIM conv2d. x (N,H,W,C), w (K,K,C/groups,F) -> (N,H_O,W_O,F).
+
+    groups > 1: grouped conv — each group maps onto its own set of TrIM
+    cores (the hardware schedules groups as independent filter sets), here
+    one kernel call per group."""
+    use_pallas = _on_tpu() or force_pallas
+    if use_pallas:
+        if groups == 1:
+            out = trim_conv2d_pallas(x, w, padding=padding, tile_h=tile_h,
+                                     block_c=block_c, block_f=block_f,
+                                     interpret=not _on_tpu())
+        else:
+            cg = x.shape[-1] // groups
+            fg = w.shape[-1] // groups
+            outs = [trim_conv2d_pallas(
+                x[..., g * cg:(g + 1) * cg],
+                w[..., g * fg:(g + 1) * fg],
+                padding=padding, tile_h=tile_h, block_c=min(block_c, cg),
+                block_f=min(block_f, fg), interpret=not _on_tpu())
+                for g in range(groups)]
+            out = jnp.concatenate(outs, axis=-1)
+        if stride > 1:
+            out = out[:, ::stride, ::stride, :]
+        return out
+    return ref.conv2d_ref(x, w, stride=stride, padding=padding,
+                          groups=groups)
+
+
+@functools.partial(jax.jit, static_argnames=("force_pallas", "tile_l",
+                                             "block_d"))
+def trim_conv1d(x: jax.Array, w: jax.Array, *, force_pallas: bool = False,
+                tile_l: int = 512, block_d: int = 128) -> jax.Array:
+    """Causal depthwise conv. x (B,L,D), w (K,D) -> (B,L,D)."""
+    if _on_tpu() or force_pallas:
+        return trim_conv1d_pallas(x, w, tile_l=tile_l, block_d=block_d,
+                                  interpret=not _on_tpu())
+    return ref.conv1d_causal_ref(x, w)
+
+
+@functools.partial(jax.jit, static_argnames=("force_pallas", "block_m",
+                                             "block_n", "block_k"))
+def trim_matmul(a: jax.Array, b: jax.Array, *, force_pallas: bool = False,
+                block_m: int = 256, block_n: int = 256, block_k: int = 512,
+                ) -> jax.Array:
+    """Weight-stationary blocked matmul (the K=1 TrIM case)."""
+    if _on_tpu() or force_pallas:
+        return trim_matmul_pallas(a, b, block_m=block_m, block_n=block_n,
+                                  block_k=block_k, interpret=not _on_tpu())
+    return ref.matmul_ref(a, b)

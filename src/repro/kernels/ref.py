@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel tests assert against
+(``np.testing.assert_allclose`` over shape/dtype sweeps, plus hypothesis
+property tests). They are also the CPU fallback used by the model layers
+when the Pallas path is disabled.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1,
+               padding: Optional[int] = None,
+               acc_dtype: jnp.dtype = jnp.float32,
+               groups: int = 1) -> jax.Array:
+    """NHWC conv oracle. x (N,H,W,C), w (K,K,C/groups,F) -> (N,H_O,W_O,F).
+
+    Integer inputs accumulate exactly in int32 (the TrIM precision contract);
+    float inputs accumulate in f32. groups > 1 = grouped convolution
+    (AlexNet's two-tower CL2/CL4/CL5 — the paper's Table II M values are
+    per-group input channels).
+    """
+    K = w.shape[0]
+    p = K // 2 if padding is None else padding
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        acc_dtype = jnp.int32
+        xc = x.astype(jnp.int32)
+        wc = w.astype(jnp.int32)
+    else:
+        xc = x.astype(acc_dtype)
+        wc = w.astype(acc_dtype)
+    return lax.conv_general_dilated(
+        xc, wc, window_strides=(stride, stride),
+        padding=[(p, p), (p, p)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+        preferred_element_type=acc_dtype)
+
+
+def conv1d_causal_ref(x: jax.Array, w: jax.Array,
+                      acc_dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """Causal depthwise conv oracle (the Mamba short-conv).
+
+    x (B, L, D), w (K, D) -> (B, L, D):
+      out[b, l, d] = sum_k x[b, l - K + 1 + k, d] * w[k, d]
+    with implicit left zero padding.
+    """
+    K = w.shape[0]
+    xp = jnp.pad(x.astype(acc_dtype), ((0, 0), (K - 1, 0), (0, 0)))
+    L = x.shape[1]
+    out = jnp.zeros(x.shape, acc_dtype)
+    for k in range(K):
+        out = out + xp[:, k:k + L, :] * w[k].astype(acc_dtype)
+    return out.astype(x.dtype if jnp.issubdtype(x.dtype, jnp.floating)
+                      else acc_dtype)
+
+
+def matmul_ref(a: jax.Array, b: jax.Array,
+               acc_dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """Blocked-matmul oracle: (M,K) @ (K,N) with f32/int32 accumulation."""
+    if jnp.issubdtype(a.dtype, jnp.integer):
+        return jnp.dot(a.astype(jnp.int32), b.astype(jnp.int32),
+                       preferred_element_type=jnp.int32)
+    return jnp.dot(a, b, preferred_element_type=acc_dtype).astype(a.dtype)

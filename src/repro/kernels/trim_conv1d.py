@@ -1,0 +1,72 @@
+"""TrIM conv1d — the paper's dataflow specialized to 1-D causal depthwise
+convolution (the Mamba/Mamba2 short-conv hot spot).
+
+The triangular movement degenerates gracefully in 1-D:
+
+- the K-tap weight vector per channel is **stationary** in VMEM;
+- each input tile of TL sequence positions is fetched HBM->VMEM **once**
+  with a (K-1)-element left halo (the shift-register buffer analogue) and
+  reused K times via shifted VMEM slices;
+- there is no reduction axis (depthwise), so the accumulator lives in
+  registers within a single grid step and the output is written once.
+
+x (B, L, D), w (K, D) -> (B, L, D), causal (left) padding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _trim_conv1d_kernel(x_lo_ref, x_hi_ref, w_ref, o_ref, *, K: int, TL: int):
+    # x_hi is the CURRENT tile; x_lo is the PREVIOUS tile supplying the
+    # (K-1)-element causal halo (zero block for the first tile).
+    x_prev = x_lo_ref[0]                        # (TL, Db)
+    x_cur = x_hi_ref[0]                         # (TL, Db)
+    if K > 1:
+        x = jnp.concatenate([x_prev[TL - (K - 1):], x_cur], axis=0)
+    else:
+        x = x_cur
+    w = w_ref[...]                              # (K, Db) — stationary
+    acc = jnp.zeros(x_cur.shape, jnp.float32)
+    for k in range(K):
+        acc = acc + x[k:k + TL].astype(jnp.float32) * w[k].astype(jnp.float32)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+def trim_conv1d_pallas(x: jax.Array, w: jax.Array, *, tile_l: int = 512,
+                       block_d: int = 128, interpret: bool = False,
+                       ) -> jax.Array:
+    """Causal depthwise conv. x (B, L, D), w (K, D) -> (B, L, D)."""
+    B, L, D = x.shape
+    K, Dw = w.shape
+    assert Dw == D, (x.shape, w.shape)
+    # tile must cover the (K-1)-element halo: floor TL at K
+    TL = max(min(tile_l, L), K)
+    n_lt = -(-L // TL)
+    Db = min(block_d, D)
+    n_d = -(-D // Db)
+
+    # One extra leading zero tile supplies the causal halo of tile 0.
+    x_pad = jnp.pad(x, ((0, 0), (TL, n_lt * TL - L), (0, n_d * Db - D)))
+    w_pad = jnp.pad(w, ((0, 0), (0, n_d * Db - D)))
+
+    grid = (B, n_lt, n_d)
+    kernel = functools.partial(_trim_conv1d_kernel, K=K, TL=TL)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TL, Db), lambda b, lt, d: (b, lt, d)),      # prev
+            pl.BlockSpec((1, TL, Db), lambda b, lt, d: (b, lt + 1, d)),  # cur
+            pl.BlockSpec((K, Db), lambda b, lt, d: (0, d)),
+        ],
+        out_specs=pl.BlockSpec((1, TL, Db), lambda b, lt, d: (b, lt, d)),
+        out_shape=jax.ShapeDtypeStruct((B, n_lt * TL, n_d * Db), x.dtype),
+        interpret=interpret,
+    )(x_pad, x_pad, w_pad)
+    return out[:, :L, :D]

@@ -1,0 +1,154 @@
+"""TrIM conv2d — the paper's dataflow, realized as a Pallas TPU kernel.
+
+Mapping of the paper's triangular input movement onto the TPU memory
+hierarchy (DESIGN.md §2):
+
+- **Single-fetch inputs**: each haloed input tile (TH+K-1 rows) travels
+  HBM -> VMEM exactly once per (spatial, C_in) grid step and is then reused
+  K*K times via *shifted VMEM slices* — the horizontal + diagonal movements
+  of the paper collapse into VMEM addressing (the halo rows play the role of
+  the shift-register buffers).
+- **Weight-stationary**: the (K, K, Cb, Fb) weight block's index_map is
+  constant along the spatial grid axis, so Pallas' revolving-buffer pipeline
+  keeps it resident in VMEM while the spatial sweep runs (the paper's
+  weights loaded once, held for the whole layer).
+- **Psum accumulation**: a VMEM scratch accumulator integrates over the
+  C_in grid axis (the engine's ceil(M/P_M) temporal steps + psum buffers);
+  the output tile is written exactly once, on the last C_in step (the
+  paper's single quantized writeback).
+- **Engine broadcast**: the input tile's index_map does not depend on the
+  F (C_out) grid axis — the same fetched inputs serve all P_N "cores".
+
+The halo is expressed with plain blocked BlockSpecs by passing the input
+twice (row-block ht and ht+1) and concatenating the first K-1 rows of the
+second block — this keeps the kernel compatible with both compiled TPU
+lowering and interpret=True CPU validation.
+
+Supports float (bf16/f32 in, f32 accum) and the paper's integer mode
+(uint8 x int8 -> int32 accum). Stride 1; striding/decimation is done by the
+wrapper (``ops.trim_conv2d``), matching the hardware (§V: strided layers
+stream the stride-1 sweep and decimate downstream).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-specific memory spaces; fall back gracefully off-TPU.
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _acc_dtype(x_dtype) -> jnp.dtype:
+    return jnp.int32 if jnp.issubdtype(x_dtype, jnp.integer) else jnp.float32
+
+
+def _trim_conv2d_kernel(x_lo_ref, x_hi_ref, w_ref, o_ref, acc_ref, *,
+                        K: int, TH: int, W_O: int, n_cin: int):
+    """One grid step: TH output rows x W_O cols x Fb filters, one Cin block."""
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Assemble the haloed tile: TH + K - 1 input rows, fetched once.
+    x_lo = x_lo_ref[0]                      # (TH, W_p, Cb)
+    if K > 1:
+        x_hi = x_hi_ref[0, :K - 1]          # halo rows from the next block
+        x = jnp.concatenate([x_lo, x_hi], axis=0)
+    else:
+        x = x_lo
+    w = w_ref[...]                          # (K, K, Cb, Fb) — stationary
+    acc = acc_ref[...]
+    cb = x.shape[-1]
+    fb = w.shape[-1]
+    acc_t = acc.dtype
+    # Triangular reuse: K*K shifted views of the SAME VMEM-resident tile.
+    for kh in range(K):
+        for kw in range(K):
+            patch = x[kh:kh + TH, kw:kw + W_O, :]          # (TH, W_O, Cb)
+            tap = jnp.dot(
+                patch.reshape(TH * W_O, cb).astype(acc_t if acc_t == jnp.int32
+                                                   else patch.dtype),
+                w[kh, kw].astype(acc_t if acc_t == jnp.int32 else w.dtype),
+                preferred_element_type=acc_t)
+            acc = acc + tap.reshape(TH, W_O, fb)
+    acc_ref[...] = acc
+
+    @pl.when(ci == n_cin - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def trim_conv2d_pallas(x: jax.Array, w: jax.Array, *,
+                       tile_h: int = 8, block_c: int = 128,
+                       block_f: int = 128, padding: Optional[int] = None,
+                       out_dtype=None, interpret: bool = False) -> jax.Array:
+    """Stride-1 TrIM conv. x (N,H,W,C), w (K,K,C,F) -> (N,H_O,W_O,F).
+
+    The wrapper pads H/C/F up to tile multiples (zero padding is free w.r.t.
+    the convolution result) and slices the result back.
+    """
+    N, H, W, C = x.shape
+    K, K2, Cw, F = w.shape
+    assert K == K2 and Cw == C, (x.shape, w.shape)
+    p = K // 2 if padding is None else padding
+    acc_dtype = _acc_dtype(x.dtype)
+    if out_dtype is None:
+        out_dtype = acc_dtype if acc_dtype == jnp.int32 else x.dtype
+
+    H_p, W_p = H + 2 * p, W + 2 * p
+    H_O, W_O = H_p - K + 1, W_p - K + 1
+
+    TH = min(tile_h, H_O)
+    n_ht = -(-H_O // TH)                    # ceil
+    Cb = min(block_c, C)
+    n_ci = -(-C // Cb)
+    Fb = min(block_f, F)
+    n_f = -(-F // Fb)
+
+    # Row padding: n_ht blocks of TH output rows need n_ht*TH + K - 1 input
+    # rows; one extra TH-row block makes the ht+1 halo index always valid.
+    rows_needed = (n_ht + 1) * TH
+    x_pad = jnp.pad(x, ((0, 0), (p, rows_needed - H - p), (p, p),
+                        (0, n_ci * Cb - C)))
+    w_pad = jnp.pad(w, ((0, 0), (0, 0), (0, n_ci * Cb - C),
+                        (0, n_f * Fb - F)))
+
+    grid = (N * n_ht, n_f, n_ci)
+
+    def x_lo_idx(bt, f, c):
+        return (bt // n_ht, bt % n_ht, 0, c)
+
+    def x_hi_idx(bt, f, c):
+        return (bt // n_ht, bt % n_ht + 1, 0, c)
+
+    kernel = functools.partial(_trim_conv2d_kernel, K=K, TH=TH, W_O=W_O,
+                               n_cin=n_ci)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TH, W_p, Cb), x_lo_idx),
+            pl.BlockSpec((1, TH, W_p, Cb), x_hi_idx),
+            pl.BlockSpec((K, K, Cb, Fb), lambda bt, f, c: (0, 0, c, f)),
+        ],
+        out_specs=pl.BlockSpec((1, TH, W_O, Fb),
+                               lambda bt, f, c: (bt // n_ht, bt % n_ht, 0, f)),
+        out_shape=jax.ShapeDtypeStruct((N, n_ht * TH, W_O, n_f * Fb),
+                                       out_dtype),
+        scratch_shapes=[
+            _VMEM((TH, W_O, Fb), acc_dtype) if _VMEM is not None else
+            pltpu.VMEM((TH, W_O, Fb), acc_dtype)  # pragma: no cover
+        ],
+        interpret=interpret,
+    )(x_pad, x_pad, w_pad)
+    return out[:, :H_O, :, :F]

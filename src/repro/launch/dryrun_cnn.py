@@ -1,0 +1,107 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Bonus dry-run: the paper's own CNN workloads (VGG-16 / AlexNet) as a
+pod-scale data-parallel training step through the TrIM conv path.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_cnn --arch vgg16
+"""
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import CNN_REGISTRY
+from repro.distributed.sharding import activate_mesh
+from repro.launch.dryrun import scaled_mesh
+from repro.launch.hlo_stats import (collective_stats, hbm_bytes_estimate,
+                                    total_collective_bytes)
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.nn.conv import cnn_loss, init_cnn
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.core.trim.model import layer_ops
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="vgg16", choices=sorted(CNN_REGISTRY))
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cfg = CNN_REGISTRY[args.arch]
+    mesh = scaled_mesh(args.multi_pod)
+    chips = mesh.size
+
+    def train_step(state, batch):
+        params, opt = state
+        (loss, mets), g = jax.value_and_grad(
+            lambda p: cnn_loss(p, batch, cfg), has_aux=True)(params)
+        params, opt, _ = adamw_update(g, opt, params, 1e-3, AdamWConfig())
+        return (params, opt), loss
+
+    pshapes = jax.eval_shape(lambda k: init_cnn(k, cfg),
+                             jax.random.PRNGKey(0))
+    oshapes = jax.eval_shape(adamw_init, pshapes)
+    H, W = cfg.input_hw
+    batch = {
+        "images": jax.ShapeDtypeStruct(
+            (args.batch, H, W, cfg.layers[0].M), jnp.float32),
+        "labels": jax.ShapeDtypeStruct((args.batch,), jnp.int32)}
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    rep = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                       (pshapes, oshapes))
+    bsh = {"images": NamedSharding(mesh, P(dp)),
+           "labels": NamedSharding(mesh, P(dp))}
+
+    t0 = time.time()
+    with activate_mesh(mesh), mesh:
+        compiled = jax.jit(train_step, in_shardings=(rep, bsh),
+                           out_shardings=(rep, None)).lower(
+            (pshapes, oshapes), batch).compile()
+    hlo = compiled.as_text()
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = total_collective_bytes(hlo)
+    conv_flops = 3 * sum(layer_ops(l) for l in cfg.layers) * args.batch
+    rec = {
+        "arch": args.arch, "shape": f"train_{H}x{W}_b{args.batch}",
+        "kind": "train", "chips": chips,
+        "mesh": {ax: int(mesh.shape[ax]) for ax in mesh.axis_names},
+        "compile_s": round(time.time() - t0, 1),
+        "memory": hbm_bytes_estimate(compiled.memory_analysis()),
+        "cost": {"flops": flops, "bytes accessed": byts},
+        "collectives": collective_stats(hlo),
+        "collective_bytes": coll,
+        "roofline": {
+            "compute_s": flops / PEAK_FLOPS_BF16,
+            "memory_s": byts / HBM_BW,
+            "collective_s": coll / ICI_BW,
+            "model_flops_total": conv_flops,
+            "useful_flops_ratio": (conv_flops / chips) / flops
+            if flops else 0.0,
+        },
+    }
+    os.makedirs(args.out, exist_ok=True)
+    tag = f"{args.arch}__cnn_train__{'multi' if args.multi_pod else 'single'}"
+    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    r = rec["roofline"]
+    print(f"[dryrun_cnn] {tag}: compile {rec['compile_s']}s  "
+          f"compute {r['compute_s']*1e3:.1f}ms  memory "
+          f"{r['memory_s']*1e3:.1f}ms  collective "
+          f"{r['collective_s']*1e3:.1f}ms  useful "
+          f"{r['useful_flops_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Serving launcher: batched prefill + greedy decode loop.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.distributed import activate_mesh
+from repro.distributed.steps import (_to_shardings, cache_pspec,
+                                     make_decode_step, make_prefill_step)
+from repro.distributed.sharding import param_pspec
+from repro.launch.mesh import make_host_mesh
+from repro.nn.models import build_model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--tp", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh(model=args.tp)
+    model = build_model(cfg, tp=int(mesh.shape["model"]))
+    max_len = args.prompt_len + args.gen
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
+
+    with activate_mesh(mesh) as ctx, mesh:
+        params = model.init(jax.random.PRNGKey(0))
+        if cfg.family == "encdec":
+            src = jnp.asarray(rng.normal(
+                size=(args.batch, args.prompt_len, cfg.d_model)), cfg.dtype)
+            cache = model.init_cache(args.batch, max_len,
+                                     cross_len=args.prompt_len,
+                                     dtype=cfg.dtype)
+            bos = jnp.zeros((args.batch, 1), jnp.int32)
+            logits, cache = jax.jit(model.prefill)(params, src, bos, cache)
+            pos0 = 1
+        else:
+            cache = model.init_cache(args.batch, max_len, dtype=cfg.dtype)
+            prefill = jax.jit(make_prefill_step(model))
+            logits, cache = prefill(params,
+                                    {"tokens": jnp.asarray(prompts)}, cache)
+            pos0 = args.prompt_len
+
+        decode = jax.jit(make_decode_step(model))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out_tokens = [tok]
+        t0 = time.perf_counter()
+        for i in range(args.gen - 1):
+            logits, cache = decode(params, tok, cache,
+                                   jnp.int32(pos0 + i))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out_tokens.append(tok)
+        jax.block_until_ready(tok)
+        dt = time.perf_counter() - t0
+    gen = np.stack([np.asarray(t) for t in out_tokens], 1)
+    tps = args.batch * (args.gen - 1) / max(dt, 1e-9)
+    print(f"[serve] generated {gen.shape} tokens; "
+          f"{tps:.1f} tok/s (host-CPU decode, batch {args.batch})")
+    print("[serve] sample:", gen[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

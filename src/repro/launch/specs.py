@@ -1,0 +1,127 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+No device allocation anywhere — everything is eval_shape / ShapeDtypeStruct,
+weak-type-correct and shardable, which is what lets the 512-device dry-run
+lower full-size llama4/arctic/mistral-large graphs on a CPU host.
+
+Shape-cell semantics (DESIGN.md §5):
+- train_4k:    tokens (gb, S+1) — the step processes exactly S positions.
+- prefill_32k: serve prefill over S tokens writing the KV/SSM caches.
+- decode_32k:  ONE new token against caches of length S (lowers serve_step,
+  not train_step). long_500k likewise at S=524288 (subquadratic archs only).
+- vlm: text tokens are S - frontend_tokens; patch embeddings supplied.
+- encdec: train splits S as S/2 source frames + S/2 target tokens; prefill
+  encodes S source frames and primes the decoder; decode uses a fixed
+  4096-frame cross-KV and an S-long self-KV.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+
+SDS = jax.ShapeDtypeStruct
+
+ENCDEC_DECODE_SRC = 4_096       # source frames for enc-dec decode cells
+ENCDEC_PREFILL_TGT_BUF = 1_024  # decoder self-cache length at prefill
+
+
+def train_batch_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    gb, S = cell.global_batch, cell.seq_len
+    if cfg.family == "encdec":
+        return {"src_embeds": SDS((gb, S // 2, cfg.d_model), cfg.dtype),
+                "tokens": SDS((gb, S // 2 + 1), jnp.int32)}
+    batch: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        n_img = cfg.frontend_tokens
+        batch["extra_embeds"] = SDS((gb, n_img, cfg.d_model), cfg.dtype)
+        batch["tokens"] = SDS((gb, S - n_img + 1), jnp.int32)
+    else:
+        batch["tokens"] = SDS((gb, S + 1), jnp.int32)
+    return batch
+
+
+def prefill_specs(cfg: ModelConfig, model, cell: ShapeCell,
+                  ) -> Tuple[Dict[str, Any], Any]:
+    """Returns (batch specs, cache specs)."""
+    gb, S = cell.global_batch, cell.seq_len
+    if cfg.family == "encdec":
+        batch = {"src_embeds": SDS((gb, S, cfg.d_model), cfg.dtype),
+                 "tokens": SDS((gb, 1), jnp.int32)}
+        cache = jax.eval_shape(
+            lambda: model.init_cache(gb, ENCDEC_PREFILL_TGT_BUF,
+                                     cross_len=S, dtype=jnp.bfloat16))
+        return batch, cache
+    batch = {}
+    if cfg.family == "vlm":
+        n_img = cfg.frontend_tokens
+        batch["extra_embeds"] = SDS((gb, n_img, cfg.d_model), cfg.dtype)
+        batch["tokens"] = SDS((gb, S - n_img), jnp.int32)
+    else:
+        batch["tokens"] = SDS((gb, S), jnp.int32)
+    cache = jax.eval_shape(
+        lambda: model.init_cache(gb, S, dtype=jnp.bfloat16))
+    return batch, cache
+
+
+def decode_specs(cfg: ModelConfig, model, cell: ShapeCell,
+                 ) -> Tuple[Dict[str, Any], Any]:
+    """Returns ({token, pos}, cache specs) for one-token decode."""
+    gb, S = cell.global_batch, cell.seq_len
+    if cfg.family == "encdec":
+        cache = jax.eval_shape(
+            lambda: model.init_cache(gb, S, cross_len=ENCDEC_DECODE_SRC,
+                                     dtype=jnp.bfloat16))
+    else:
+        cache = jax.eval_shape(
+            lambda: model.init_cache(gb, S, dtype=jnp.bfloat16))
+    batch = {"token": SDS((gb,), jnp.int32),
+             "pos": SDS((), jnp.int32)}
+    return batch, cache
+
+
+def input_specs(cfg: ModelConfig, model, cell: ShapeCell):
+    """Dispatch on the cell kind. Returns whatever the matching step
+    builder consumes (documented per-kind above)."""
+    if cell.kind == "train":
+        return train_batch_specs(cfg, cell)
+    if cell.kind == "prefill":
+        return prefill_specs(cfg, model, cell)
+    if cell.kind == "decode":
+        return decode_specs(cfg, model, cell)
+    raise ValueError(cell.kind)
+
+
+def model_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """MODEL_FLOPS for the roofline usefulness ratio: 6*N_active*D for a
+    train step, 2*N_active*D for serve (D = tokens processed).
+
+    enc-dec is split per stack: the encoder's params only see the source
+    tokens and the decoder's only the target tokens (train splits the cell
+    S/2+S/2; prefill runs S source frames + 1 target token)."""
+    gb, S = cell.global_batch, cell.seq_len
+    if cfg.family == "encdec":
+        d = cfg.d_model
+        attn = d * (cfg.n_q + 2 * cfg.n_kv) * cfg.head_dim \
+            + cfg.n_q * cfg.head_dim * d
+        width = 3 if cfg.mlp_kind in ("swiglu", "geglu") else 2
+        mlp = width * d * cfg.d_ff
+        enc_p = cfg.n_enc_layers * (attn + mlp)
+        dec_p = cfg.n_layers * (2 * attn + mlp)   # self + cross attention
+        emb = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+        mult = 6.0 if cell.kind == "train" else 2.0
+        if cell.kind == "train":
+            return mult * gb * (S // 2 * enc_p + S // 2 * (dec_p + emb))
+        if cell.kind == "prefill":
+            return mult * gb * (S * enc_p + 1 * (dec_p + emb))
+        return mult * gb * (dec_p + emb)
+    n_active = cfg.active_param_count_estimate()
+    if cell.kind == "train":
+        return 6.0 * n_active * gb * S
+    if cell.kind == "prefill":
+        return 2.0 * n_active * gb * S
+    # decode: one token per sequence
+    return 2.0 * n_active * gb

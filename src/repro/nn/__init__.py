@@ -1,0 +1,1 @@
+"""Model substrate: pure-JAX functional layers (pytree params, no flax)."""

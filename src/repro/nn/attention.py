@@ -1,0 +1,295 @@
+"""Attention: GQA/MQA/MHA with chunked-flash training/prefill, KV-cached
+decode, cross-attention (enc-dec), RoPE, and TP-friendly head layout.
+
+TP head layout (``attn_layout``): on a `tp`-way model axis, kv heads are
+*repeated* r = tp/n_kv times (the vLLM/TGI approach to TP > n_kv) and q
+heads are zero-padded group-wise from G = n_q/n_kv to G_pad = ceil(G/r)*r,
+giving an effective (kv_eff = n_kv*r) x (G' = G_pad/r) grouping in which
+head<->kv correspondence is preserved *and* both q and kv head axes divide
+the model axis. Padded q heads produce garbage that is sliced off before
+o_proj (zero extra projection FLOPs; the attention-FLOP overhead shows up
+honestly in the roofline useful-compute ratio).
+
+The chunked flash attention is a pure-JAX streaming softmax (lax.scan over
+KV chunks with running (m, l, o)), differentiable and SPMD-partitionable;
+``block_causal=True`` switches to a q-block x kv-block sweep that skips
+fully-masked upper-triangle blocks (a §Perf hillclimb lever).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.nn.layers import Params, apply_rope, dense, init_dense, rope_angles
+
+NEG_INF = -1e30
+
+
+class AttnLayout(NamedTuple):
+    n_q: int          # logical q heads
+    n_kv: int         # logical kv heads
+    head_dim: int
+    kv_repeat: int    # r
+    g_pad: int        # padded group size (q heads per logical kv head)
+
+    @property
+    def kv_eff(self) -> int:
+        return self.n_kv * self.kv_repeat
+
+    @property
+    def g_eff(self) -> int:
+        return self.g_pad // self.kv_repeat
+
+    @property
+    def n_q_pad(self) -> int:
+        return self.n_kv * self.g_pad
+
+
+def attn_layout(n_q: int, n_kv: int, head_dim: int, tp: int = 1) -> AttnLayout:
+    assert n_q % n_kv == 0, (n_q, n_kv)
+    g = n_q // n_kv
+    r = tp // n_kv if (tp > n_kv and tp % n_kv == 0) else 1
+    g_pad = -(-g // r) * r    # r divides g_pad by construction
+    return AttnLayout(n_q, n_kv, head_dim, r, g_pad)
+
+
+# -- params -------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_q: int, n_kv: int, head_dim: int,
+                   dtype=jnp.float32) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "q_proj": init_dense(kq, d_model, n_q * head_dim, dtype=dtype),
+        "k_proj": init_dense(kk, d_model, n_kv * head_dim, dtype=dtype),
+        "v_proj": init_dense(kv, d_model, n_kv * head_dim, dtype=dtype),
+        "o_proj": init_dense(ko, n_q * head_dim, d_model,
+                             std=(n_q * head_dim) ** -0.5, dtype=dtype),
+    }
+
+
+# -- flash core ----------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool, q_offset: int = 0,
+                    kv_length: Optional[jax.Array] = None,
+                    chunk_k: int = 1024, block_causal: bool = False,
+                    ) -> jax.Array:
+    """Streaming-softmax attention.
+
+    q (B, Sq, H_eff, G, D); k/v (B, Sk, H_eff, D). Returns (B, Sq, H_eff, G, D).
+    H_eff is the (possibly repeated) kv head count; G the q group per head.
+    """
+    B, Sq, H, G, D = q.shape
+    Sk = k.shape[1]
+    scale = D ** -0.5
+    ck = min(chunk_k, Sk)
+    nk = -(-Sk // ck)
+    pad_k = nk * ck - Sk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    qT = q.transpose(0, 2, 3, 1, 4).astype(jnp.float32)      # (B,H,G,Sq,D)
+    kc = k.reshape(B, nk, ck, H, D).transpose(1, 0, 3, 2, 4)  # (nk,B,H,ck,D)
+    vc = v.reshape(B, nk, ck, H, D).transpose(1, 0, 3, 2, 4)
+
+    rows = q_offset + jnp.arange(Sq)
+
+    def chunk_step(carry, xs):
+        m, l, o = carry
+        kci, vci, idx = xs
+        s = jnp.einsum("bhgqd,bhcd->bhgqc", qT, kci.astype(jnp.float32))
+        s = s * scale
+        cols = idx * ck + jnp.arange(ck)
+        mask = jnp.ones((Sq, ck), bool)
+        if causal:
+            mask &= cols[None, :] <= rows[:, None]
+        mask &= (cols < Sk)[None, :]
+        if kv_length is not None:
+            mask = mask[None] & (cols[None, None, :]
+                                 < kv_length[:, None, None])
+            mask = mask[:, None, None]                       # (B,1,1,Sq,ck)
+        else:
+            mask = mask[None, None, None]                    # (1,1,1,Sq,ck)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bhgqc,bhcd->bhgqd", p, vci.astype(jnp.float32))
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, H, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, G, Sq), jnp.float32)
+    o0 = jnp.zeros((B, H, G, Sq, D), jnp.float32)
+
+    if block_causal and causal and Sq > 1:
+        # q-block sweep: block i only scans kv chunks [0, hi_i] — skips the
+        # fully-masked upper triangle (~2x less attention compute).
+        bq = ck
+        nq = -(-Sq // bq)
+        outs = []
+        for qi in range(nq):
+            lo, hi = qi * bq, min((qi + 1) * bq, Sq)
+            hi_chunk = min(nk, (q_offset + hi + ck - 1) // ck)
+            sub_q = q[:, lo:hi]
+            out = flash_attention(sub_q, k[:, :hi_chunk * ck],
+                                  v[:, :hi_chunk * ck], causal=True,
+                                  q_offset=q_offset + lo,
+                                  kv_length=kv_length, chunk_k=ck,
+                                  block_causal=False)
+            outs.append(out)
+        return jnp.concatenate(outs, axis=1)
+
+    idxs = jnp.arange(nk)
+    (m, l, o), _ = jax.lax.scan(chunk_step, (m0, l0, o0), (kc, vc, idxs))
+    out = o / jnp.maximum(l, 1e-20)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)      # (B,Sq,H,G,D)
+
+
+# -- full layer ----------------------------------------------------------------
+
+def _split_heads(x: jax.Array, n: int, d: int) -> jax.Array:
+    return x.reshape(x.shape[:-1] + (n, d))
+
+
+def _layout_q(q: jax.Array, lay: AttnLayout) -> jax.Array:
+    """(B,S,n_q,D) -> (B,S,kv_eff,G',D) with group-preserving padding."""
+    B, S, _, D = q.shape
+    g = lay.n_q // lay.n_kv
+    q = q.reshape(B, S, lay.n_kv, g, D)
+    if lay.g_pad != g:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, lay.g_pad - g), (0, 0)))
+    q = q.reshape(B, S, lay.n_kv, lay.kv_repeat, lay.g_eff, D)
+    return q.reshape(B, S, lay.kv_eff, lay.g_eff, D)
+
+
+def _unlayout_o(o: jax.Array, lay: AttnLayout) -> jax.Array:
+    """(B,S,kv_eff,G',D) -> (B,S,n_q*D), dropping padded heads."""
+    B, S = o.shape[:2]
+    g = lay.n_q // lay.n_kv
+    o = o.reshape(B, S, lay.n_kv, lay.g_pad, o.shape[-1])
+    o = o[:, :, :, :g]
+    return o.reshape(B, S, lay.n_q * o.shape[-1])
+
+
+def _repeat_kv(kv: jax.Array, r: int) -> jax.Array:
+    if r == 1:
+        return kv
+    return jnp.repeat(kv, r, axis=2)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # (B, S_max, kv_eff, D) — or (B, S_max, n_kv, D)
+    v: jax.Array      # when sequence-sharded (unrepeated heads)
+
+
+def init_kv_cache(batch: int, max_len: int, lay: AttnLayout,
+                  dtype=jnp.bfloat16, seqshard: bool = False) -> KVCache:
+    heads = lay.n_kv if seqshard else lay.kv_eff
+    shape = (batch, max_len, heads, lay.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attention(params: Params, x: jax.Array, lay: AttnLayout, *,
+              positions: jax.Array, rope_theta: float = 10000.0,
+              causal: bool = True, mode: str = "train",
+              cache: Optional[KVCache] = None,
+              cache_pos: Optional[jax.Array] = None,
+              kv_length: Optional[jax.Array] = None,
+              cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+              chunk_k: int = 1024, block_causal: bool = False,
+              kv_seqshard: bool = False,
+              ) -> Tuple[jax.Array, Optional[KVCache]]:
+    """Self- or cross-attention over x (B, S, d_model).
+
+    mode: "train"/"encoder" (no cache), "prefill" (writes cache),
+    "decode" (S==1, reads+writes cache at cache_pos).
+    kv_seqshard: serve caches hold UNREPEATED kv heads with the sequence
+    axis sharded over the model axis (shard_map flash decode + logsumexp
+    merge) instead of repeated heads sharded over model — 1/kv_repeat the
+    cache HBM (see nn.decode_attn).
+    Returns (out (B,S,d_model), new_cache_or_None).
+    """
+    B, S, _ = x.shape
+    D = lay.head_dim
+    q = _split_heads(dense(params["q_proj"], x), lay.n_q, D)
+    q = shard(q, "batch", "seq", "heads", None)
+    if cross_kv is None:
+        k_raw = _split_heads(dense(params["k_proj"], x), lay.n_kv, D)
+        v_raw = _split_heads(dense(params["v_proj"], x), lay.n_kv, D)
+        cos, sin = rope_angles(positions, D, rope_theta)
+        q = apply_rope(q, cos, sin)
+        k_raw = apply_rope(k_raw, cos, sin)
+        k = _repeat_kv(k_raw, lay.kv_repeat)
+        v = _repeat_kv(v_raw, lay.kv_repeat)
+    else:
+        k, v = cross_kv                                 # already laid out
+        k_raw = v_raw = None
+
+    seqshard_mode = ("model" if kv_seqshard is True else kv_seqshard) or ""
+    new_cache = None
+    if mode == "decode" and seqshard_mode:
+        from repro.nn.decode_attn import seqshard_flash_decode
+        assert cache is not None and cache_pos is not None
+        axes = (("data", "model") if seqshard_mode == "2d"
+                else ("model",))
+        o_full, k_cache, v_cache = seqshard_flash_decode(
+            q, cache.k, cache.v, k_raw, v_raw, cache_pos,
+            kv_length=kv_length, axes=axes)
+        new_cache = KVCache(k_cache, v_cache)
+        out = dense(params["o_proj"], o_full.reshape(B, S, lay.n_q * D))
+        return shard(out, "batch", "seq", "embed"), new_cache
+    if mode == "decode":
+        assert cache is not None and cache_pos is not None
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), cache_pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), cache_pos, axis=1)
+        new_cache = KVCache(k_cache, v_cache)
+        k_cache = shard(k_cache, "batch", "kv_len", "kv_heads", None)
+        v_cache = shard(v_cache, "batch", "kv_len", "kv_heads", None)
+        qL = _layout_q(q, lay)
+        length = (kv_length if kv_length is not None
+                  else jnp.full((B,), cache_pos + 1, jnp.int32))
+        o = flash_attention(qL, k_cache, v_cache, causal=False,
+                            kv_length=length, chunk_k=chunk_k)
+    else:
+        if mode == "prefill" and cross_kv is None:
+            assert cache is not None
+            k_w, v_w = (k_raw, v_raw) if seqshard_mode else (k, v)
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k_w.astype(cache.k.dtype), 0, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v_w.astype(cache.v.dtype), 0, axis=1)
+            new_cache = KVCache(k_cache, v_cache)
+            if seqshard_mode:
+                seq_ax = "kv_seq2" if seqshard_mode == "2d" else "kv_seq"
+                new_cache = KVCache(
+                    shard(new_cache.k, "batch", seq_ax, None, None),
+                    shard(new_cache.v, "batch", seq_ax, None, None))
+        k = shard(k, "batch", "seq", "kv_heads", None)
+        v = shard(v, "batch", "seq", "kv_heads", None)
+        qL = _layout_q(q, lay)
+        o = flash_attention(qL, k, v, causal=causal and cross_kv is None,
+                            kv_length=kv_length, chunk_k=chunk_k,
+                            block_causal=block_causal)
+    o = _unlayout_o(o, lay)
+    o = shard(o, "batch", "seq", "qkv_dim")
+    out = dense(params["o_proj"], o)
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+def make_cross_kv(params: Params, enc_out: jax.Array, lay: AttnLayout,
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Precompute (and layout) encoder K/V for decoder cross-attention."""
+    D = lay.head_dim
+    k = _split_heads(dense(params["k_proj"], enc_out), lay.n_kv, D)
+    v = _split_heads(dense(params["v_proj"], enc_out), lay.n_kv, D)
+    return _repeat_kv(k, lay.kv_repeat), _repeat_kv(v, lay.kv_repeat)

@@ -1,0 +1,296 @@
+"""Layer stacks: periodic layer schedules + scan-over-layers execution.
+
+Every assigned architecture is expressible as a *periodic* schedule of slots
+(mixer, ffn) repeated n_layers/period times:
+
+- dense transformers:      period 1, (attn, mlp)
+- llama4 (interleaved MoE): period 2, (attn, mlp), (attn, moe)
+- arctic (MoE+dense-res):  period 1, (attn, moe[dense_residual])
+- mamba2:                  period 1, (mamba, none)
+- jamba (1:7 attn:mamba, MoE on odd layers): period 8,
+    slots i=0..7 -> mixer = attn if i==4 else mamba; ffn = moe if i odd else mlp
+- seamless encoder:        period 1, (attn[non-causal], mlp)
+- seamless decoder:        period 1, (attn + cross-attn, mlp)
+
+Parameters for each slot are stacked over periods on a leading axis and the
+stack is executed with ``lax.scan`` (fast compiles, small HLO — essential for
+the 512-device dry-run), optionally under ``jax.checkpoint`` (remat).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import (AttnLayout, KVCache, attention,
+                                init_attention, init_kv_cache, make_cross_kv)
+from repro.nn.layers import (Params, init_layernorm, init_mlp, init_rmsnorm,
+                             layernorm, mlp, rmsnorm)
+from repro.nn.mamba import (MambaCache, MambaDims, init_mamba,
+                            init_mamba_cache, mamba_mixer)
+from repro.nn.moe import init_moe, moe
+
+
+@dataclass(frozen=True)
+class SlotSpec:
+    mixer: str                 # "attn" | "mamba" | "none"
+    ffn: str                   # "mlp" | "moe" | "none"
+    cross_attn: bool = False   # decoder slot with encoder cross-attention
+
+
+@dataclass(frozen=True)
+class StackSpec:
+    slots: Tuple[SlotSpec, ...]
+    n_periods: int
+    d_model: int
+    d_ff: int
+    mlp_kind: str = "swiglu"
+    norm: str = "rmsnorm"
+    layout: Optional[AttnLayout] = None
+    rope_theta: float = 1e4
+    causal: bool = True
+    dims: Optional[MambaDims] = None         # mamba dims (ssm/hybrid)
+    n_experts: int = 0
+    top_k: int = 0
+    shared_expert: bool = False
+    dense_residual: bool = False
+    dense_ff: Optional[int] = None
+    capacity_factor: float = 1.25
+    moe_impl: str = "einsum"                 # einsum | gather
+    remat: str = "none"                      # none | dots | full
+    chunk_k: int = 1024
+    block_causal: bool = False
+    scan_layers: bool = True                 # False: unroll (cost calib.)
+    kv_seqshard: str = ""                    # "" | "model" | "2d"
+    ssd_bf16: bool = False                   # bf16 SSD quadratic term
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.slots) * self.n_periods
+
+
+def _norm_fns(kind: str):
+    if kind == "rmsnorm":
+        return init_rmsnorm, rmsnorm
+    if kind == "layernorm":
+        return init_layernorm, layernorm
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_slot(key, spec: StackSpec, slot: SlotSpec, dtype) -> Params:
+    init_norm, _ = _norm_fns(spec.norm)
+    keys = jax.random.split(key, 4)
+    p: Params = {}
+    if slot.mixer == "attn":
+        lay = spec.layout
+        p["norm_mixer"] = init_norm(spec.d_model, dtype)
+        p["attn"] = init_attention(keys[0], spec.d_model, lay.n_q, lay.n_kv,
+                                   lay.head_dim, dtype)
+        if slot.cross_attn:
+            p["norm_cross"] = init_norm(spec.d_model, dtype)
+            p["cross"] = init_attention(keys[3], spec.d_model, lay.n_q,
+                                        lay.n_kv, lay.head_dim, dtype)
+    elif slot.mixer == "mamba":
+        p["norm_mixer"] = init_norm(spec.d_model, dtype)
+        p["mamba"] = init_mamba(keys[0], spec.dims, dtype)
+    if slot.ffn == "mlp":
+        p["norm_ffn"] = init_norm(spec.d_model, dtype)
+        p["mlp"] = init_mlp(keys[1], spec.d_model, spec.d_ff, spec.mlp_kind,
+                            dtype)
+    elif slot.ffn == "moe":
+        p["norm_ffn"] = init_norm(spec.d_model, dtype)
+        p["moe"] = init_moe(keys[2], spec.d_model, spec.d_ff, spec.n_experts,
+                            mlp_kind=spec.mlp_kind,
+                            shared_expert=spec.shared_expert,
+                            dense_residual=spec.dense_residual,
+                            dense_ff=spec.dense_ff, dtype=dtype)
+    return p
+
+
+def init_stack(key, spec: StackSpec, dtype=jnp.float32) -> Params:
+    """Stacked params: {"slot<i>": pytree with leading n_periods axis}."""
+    out: Params = {}
+    for i, slot in enumerate(spec.slots):
+        keys = jax.random.split(jax.random.fold_in(key, i), spec.n_periods)
+        per = [_init_slot(k, spec, slot, dtype) for k in keys]
+        out[f"slot{i}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+    return out
+
+
+def init_stack_cache(spec: StackSpec, batch: int, max_len: int,
+                     dtype=jnp.bfloat16, cross_len: int = 0) -> Params:
+    """Decode caches, stacked over periods per slot. Slots without state get
+    empty dicts (keeps the treedef static)."""
+    cache: Params = {}
+    for i, slot in enumerate(spec.slots):
+        if slot.mixer == "attn":
+            kv = init_kv_cache(batch, max_len, spec.layout, dtype,
+                               seqshard=bool(spec.kv_seqshard))
+            key = ("kv" if not spec.kv_seqshard else
+                   "kv_seq2" if spec.kv_seqshard == "2d" else "kv_seq")
+            c: Dict[str, Any] = {key: KVCache(
+                jnp.broadcast_to(kv.k, (spec.n_periods,) + kv.k.shape),
+                jnp.broadcast_to(kv.v, (spec.n_periods,) + kv.v.shape))}
+            if slot.cross_attn:
+                lay = spec.layout
+                shape = (spec.n_periods, batch, cross_len, lay.kv_eff,
+                         lay.head_dim)
+                c["cross_kv"] = (jnp.zeros(shape, dtype),
+                                 jnp.zeros(shape, dtype))
+            cache[f"slot{i}"] = c
+        elif slot.mixer == "mamba":
+            mc = init_mamba_cache(batch, spec.dims, dtype)
+            cache[f"slot{i}"] = {"mamba": MambaCache(
+                jnp.broadcast_to(mc.conv, (spec.n_periods,) + mc.conv.shape),
+                jnp.broadcast_to(mc.ssm, (spec.n_periods,) + mc.ssm.shape))}
+        else:
+            cache[f"slot{i}"] = {}
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+
+
+def _run_slot(p: Params, x: jax.Array, spec: StackSpec, slot: SlotSpec, *,
+              mode: str, positions, cache_pos, kv_length,
+              cache: Optional[Dict[str, Any]],
+              enc_out: Optional[jax.Array],
+              ) -> Tuple[jax.Array, Dict[str, Any], jax.Array]:
+    _, norm = _norm_fns(spec.norm)
+    new_cache: Dict[str, Any] = {}
+    aux = jnp.zeros((), jnp.float32)
+    if slot.mixer == "attn":
+        kv_key = ("kv" if not spec.kv_seqshard else
+                  "kv_seq2" if spec.kv_seqshard == "2d" else "kv_seq")
+        kv = cache.get(kv_key) if cache else None
+        h, nkv = attention(p["attn"], norm(p["norm_mixer"], x), spec.layout,
+                           positions=positions, rope_theta=spec.rope_theta,
+                           causal=spec.causal, mode=mode, cache=kv,
+                           cache_pos=cache_pos, kv_length=kv_length,
+                           chunk_k=spec.chunk_k,
+                           block_causal=spec.block_causal,
+                           kv_seqshard=spec.kv_seqshard)
+        x = x + h
+        if nkv is not None:
+            new_cache[kv_key] = nkv
+        elif cache and kv_key in cache:
+            new_cache[kv_key] = cache[kv_key]
+        if slot.cross_attn:
+            if cache is not None and "cross_kv" in cache and enc_out is None:
+                ckv = cache["cross_kv"]
+            else:
+                ckv = make_cross_kv(p["cross"], enc_out, spec.layout)
+            h, _ = attention(p["cross"], norm(p["norm_cross"], x),
+                             spec.layout, positions=positions,
+                             mode="train", causal=False, cross_kv=ckv,
+                             chunk_k=spec.chunk_k)
+            x = x + h
+            if cache is not None:
+                new_cache["cross_kv"] = ckv
+    elif slot.mixer == "mamba":
+        mc = cache.get("mamba") if cache else None
+        h, nmc = mamba_mixer(p["mamba"], norm(p["norm_mixer"], x), spec.dims,
+                             mode=mode, cache=mc,
+                             score_dtype=jnp.bfloat16 if spec.ssd_bf16
+                             else jnp.float32)
+        x = x + h
+        if nmc is not None:
+            new_cache["mamba"] = nmc
+        elif cache and "mamba" in cache:
+            new_cache["mamba"] = cache["mamba"]
+    if slot.ffn == "mlp":
+        x = x + mlp(p["mlp"], norm(p["norm_ffn"], x), spec.mlp_kind)
+    elif slot.ffn == "moe":
+        h, a = moe(p["moe"], norm(p["norm_ffn"], x), top_k=spec.top_k,
+                   mlp_kind=spec.mlp_kind,
+                   capacity_factor=spec.capacity_factor,
+                   impl=spec.moe_impl)
+        x = x + h
+        aux = aux + a
+    return x, new_cache, aux
+
+
+def run_stack(params: Params, x: jax.Array, spec: StackSpec, *,
+              mode: str = "train", positions: Optional[jax.Array] = None,
+              cache: Optional[Params] = None,
+              cache_pos: Optional[jax.Array] = None,
+              kv_length: Optional[jax.Array] = None,
+              enc_out: Optional[jax.Array] = None,
+              ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Run the full stack. Returns (x, new_cache_or_None, moe_aux_sum).
+
+    mode: "train" | "encoder" (no cache), "prefill", "decode".
+    """
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                     x.shape[:2])
+    has_cache = cache is not None
+
+    def period_fn(x, slot_params, slot_cache):
+        new_caches = {}
+        aux = jnp.zeros((), jnp.float32)
+        for i, slot in enumerate(spec.slots):
+            x, nc, a = _run_slot(
+                slot_params[f"slot{i}"], x, spec, slot, mode=mode,
+                positions=positions, cache_pos=cache_pos,
+                kv_length=kv_length,
+                cache=slot_cache[f"slot{i}"] if has_cache else None,
+                enc_out=enc_out)
+            new_caches[f"slot{i}"] = nc
+            aux = aux + a
+        return x, new_caches, aux
+
+    if spec.remat == "full":
+        period_fn = jax.checkpoint(
+            period_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    elif spec.remat == "dots":
+        period_fn = jax.checkpoint(
+            period_fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    def scan_body(carry, xs):
+        x, aux = carry
+        slot_params, slot_cache = xs
+        x, new_cache, a = period_fn(x, slot_params, slot_cache)
+        return (x, aux + a), new_cache
+
+    if not spec.scan_layers:
+        # unrolled execution: identical math, python loop over periods.
+        # Used by the dry-run's cost calibration (XLA cost_analysis counts
+        # a while body once; unrolled small variants give exact per-period
+        # costs) and available as a compile-time/runtime trade-off.
+        aux = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for i in range(spec.n_periods):
+            p_i = jax.tree.map(lambda p: p[i], params)
+            c_i = (jax.tree.map(lambda c: c[i], cache) if has_cache
+                   else {f"slot{j}": {} for j in range(len(spec.slots))})
+            x, nc, a = period_fn(x, p_i, c_i)
+            aux = aux + a
+            new_caches.append(nc)
+        if not has_cache:
+            return x, None, aux
+        new_cache = jax.tree.map(lambda *cs: jnp.stack(cs), *new_caches)
+        return x, new_cache, aux
+
+    if not has_cache:
+        # stateless run: empty per-slot caches (same dict every period)
+        empty = {f"slot{i}": {} for i in range(len(spec.slots))}
+        (x, aux), _ = jax.lax.scan(
+            lambda c, p: scan_body(c, (p, empty)),
+            (x, jnp.zeros((), jnp.float32)), params)
+        return x, None, aux
+
+    (x, aux), new_cache = jax.lax.scan(
+        scan_body, (x, jnp.zeros((), jnp.float32)), (params, cache))
+    return x, new_cache, aux

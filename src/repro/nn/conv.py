@@ -1,0 +1,161 @@
+"""CNN path — the paper's own workload (VGG-16 / AlexNet) built on the TrIM
+conv kernels.
+
+Float mode (training + inference): NHWC convs through ``ops.trim_conv2d``
+(Pallas TrIM kernel on TPU / interpret validation, lax.conv oracle on CPU),
+ReLU, max-pool, dense classifier.
+
+Integer mode (the paper's inference datapath): uint8 activations x int8
+weights -> int32 psums, per-layer requantization — numerically identical to
+the bit-faithful engine in ``repro.core.trim.engine`` (tests assert this),
+but running through the TPU-native kernel.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trim.model import (ALEXNET_LAYERS, VGG16_LAYERS,
+                                   ConvLayerSpec)
+from repro.distributed.sharding import shard
+from repro.kernels.ops import trim_conv2d
+from repro.nn.layers import Params, _normal
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    layers: Tuple[ConvLayerSpec, ...]
+    pool_after: Tuple[int, ...]          # indices (into layers) with 2x2 pool
+    classifier: Tuple[int, ...]          # hidden dims of the FC head
+    n_classes: int = 1000
+    input_hw: Tuple[int, int] = (224, 224)
+
+
+VGG16_CNN = CNNConfig(
+    "vgg16", VGG16_LAYERS, pool_after=(1, 3, 6, 9, 12),
+    classifier=(4096, 4096), input_hw=(224, 224))
+
+ALEXNET_CNN = CNNConfig(
+    "alexnet", ALEXNET_LAYERS, pool_after=(0, 1, 4),
+    classifier=(4096, 4096), input_hw=(227, 227))
+
+
+def _pool(x: jax.Array, window: int = 2, stride: int = 2) -> jax.Array:
+    """2x2/stride-2 max pool via reshape+max (VALID). Equivalent to
+    reduce_window but robustly reverse-differentiable under nested jit."""
+    assert window == 2 and stride == 2
+    B, H, W, C = x.shape
+    x = x[:, : H // 2 * 2, : W // 2 * 2]
+    x = x.reshape(B, H // 2, 2, W // 2, 2, C)
+    return x.max(axis=(2, 4))
+
+
+def init_cnn(key, cfg: CNNConfig, dtype=jnp.float32) -> Params:
+    p: Params = {"conv": [], "fc": []}
+    feat_hw = cfg.input_hw
+    c_in = cfg.layers[0].M
+    for i, l in enumerate(cfg.layers):
+        key, k = jax.random.split(key)
+        fan_in = l.K * l.K * l.M
+        p["conv"].append({
+            "kernel": _normal(k, (l.K, l.K, l.M, l.N), (2.0 / fan_in) ** 0.5,
+                              dtype),
+            "bias": jnp.zeros((l.N,), dtype)})
+        feat_hw = (l.H_O, l.W_O)
+        if i in cfg.pool_after:
+            feat_hw = (feat_hw[0] // 2, feat_hw[1] // 2)
+        c_in = l.N
+    flat = feat_hw[0] * feat_hw[1] * c_in
+    dims = (flat,) + cfg.classifier + (cfg.n_classes,)
+    for i in range(len(dims) - 1):
+        key, k = jax.random.split(key)
+        p["fc"].append({
+            "kernel": _normal(k, (dims[i], dims[i + 1]), dims[i] ** -0.5,
+                              dtype),
+            "bias": jnp.zeros((dims[i + 1],), dtype)})
+    return p
+
+
+def cnn_forward(params: Params, images: jax.Array, cfg: CNNConfig,
+                ) -> jax.Array:
+    """images (B, H, W, C) float -> logits (B, n_classes)."""
+    x = images
+    for i, l in enumerate(cfg.layers):
+        w = params["conv"][i]["kernel"].astype(x.dtype)
+        groups = x.shape[-1] // l.M     # AlexNet two-tower layers: 2
+        x = trim_conv2d(x, w, stride=l.stride, padding=l.padding,
+                        groups=groups)
+        x = x + params["conv"][i]["bias"].astype(x.dtype)
+        x = jax.nn.relu(x)
+        x = shard(x, "batch", "img_h", "img_w", "cout")
+        if i in cfg.pool_after:
+            x = _pool(x)
+    x = x.reshape(x.shape[0], -1)
+    for j, fc in enumerate(params["fc"]):
+        x = x @ fc["kernel"].astype(x.dtype) + fc["bias"].astype(x.dtype)
+        if j < len(params["fc"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def cnn_loss(params: Params, batch: Dict[str, jax.Array], cfg: CNNConfig,
+             ) -> Tuple[jax.Array, Dict[str, Any]]:
+    logits = cnn_forward(params, batch["images"], cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+    ce = -ll.mean()
+    acc = (logits.argmax(-1) == batch["labels"]).mean()
+    return ce, {"ce": ce, "acc": acc}
+
+
+# ---------------------------------------------------------------------------
+# Integer (paper-faithful) inference datapath
+# ---------------------------------------------------------------------------
+
+
+def quantize_cnn(params: Params, cfg: CNNConfig,
+                 ) -> Tuple[Params, List[float]]:
+    """Float conv weights -> int8 (symmetric); returns (int params, scales)."""
+    qp: Params = {"conv": []}
+    scales: List[float] = []
+    for i, l in enumerate(cfg.layers):
+        w = params["conv"][i]["kernel"]
+        amax = jnp.maximum(jnp.abs(w).max(), 1e-8)
+        s = amax / 127.0
+        qw = jnp.clip(jnp.round(w / s), -127, 127).astype(jnp.int8)
+        qp["conv"].append({"kernel": qw})
+        scales.append(float(s))
+    return qp, scales
+
+
+def cnn_forward_int8(qparams: Params, images_u8: jax.Array, cfg: CNNConfig,
+                     act_scales: Optional[Sequence[float]] = None,
+                     ) -> jax.Array:
+    """uint8 NHWC images through the integer TrIM datapath.
+
+    Each layer: uint8 x int8 -> int32 psums (exact), ReLU in int32, then
+    requantize to uint8 with a per-layer right-shift scale (power-of-two
+    requantization — what the paper's engine output stage does).
+    Returns the final int32 feature map (pre-classifier).
+    """
+    x = images_u8
+    for i, l in enumerate(cfg.layers):
+        w = qparams["conv"][i]["kernel"]
+        psum = trim_conv2d(x, w, stride=l.stride, padding=l.padding)
+        psum = jax.nn.relu(psum)                      # int32 relu
+        if i < len(cfg.layers) - 1:
+            # power-of-two requantize back to uint8 for the next layer
+            shift = jnp.maximum(
+                jnp.ceil(jnp.log2(jnp.maximum(
+                    psum.max().astype(jnp.float32), 1.0) / 255.0)), 0
+            ).astype(jnp.int32)
+            x = jnp.clip(psum >> shift, 0, 255).astype(jnp.uint8)
+        else:
+            return psum
+        if i in cfg.pool_after:
+            x = _pool(x)
+    return x

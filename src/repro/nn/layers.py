@@ -1,0 +1,172 @@
+"""Base layers: embedding, norms, dense projections, MLPs, rotary embedding.
+
+Conventions:
+- params are nested dicts; leaf names follow the patterns in
+  ``repro.distributed.sharding.PARAM_AXIS_PATTERNS`` (that is how sharding
+  is attached — by path, not by plumbing);
+- compute dtype is the input's dtype (bf16 in production), accumulation and
+  normalization statistics are f32;
+- ``init_*`` functions take an ``nn_rng`` (jax PRNG key) and return params.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+Params = Dict[str, Any]
+
+
+def _normal(key, shape, std, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# -- embedding ---------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, *, pad_to: int = 1,
+                   dtype=jnp.float32) -> Params:
+    """Token embedding; vocab padded up to `pad_to` multiple for TP
+    shardability (granite's 49155 -> 49280). Logical vocab is kept by the
+    caller; padded rows are zero-initialized and never updated by real ids."""
+    vpad = -(-vocab // pad_to) * pad_to
+    table = _normal(key, (vpad, d), d ** -0.5, dtype)
+    if vpad != vocab:
+        table = table.at[vocab:].set(0.0)
+    return {"table": table}
+
+
+def embed_lookup(params: Params, ids: jax.Array) -> jax.Array:
+    out = jnp.take(params["table"], ids, axis=0)
+    return shard(out, "batch", "seq", "embed")
+
+
+def embed_logits(params: Params, x: jax.Array, vocab: int,
+                 keep_pad: bool = False) -> jax.Array:
+    """Tied-readout logits.
+
+    keep_pad=False slices back to the logical vocab (public API).
+    keep_pad=True returns the PADDED width with -inf on pad entries — the
+    padded width divides the model axis, so the logits stay vocab-sharded
+    (slicing first would make ragged vocabs like 50280/49155 unshardable
+    and replicate a (B, S, V) f32 tensor on every device)."""
+    logits = jnp.einsum("...d,vd->...v", x, params["table"],
+                        preferred_element_type=jnp.float32)
+    if keep_pad:
+        return mask_pad_logits(logits, vocab)
+    return logits[..., :vocab]
+
+
+def mask_pad_logits(logits: jax.Array, vocab: int) -> jax.Array:
+    vpad = logits.shape[-1]
+    if vpad == vocab:
+        return logits
+    mask = jnp.arange(vpad) < vocab
+    return jnp.where(mask, logits, -1e30)
+
+
+def init_lm_head(key, d: int, vocab: int, *, pad_to: int = 1,
+                 dtype=jnp.float32) -> Params:
+    vpad = -(-vocab // pad_to) * pad_to
+    return {"kernel": _normal(key, (d, vpad), d ** -0.5, dtype)}
+
+
+def lm_head_logits(params: Params, x: jax.Array, vocab: int,
+                   keep_pad: bool = False) -> jax.Array:
+    logits = jnp.einsum("...d,dv->...v", x, params["kernel"],
+                        preferred_element_type=jnp.float32)
+    if keep_pad:
+        return mask_pad_logits(logits, vocab)
+    return logits[..., :vocab]
+
+
+# -- norms -------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -- dense -------------------------------------------------------------------
+
+def init_dense(key, d_in: int, d_out: int, *, std: Optional[float] = None,
+               dtype=jnp.float32) -> Params:
+    std = d_in ** -0.5 if std is None else std
+    return {"kernel": _normal(key, (d_in, d_out), std, dtype)}
+
+
+def dense(params: Params, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...i,io->...o", x, params["kernel"].astype(x.dtype))
+
+
+# -- MLPs --------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, kind: str, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"w_gate": init_dense(k1, d, ff, dtype=dtype),
+                "w_up": init_dense(k2, d, ff, dtype=dtype),
+                "w_down": init_dense(k3, ff, d, std=ff ** -0.5, dtype=dtype)}
+    if kind == "gelu":
+        return {"w_in": init_dense(k1, d, ff, dtype=dtype),
+                "w_out": init_dense(k2, ff, d, std=ff ** -0.5, dtype=dtype)}
+    raise ValueError(kind)
+
+
+def mlp(params: Params, x: jax.Array, kind: str) -> jax.Array:
+    if kind in ("swiglu", "geglu"):
+        g = dense(params["w_gate"], x)
+        u = dense(params["w_up"], x)
+        g = shard(g, "batch", "seq", "ff")
+        act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+        out = dense(params["w_down"], h)
+    else:
+        h = dense(params["w_in"], x)
+        h = shard(h, "batch", "seq", "ff")
+        out = dense(params["w_out"], jax.nn.gelu(h))
+    return shard(out, "batch", "seq", "embed")
+
+
+# -- rotary ------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float = 10000.0) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,) -> (cos, sin) of shape (..., head_dim//2), f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, D); cos/sin (..., S, D/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s],
+                           axis=-1).astype(x.dtype)

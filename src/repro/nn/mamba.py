@@ -1,0 +1,282 @@
+"""Mamba2 (SSD — state-space duality) mixer: chunked train/prefill scan and
+O(1) recurrent decode, with the TrIM-1D Pallas kernel as the short-conv
+hot spot.
+
+The SSD recurrence  h_t = exp(dt_t A) h_{t-1} + dt_t x_t B_t^T,
+                    y_t = C_t h_t + D x_t
+is evaluated in chunks (arXiv:2405.21060 §6): a within-chunk quadratic
+"attention-like" term plus an inter-chunk state carried by a lax.scan —
+structurally the TrIM engine's psum-buffer temporal accumulation (chunk-local
+compute + carried partial state), which is why the chunked path shares the
+kernels' accumulate-in-f32 discipline.
+
+Shapes: u (B, L, d_model); internal x (B, L, H, P) with H heads of headdim P,
+state S per head, G B/C groups (G divides H).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.kernels.ops import trim_conv1d
+from repro.nn.layers import Params, _normal, init_dense, dense
+
+NEG_INF = -1e30
+
+
+class MambaDims(NamedTuple):
+    d_model: int
+    d_inner: int     # expand * d_model
+    n_heads: int     # d_inner // headdim
+    headdim: int
+    d_state: int
+    n_groups: int
+    d_conv: int
+    chunk: int
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def in_proj_out(self) -> int:
+        # z, x, B, C, dt
+        return 2 * self.d_inner + 2 * self.n_groups * self.d_state + self.n_heads
+
+
+def mamba_dims(d_model: int, *, expand: int = 2, headdim: int = 64,
+               d_state: int = 128, n_groups: int = 1, d_conv: int = 4,
+               chunk: int = 256) -> MambaDims:
+    d_inner = expand * d_model
+    assert d_inner % headdim == 0
+    return MambaDims(d_model, d_inner, d_inner // headdim, headdim, d_state,
+                     n_groups, d_conv, chunk)
+
+
+def init_mamba(key, dims: MambaDims, dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    H = dims.n_heads
+    # dt bias initialized so softplus(dt_bias) spans [1e-3, 1e-1] (std init)
+    dt = jnp.exp(jax.random.uniform(k3, (H,), jnp.float32)
+                 * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": init_dense(k1, dims.d_model, dims.in_proj_out, dtype=dtype),
+        "conv1d": {"w": _normal(k2, (dims.d_conv, dims.conv_channels),
+                                dims.d_conv ** -0.5, dtype)},
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "ssm_norm": {"scale": jnp.ones((dims.d_inner,), dtype)},
+        "out_proj": init_dense(k4, dims.d_inner, dims.d_model,
+                               std=dims.d_inner ** -0.5, dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x (..., T) -> (..., T, T) lower-triangular segment sums:
+    out[..., t, s] = sum_{s < u <= t} x[..., u] (NEG_INF above diagonal)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, seg, NEG_INF)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, D: jax.Array, *, chunk: int,
+                h0: Optional[jax.Array] = None,
+                score_dtype=jnp.float32,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x (B, L, H, P) f32; dt (B, L, H) f32 (post-softplus); A (H,) negative;
+    B/C (B, L, G, S); D (H,). h0 optional initial state (B, H, P, S).
+    score_dtype: dtype of the within-chunk quadratic tensors (the (CS, CS)
+    "attention-like" term) — bf16 halves their HBM traffic (§Perf); the
+    decay statistics (cumsums, exps) and the inter-chunk state stay f32.
+    Returns (y (B, L, H, P), h_final (B, H, P, S)).
+    """
+    Bb, L, H, P = x.shape
+    G, S = B.shape[-2], B.shape[-1]
+    rep = H // G
+    CS = min(chunk, L)
+    NC = -(-L // CS)
+    pad = NC * CS - L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    xc = x.reshape(Bb, NC, CS, H, P)
+    dtc = dt.reshape(Bb, NC, CS, H)
+    Bc = B.reshape(Bb, NC, CS, G, S)
+    Cc = C.reshape(Bb, NC, CS, G, S)
+
+    dA = dtc * A  # (B, NC, CS, H) negative decay increments
+    dAcs = jnp.cumsum(dA, axis=2)
+
+    # within-chunk quadratic term (score_dtype; f32 accumulation)
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2))
+                   ).astype(score_dtype)                    # (B,NC,H,CS,CS)
+    CB = jnp.einsum("bntgs,bnugs->bngtu", Cc.astype(score_dtype),
+                    Bc.astype(score_dtype),
+                    preferred_element_type=score_dtype)     # (B,NC,G,CS,CS)
+    CB = jnp.repeat(CB, rep, axis=2) if rep > 1 else CB     # (B,NC,H,CS,CS)
+    scores = CB * Lmat * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :
+                                                   ].astype(score_dtype)
+    y_diag = jnp.einsum("bnhtu,bnuhp->bnthp", scores,
+                        xc.astype(score_dtype),
+                        preferred_element_type=jnp.float32)
+
+    # per-chunk terminal states
+    decay_to_end = jnp.exp(dAcs[:, :, -1:, :] - dAcs)        # (B,NC,CS,H)
+    Brep = jnp.repeat(Bc, rep, axis=3) if rep > 1 else Bc   # (B,NC,CS,H,S)
+    dBx = jnp.einsum("bnth,bnths,bnthp->bnhps",
+                     dtc * decay_to_end, Brep, xc)
+
+    chunk_decay = jnp.exp(dAcs[:, :, -1, :])                 # (B, NC, H)
+
+    def scan_f(h, inp):
+        dec, s = inp                                          # (B,H), (B,H,P,S)
+        h_new = h * dec[..., None, None] + s
+        return h_new, h
+    h_init = (jnp.zeros((Bb, H, P, S), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_last, h_prevs = jax.lax.scan(
+        scan_f, h_init,
+        (chunk_decay.transpose(1, 0, 2), dBx.transpose(1, 0, 2, 3, 4)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                # (B,NC,H,P,S)
+
+    # inter-chunk contribution
+    Crep = jnp.repeat(Cc, rep, axis=3) if rep > 1 else Cc     # (B,NC,CS,H,S)
+    y_off = jnp.einsum("bnths,bnhps,bnth->bnthp", Crep, h_prevs,
+                       jnp.exp(dAcs))
+    y = (y_diag + y_off).reshape(Bb, NC * CS, H, P)[:, :L]
+    y = y + x.reshape(Bb, NC * CS, H, P)[:, :L] * D[None, None, :, None]
+    return y, h_last
+
+
+def ssd_decode_step(h: jax.Array, x: jax.Array, dt: jax.Array, A: jax.Array,
+                    B: jax.Array, C: jax.Array, D: jax.Array,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrence. h (B,H,P,S); x (B,H,P); dt (B,H); B/C (B,G,S).
+    Returns (y (B,H,P), h_new)."""
+    H = x.shape[1]
+    G = B.shape[1]
+    rep = H // G
+    Br = jnp.repeat(B, rep, axis=1) if rep > 1 else B         # (B,H,S)
+    Cr = jnp.repeat(C, rep, axis=1) if rep > 1 else C
+    decay = jnp.exp(dt * A)                                   # (B,H)
+    h_new = (h * decay[..., None, None]
+             + jnp.einsum("bh,bhp,bhs->bhps", dt, x, Br))
+    y = jnp.einsum("bhs,bhps->bhp", Cr, h_new) + x * D[None, :, None]
+    return y, h_new
+
+
+# ---------------------------------------------------------------------------
+# Full mixer (block-level API)
+# ---------------------------------------------------------------------------
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (B, d_conv-1, conv_channels) trailing conv window
+    ssm: jax.Array    # (B, H, P, S) recurrent state
+
+
+def init_mamba_cache(batch: int, dims: MambaDims, dtype=jnp.float32,
+                     ) -> MambaCache:
+    return MambaCache(
+        jnp.zeros((batch, dims.d_conv - 1, dims.conv_channels), dtype),
+        jnp.zeros((batch, dims.n_heads, dims.headdim, dims.d_state),
+                  jnp.float32))
+
+
+def _gated_rmsnorm(params: Params, y: jax.Array, z: jax.Array,
+                   eps: float = 1e-5) -> jax.Array:
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps)
+            * params["scale"].astype(jnp.float32)).astype(y.dtype)
+
+
+def _split_proj(proj: jax.Array, dims: MambaDims):
+    d_in, gs = dims.d_inner, dims.n_groups * dims.d_state
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in:d_in + d_in + 2 * gs]
+    dt = proj[..., d_in + d_in + 2 * gs:]
+    return z, xBC, dt
+
+
+def mamba_mixer(params: Params, u: jax.Array, dims: MambaDims, *,
+                mode: str = "train", cache: Optional[MambaCache] = None,
+                score_dtype=jnp.float32,
+                ) -> Tuple[jax.Array, Optional[MambaCache]]:
+    """u (B, L, d_model) -> (out, new_cache).
+
+    mode "train"/"prefill": chunked SSD over the sequence (prefill returns
+    the terminal cache); mode "decode": L == 1 recurrent step.
+    """
+    Bb, L, _ = u.shape
+    d_in, gs = dims.d_inner, dims.n_groups * dims.d_state
+    proj = dense(params["in_proj"], u)
+    z, xBC, dt_raw = _split_proj(proj, dims)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and L == 1
+        window = jnp.concatenate(
+            [cache.conv.astype(xBC.dtype), xBC], axis=1)      # (B, K, CC)
+        conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                              params["conv1d"]["w"].astype(jnp.float32))
+        # round to the compute dtype BEFORE the activation — bit-consistent
+        # with the train path (trim_conv1d returns x.dtype, then silu)
+        xBC_c = jax.nn.silu(conv_out.astype(xBC.dtype))[:, None]
+        new_conv = window[:, 1:]
+        x = xBC_c[..., :d_in].reshape(Bb, 1, dims.n_heads, dims.headdim)
+        Bm = xBC_c[..., d_in:d_in + gs].reshape(Bb, dims.n_groups, dims.d_state)
+        Cm = xBC_c[..., d_in + gs:].reshape(Bb, dims.n_groups, dims.d_state)
+        y, h_new = ssd_decode_step(
+            cache.ssm, x[:, 0].astype(jnp.float32), dt[:, 0], A,
+            Bm.astype(jnp.float32), Cm.astype(jnp.float32), params["D"])
+        y = y[:, None].reshape(Bb, 1, d_in).astype(u.dtype)
+        new_cache = MambaCache(new_conv, h_new)
+    else:
+        xBC_c = jax.nn.silu(trim_conv1d(xBC, params["conv1d"]["w"]
+                                        .astype(xBC.dtype)))
+        xBC_c = shard(xBC_c, "batch", "seq", "d_inner")
+        x = xBC_c[..., :d_in].reshape(Bb, L, dims.n_heads, dims.headdim)
+        Bm = xBC_c[..., d_in:d_in + gs].reshape(Bb, L, dims.n_groups,
+                                                dims.d_state)
+        Cm = xBC_c[..., d_in + gs:].reshape(Bb, L, dims.n_groups, dims.d_state)
+        y, h_last = ssd_chunked(x.astype(jnp.float32), dt, A,
+                                Bm.astype(jnp.float32),
+                                Cm.astype(jnp.float32), params["D"],
+                                chunk=dims.chunk, score_dtype=score_dtype)
+        y = y.reshape(Bb, L, d_in).astype(u.dtype)
+        if mode == "prefill":
+            assert cache is not None
+            # trailing conv window of the raw (pre-activation) stream
+            tail = xBC[:, -(dims.d_conv - 1):]
+            pad = dims.d_conv - 1 - tail.shape[1]
+            if pad > 0:
+                tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+            new_cache = MambaCache(tail.astype(cache.conv.dtype), h_last)
+
+    y = _gated_rmsnorm(params["ssm_norm"], y, z)
+    y = shard(y, "batch", "seq", "d_inner")
+    out = dense(params["out_proj"], y)
+    return shard(out, "batch", "seq", "embed"), new_cache

@@ -1,0 +1,314 @@
+"""Model compositions: CausalLM (dense/MoE/SSM/hybrid/VLM-stub) and EncDecLM.
+
+Pure-functional: a ``Model`` object holds only static structure (the config,
+the derived StackSpec(s)); parameters/caches are explicit pytrees. ``tp`` is
+the model-axis size of the target mesh — it determines the attention head
+layout (kv repetition / group padding for TP > n_kv, see nn.attention).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.nn.attention import attn_layout
+from repro.nn.blocks import (SlotSpec, StackSpec, init_stack,
+                             init_stack_cache, run_stack)
+from repro.nn.layers import (Params, embed_logits, embed_lookup,
+                             init_embedding, init_lm_head, init_rmsnorm,
+                             init_layernorm, layernorm, lm_head_logits,
+                             rmsnorm)
+from repro.nn.losses import chunked_softmax_xent, softmax_xent
+from repro.nn.mamba import mamba_dims
+
+
+def decoder_schedule(cfg: ModelConfig) -> Tuple[Tuple[SlotSpec, ...], int]:
+    """Derive the (period slots, n_periods) schedule from the config."""
+    def slot(i: int) -> SlotSpec:
+        if cfg.family == "ssm":
+            return SlotSpec("mamba", "none")
+        if cfg.family == "hybrid":
+            mixer = ("attn" if cfg.attn_every
+                     and i % cfg.attn_every == cfg.attn_offset else "mamba")
+        else:
+            mixer = "attn"
+        if cfg.n_experts and i % cfg.moe_every == cfg.moe_offset:
+            ffn = "moe"
+        else:
+            ffn = "mlp" if cfg.family != "ssm" else "none"
+        return SlotSpec(mixer, ffn)
+
+    full = tuple(slot(i) for i in range(cfg.n_layers))
+    # minimal period
+    for period in range(1, cfg.n_layers + 1):
+        if cfg.n_layers % period:
+            continue
+        if all(full[i] == full[i % period] for i in range(cfg.n_layers)):
+            return full[:period], cfg.n_layers // period
+    return full, 1
+
+
+def _stack_spec(cfg: ModelConfig, slots, n_periods, *, tp: int,
+                causal: bool = True, cross: bool = False) -> StackSpec:
+    lay = (attn_layout(cfg.n_q, cfg.n_kv, cfg.head_dim, tp)
+           if cfg.n_q else None)
+    dims = (mamba_dims(cfg.d_model, expand=cfg.ssm_expand,
+                       headdim=cfg.ssm_headdim, d_state=cfg.ssm_d_state,
+                       n_groups=cfg.ssm_n_groups, d_conv=cfg.ssm_d_conv,
+                       chunk=cfg.ssm_chunk)
+            if cfg.family in ("ssm", "hybrid") else None)
+    if cross:
+        slots = tuple(SlotSpec(s.mixer, s.ffn, cross_attn=True)
+                      for s in slots)
+    return StackSpec(
+        slots=slots, n_periods=n_periods, d_model=cfg.d_model,
+        d_ff=cfg.d_ff, mlp_kind=cfg.mlp_kind, norm=cfg.norm, layout=lay,
+        rope_theta=cfg.rope_theta, causal=causal, dims=dims,
+        n_experts=cfg.n_experts, top_k=cfg.top_k,
+        shared_expert=cfg.shared_expert, dense_residual=cfg.dense_residual,
+        dense_ff=cfg.dense_ff, capacity_factor=cfg.capacity_factor,
+        moe_impl=cfg.moe_impl, remat=cfg.remat, chunk_k=cfg.chunk_k,
+        block_causal=cfg.block_causal, scan_layers=cfg.scan_layers,
+        kv_seqshard=("model" if cfg.decode_kv_seqshard is True
+                     else cfg.decode_kv_seqshard or ""),
+        ssd_bf16=cfg.ssd_bf16)
+
+
+def _final_norm_fns(cfg: ModelConfig):
+    return ((init_rmsnorm, rmsnorm) if cfg.norm == "rmsnorm"
+            else (init_layernorm, layernorm))
+
+
+@dataclass(frozen=True)
+class CausalLM:
+    """Decoder-only LM; covers dense / moe / ssm / hybrid / vlm families."""
+
+    cfg: ModelConfig
+    tp: int = 1
+
+    @property
+    def spec(self) -> StackSpec:
+        slots, n_periods = decoder_schedule(self.cfg)
+        return _stack_spec(self.cfg, slots, n_periods, tp=self.tp)
+
+    # -- params ------------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ke, ks, kh = jax.random.split(key, 3)
+        init_norm, _ = _final_norm_fns(cfg)
+        p: Params = {
+            "embed": init_embedding(ke, cfg.vocab, cfg.d_model,
+                                    pad_to=cfg.vocab_pad_to, dtype=cfg.dtype),
+            "stack": init_stack(ks, self.spec, cfg.dtype),
+            "final_norm": init_norm(cfg.d_model, cfg.dtype),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = init_lm_head(kh, cfg.d_model, cfg.vocab,
+                                        pad_to=cfg.vocab_pad_to,
+                                        dtype=cfg.dtype)
+        return p
+
+    # -- shared pieces -------------------------------------------------------
+    def _embed(self, params: Params, tokens: jax.Array,
+               extra_embeds: Optional[jax.Array]) -> jax.Array:
+        x = embed_lookup(params["embed"], tokens)
+        if self.cfg.scale_embed:
+            x = x * jnp.asarray(math.sqrt(self.cfg.d_model), x.dtype)
+        if extra_embeds is not None:
+            x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        return x
+
+    def _logits(self, params: Params, x: jax.Array,
+                keep_pad: bool = False) -> jax.Array:
+        _, norm = _final_norm_fns(self.cfg)
+        x = norm(params["final_norm"], x)
+        if self.cfg.tie_embeddings:
+            logits = embed_logits(params["embed"], x, self.cfg.vocab,
+                                  keep_pad=keep_pad)
+        else:
+            logits = lm_head_logits(params["lm_head"], x, self.cfg.vocab,
+                                    keep_pad=keep_pad)
+        return shard(logits, "batch", "seq", "vocab")
+
+    # -- train --------------------------------------------------------------
+    def forward(self, params: Params, tokens: jax.Array,
+                extra_embeds: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+        """tokens (B, S) -> (logits (B, S_total, vocab), moe_aux)."""
+        x = self._embed(params, tokens, extra_embeds)
+        x, _, aux = run_stack(params["stack"], x, self.spec, mode="train")
+        return self._logits(params, x), aux
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array],
+             aux_weight: float = 0.01) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Next-token CE over text positions. batch: tokens (B, S)
+        [+ extra_embeds (B, S_img, d)]; loss positions are text-only.
+
+        The CE runs on PADDED-vocab logits (pad entries masked to -inf):
+        the padded width divides the TP axis so the (B, S, V) f32 tensor
+        stays vocab-sharded for ragged vocabs (see embed_logits)."""
+        tokens = batch["tokens"]
+        extra = batch.get("extra_embeds")
+        x = self._embed(params, tokens[:, :-1], extra)
+        x, _, aux = run_stack(params["stack"], x, self.spec, mode="train")
+        n_extra = 0 if extra is None else extra.shape[1]
+        targets = tokens[:, 1:]
+        if self.cfg.ce_impl == "chunked":
+            _, norm = _final_norm_fns(self.cfg)
+            h = norm(params["final_norm"], x)[:, n_extra:]
+            table = (params["embed"]["table"] if self.cfg.tie_embeddings
+                     else params["lm_head"]["kernel"])
+            ce = chunked_softmax_xent(
+                h, table, targets, self.cfg.vocab,
+                transpose_readout=not self.cfg.tie_embeddings)
+        else:
+            logits = self._logits(params, x, keep_pad=True)
+            ce = softmax_xent(logits[:, n_extra:], targets)
+        total = ce + aux_weight * aux
+        return total, {"ce": ce, "moe_aux": aux,
+                       "ppl": jnp.exp(jnp.minimum(ce, 20.0))}
+
+    # -- serve --------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> Params:
+        return init_stack_cache(self.spec, batch, max_len, dtype)
+
+    def prefill(self, params: Params, tokens: jax.Array, cache: Params,
+                extra_embeds: Optional[jax.Array] = None,
+                lengths: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, Params]:
+        """Returns (logits at the last position (B, vocab), cache)."""
+        x = self._embed(params, tokens, extra_embeds)
+        x, cache, _ = run_stack(params["stack"], x, self.spec,
+                                mode="prefill", cache=cache)
+        if lengths is None:
+            last = x[:, -1:]
+        else:
+            idx = jnp.maximum(lengths - 1, 0)
+            last = jnp.take_along_axis(
+                x, idx[:, None, None].astype(jnp.int32), axis=1)
+        return self._logits(params, last)[:, 0], cache
+
+    def decode_step(self, params: Params, token: jax.Array, cache: Params,
+                    pos: jax.Array, kv_length: Optional[jax.Array] = None,
+                    ) -> Tuple[jax.Array, Params]:
+        """token (B,) int32; pos scalar int32 (position being written).
+        Returns (logits (B, vocab), new cache)."""
+        x = self._embed(params, token[:, None], None)
+        positions = jnp.broadcast_to(
+            jnp.asarray(pos, jnp.int32)[None, None], x.shape[:2])
+        x, cache, _ = run_stack(params["stack"], x, self.spec, mode="decode",
+                                cache=cache, positions=positions,
+                                cache_pos=pos, kv_length=kv_length)
+        return self._logits(params, x)[:, 0], cache
+
+
+@dataclass(frozen=True)
+class EncDecLM:
+    """Encoder-decoder LM (seamless-m4t): stub frontend supplies source
+    frame embeddings (B, S_src, d); decoder is a causal token LM with
+    per-layer cross-attention into the encoder output."""
+
+    cfg: ModelConfig
+    tp: int = 1
+
+    @property
+    def enc_spec(self) -> StackSpec:
+        slots = (SlotSpec("attn", "mlp"),)
+        return _stack_spec(self.cfg, slots, self.cfg.n_enc_layers, tp=self.tp,
+                           causal=False)
+
+    @property
+    def dec_spec(self) -> StackSpec:
+        slots = (SlotSpec("attn", "mlp"),)
+        return _stack_spec(self.cfg, slots, self.cfg.n_layers, tp=self.tp,
+                           causal=True, cross=True)
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ke, k1, k2, kh = jax.random.split(key, 4)
+        init_norm, _ = _final_norm_fns(cfg)
+        p: Params = {
+            "embed": init_embedding(ke, cfg.vocab, cfg.d_model,
+                                    pad_to=cfg.vocab_pad_to, dtype=cfg.dtype),
+            "encoder": init_stack(k1, self.enc_spec, cfg.dtype),
+            "enc_norm": init_norm(cfg.d_model, cfg.dtype),
+            "decoder": init_stack(k2, self.dec_spec, cfg.dtype),
+            "final_norm": init_norm(cfg.d_model, cfg.dtype),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = init_lm_head(kh, cfg.d_model, cfg.vocab,
+                                        pad_to=cfg.vocab_pad_to,
+                                        dtype=cfg.dtype)
+        return p
+
+    def encode(self, params: Params, src_embeds: jax.Array) -> jax.Array:
+        _, norm = _final_norm_fns(self.cfg)
+        x, _, _ = run_stack(params["encoder"], src_embeds.astype(
+            self.cfg.dtype), self.enc_spec, mode="encoder")
+        return norm(params["enc_norm"], x)
+
+    def _logits(self, params: Params, x: jax.Array,
+                keep_pad: bool = False) -> jax.Array:
+        _, norm = _final_norm_fns(self.cfg)
+        x = norm(params["final_norm"], x)
+        if self.cfg.tie_embeddings:
+            return embed_logits(params["embed"], x, self.cfg.vocab,
+                                keep_pad=keep_pad)
+        return lm_head_logits(params["lm_head"], x, self.cfg.vocab,
+                              keep_pad=keep_pad)
+
+    def forward(self, params: Params, src_embeds: jax.Array,
+                tgt_tokens: jax.Array) -> jax.Array:
+        enc = self.encode(params, src_embeds)
+        x = embed_lookup(params["embed"], tgt_tokens)
+        x, _, _ = run_stack(params["decoder"], x, self.dec_spec,
+                            mode="train", enc_out=enc)
+        return self._logits(params, x)
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array],
+             ) -> Tuple[jax.Array, Dict[str, Any]]:
+        enc = self.encode(params, batch["src_embeds"])
+        x = embed_lookup(params["embed"], batch["tokens"][:, :-1])
+        x, _, _ = run_stack(params["decoder"], x, self.dec_spec,
+                            mode="train", enc_out=enc)
+        logits = self._logits(params, x, keep_pad=True)
+        ce = softmax_xent(logits, batch["tokens"][:, 1:])
+        return ce, {"ce": ce, "ppl": jnp.exp(jnp.minimum(ce, 20.0))}
+
+    def init_cache(self, batch: int, max_len: int, cross_len: int,
+                   dtype=jnp.bfloat16) -> Params:
+        return init_stack_cache(self.dec_spec, batch, max_len, dtype,
+                                cross_len=cross_len)
+
+    def prefill(self, params: Params, src_embeds: jax.Array,
+                tgt_tokens: jax.Array, cache: Params,
+                ) -> Tuple[jax.Array, Params]:
+        enc = self.encode(params, src_embeds)
+        x = embed_lookup(params["embed"], tgt_tokens)
+        x, cache, _ = run_stack(params["decoder"], x, self.dec_spec,
+                                mode="prefill", cache=cache, enc_out=enc)
+        return self._logits(params, x[:, -1:])[:, 0], cache
+
+    def decode_step(self, params: Params, token: jax.Array, cache: Params,
+                    pos: jax.Array, kv_length: Optional[jax.Array] = None,
+                    ) -> Tuple[jax.Array, Params]:
+        x = embed_lookup(params["embed"], token[:, None])
+        positions = jnp.broadcast_to(
+            jnp.asarray(pos, jnp.int32)[None, None], x.shape[:2])
+        x, cache, _ = run_stack(params["decoder"], x, self.dec_spec,
+                                mode="decode", cache=cache,
+                                positions=positions, cache_pos=pos,
+                                kv_length=kv_length)
+        return self._logits(params, x)[:, 0], cache
+
+
+def build_model(cfg: ModelConfig, tp: int = 1):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg, tp)
+    return CausalLM(cfg, tp)

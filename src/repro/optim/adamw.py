@@ -1,0 +1,88 @@
+"""AdamW (decoupled weight decay) as pure pytree functions.
+
+Optimizer moments are kept in f32 regardless of the param dtype; with the
+ZeRO-1 sharding spec (``distributed.sharding.zero1_pspec``) the moments are
+additionally sharded over the data axes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    # params whose path matches any of these fragments skip weight decay
+    no_decay_fragments: Tuple[str, ...] = ("norm", "bias", "A_log", "dt_bias",
+                                           "/D")
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), norm
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def adamw_update(grads, opt_state, params, lr, cfg: AdamWConfig = AdamWConfig(),
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    metrics: Dict[str, jax.Array] = {}
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        metrics["grad_norm"] = gnorm
+    step = opt_state["step"] + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * gf
+        v_new = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        update = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + cfg.eps)
+        ps = _path_str(path)
+        if cfg.weight_decay and not any(f in ps for f in
+                                        cfg.no_decay_fragments):
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, m, v: upd(path, p, g, m, v),
+        params, grads, opt_state["m"], opt_state["v"])
+    # unzip the (p, m, v) triples
+    treedef = jax.tree_util.tree_structure(params)
+    triples = treedef.flatten_up_to(flat)
+    new_params = treedef.unflatten([t[0] for t in triples])
+    new_m = treedef.unflatten([t[1] for t in triples])
+    new_v = treedef.unflatten([t[2] for t in triples])
+    metrics["param_norm"] = global_norm(new_params)
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

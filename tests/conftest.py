@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single host device; the 512-device dry-run sets its own
+# XLA_FLAGS before importing jax (and is exercised via subprocess here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,171 @@
+"""Per-architecture smoke tests: a REDUCED config of the same family runs
+one forward/train step on CPU (shapes + no NaNs), and the serve path
+(prefill + decode) is exercised. The FULL configs are exercised only via
+the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, CNN_SMOKES, get_config, get_smoke
+from repro.distributed import StepConfig, make_train_state, make_train_step
+from repro.nn.conv import cnn_forward, cnn_loss, init_cnn
+from repro.nn.models import build_model, decoder_schedule
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    state = make_train_state(model, jax.random.PRNGKey(0))
+    B, S = 2, 24
+    rng = np.random.default_rng(1)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (B, S + 1)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["extra_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_tokens, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "encdec":
+        batch = {"tokens": batch["tokens"],
+                 "src_embeds": jnp.asarray(
+                     rng.normal(size=(B, 8, cfg.d_model)), jnp.float32)}
+    step = jax.jit(make_train_step(model, StepConfig(warmup_steps=1,
+                                                     total_steps=10)))
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["loss"]) > 0
+    # params actually moved
+    delta = jax.tree_util.tree_reduce(
+        lambda a, b: a + float(jnp.abs(b).sum()),
+        jax.tree.map(lambda a, b: a - b, new_state["params"],
+                     state["params"]), 0.0)
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes(arch):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    toks = jnp.zeros((B, S), jnp.int32)
+    if cfg.family == "encdec":
+        src = jnp.zeros((B, 8, cfg.d_model))
+        logits = model.forward(params, src, toks)
+        assert logits.shape == (B, S, cfg.vocab)
+    elif cfg.family == "vlm":
+        extra = jnp.zeros((B, cfg.frontend_tokens, cfg.d_model))
+        logits, _ = model.forward(params, toks, extra)
+        assert logits.shape == (B, S + cfg.frontend_tokens, cfg.vocab)
+    else:
+        logits, _ = model.forward(params, toks)
+        assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_serve_consistency(arch):
+    """prefill(t[:S-1]) + decode(t[S-1]) == forward(t)[-1] for every family
+    (MoE archs: run with a high capacity factor so no token is dropped —
+    capacity-dropping legitimately differs between S-token and 1-token
+    routing; that semantics is covered in test_layers)."""
+    cfg = get_smoke(arch).with_overrides(capacity_factor=16.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    if cfg.family == "encdec":
+        src = jnp.asarray(rng.normal(size=(B, 8, cfg.d_model)), jnp.float32)
+        full = model.forward(params, src, toks)
+        cache = model.init_cache(B, S + 4, cross_len=8, dtype=jnp.float32)
+        pre, cache = model.prefill(params, src, toks[:, :S - 1], cache)
+        np.testing.assert_allclose(np.asarray(pre), np.asarray(full[:, S - 2]),
+                                   rtol=2e-4, atol=2e-4)
+        dec, _ = model.decode_step(params, toks[:, S - 1], cache,
+                                   jnp.int32(S - 1))
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, S - 1]),
+                                   rtol=2e-4, atol=2e-4)
+        return
+    extra = None
+    n_extra = 0
+    if cfg.family == "vlm":
+        extra = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_tokens, cfg.d_model)),
+            jnp.float32)
+        n_extra = cfg.frontend_tokens
+    full, _ = model.forward(params, toks, extra)
+    cache = model.init_cache(B, n_extra + S + 4, dtype=jnp.float32)
+    pre, cache = model.prefill(params, toks[:, :S - 1], cache,
+                               extra_embeds=extra)
+    np.testing.assert_allclose(
+        np.asarray(pre), np.asarray(full[:, n_extra + S - 2]),
+        rtol=3e-4, atol=3e-4)
+    dec, _ = model.decode_step(params, toks[:, S - 1], cache,
+                               jnp.int32(n_extra + S - 1))
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(full[:, n_extra + S - 1]),
+        rtol=3e-4, atol=3e-4)
+
+
+def test_assigned_geometry_exact():
+    """The registered FULL configs carry exactly the assigned geometry."""
+    want = {
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    }
+    for name, (L, d, nq, nkv, ff, v) in want.items():
+        c = get_config(name)
+        assert (c.n_layers, c.d_model, c.n_q, c.n_kv, c.d_ff, c.vocab) == \
+            (L, d, nq, nkv, ff, v), name
+    m = get_config("mamba2-130m")
+    assert (m.n_layers, m.d_model, m.vocab, m.ssm_d_state) == \
+        (24, 768, 50280, 128)
+    # MoE/hybrid structure markers
+    assert get_config("arctic-480b").n_experts == 128
+    assert get_config("arctic-480b").top_k == 2
+    assert get_config("arctic-480b").dense_residual
+    assert get_config("llama4-maverick-400b-a17b").top_k == 1
+    assert get_config("jamba-1.5-large-398b").n_experts == 16
+    # jamba 1:7 attention interleave
+    slots, np_ = decoder_schedule(get_config("jamba-1.5-large-398b"))
+    assert len(slots) == 8 and np_ == 9
+    assert [s.mixer for s in slots].count("attn") == 1
+    assert slots[4].mixer == "attn"
+
+
+def test_long500k_gating():
+    """long_500k runs only for the sub-quadratic archs (DESIGN.md §5)."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        has_long = "long_500k" in cfg.shapes
+        assert has_long == (arch in ("mamba2-130m", "jamba-1.5-large-398b"))
+
+
+@pytest.mark.parametrize("name", sorted(CNN_SMOKES))
+def test_cnn_smoke(name):
+    cfg = CNN_SMOKES[name]
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    B = 2
+    imgs = jnp.asarray(rng.normal(size=(B,) + cfg.input_hw + (
+        cfg.layers[0].M,)), jnp.float32)
+    logits = cnn_forward(params, imgs, cfg)
+    assert logits.shape == (B, cfg.n_classes)
+    assert bool(jnp.isfinite(logits).all())
+    loss, mets = cnn_loss(params, {"images": imgs,
+                                   "labels": jnp.zeros((B,), jnp.int32)}, cfg)
+    g = jax.grad(lambda p: cnn_loss(p, {"images": imgs, "labels":
+                                        jnp.zeros((B,), jnp.int32)},
+                                    cfg)[0])(params)
+    gn = jax.tree_util.tree_reduce(lambda a, b: a + float(jnp.abs(b).sum()),
+                                   g, 0.0)
+    assert np.isfinite(float(loss)) and gn > 0

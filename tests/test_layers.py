@@ -1,0 +1,177 @@
+"""nn substrate: attention cache-equivalence, MoE impl agreement, Mamba SSD
+vs naive recurrence, quantization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.trim.quant import (dequantize_psums, psum_bit_width,
+                                   quantize_activations_u8,
+                                   quantize_weights_i8)
+from repro.nn.attention import (attn_layout, attention, flash_attention,
+                                init_attention, init_kv_cache)
+from repro.nn.mamba import (init_mamba, init_mamba_cache, mamba_dims,
+                            mamba_mixer, ssd_chunked)
+from repro.nn.moe import init_moe, moe
+
+
+# -- attention ---------------------------------------------------------------
+
+def _naive_attention(q, k, v, causal):
+    # q (B,S,H,G,D), k/v (B,S,H,D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / q.shape[-1] ** 0.5
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), Sk - Sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("chunk", [4, 16, 64])
+def test_flash_matches_naive(causal, chunk):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 24, 2, 3, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 24, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 24, 2, 8))
+    out = flash_attention(q, k, v, causal=causal, chunk_k=chunk)
+    want = _naive_attention(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_block_causal_matches():
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (1, 32, 2, 2, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 32, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 32, 2, 8))
+    a = flash_attention(q, k, v, causal=True, chunk_k=8, block_causal=False)
+    b = flash_attention(q, k, v, causal=True, chunk_k=8, block_causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("n_q,n_kv,tp", [(8, 2, 1), (8, 2, 4), (7, 7, 1),
+                                         (56, 8, 16), (24, 2, 16)])
+def test_layout_roundtrip_and_decode(n_q, n_kv, tp):
+    """TP head layouts (incl. kv-repeat + group padding) keep train, prefill
+    and decode numerically consistent."""
+    D, d_model = 8, 32
+    lay = attn_layout(n_q, n_kv, D, tp)
+    assert lay.n_q_pad % max(tp, 1) == 0 or tp <= n_kv
+    key = jax.random.PRNGKey(n_q * 100 + n_kv + tp)
+    p = init_attention(key, d_model, n_q, n_kv, D)
+    x = jax.random.normal(key, (2, 12, d_model))
+    pos = jnp.broadcast_to(jnp.arange(12)[None], (2, 12))
+    full, _ = attention(p, x, lay, positions=pos, mode="train")
+    cache = init_kv_cache(2, 16, lay, jnp.float32)
+    pre, cache = attention(p, x[:, :11], lay, positions=pos[:, :11],
+                           mode="prefill", cache=cache)
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(full[:, :11]),
+                               rtol=3e-5, atol=3e-5)
+    dec, _ = attention(p, x[:, 11:12], lay, positions=pos[:, 11:12],
+                       mode="decode", cache=cache, cache_pos=11)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, 11]), rtol=3e-5, atol=3e-5)
+
+
+# -- MoE ----------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, 3), cf=st.sampled_from([0.5, 1.0, 1.25, 4.0]),
+       seed=st.integers(0, 1000))
+def test_moe_gather_equals_einsum(k, cf, seed):
+    """The production (sort/gather) dispatch and the GShard one-hot
+    reference implement the SAME routing + drop policy."""
+    key = jax.random.PRNGKey(seed)
+    p = init_moe(key, 16, 32, 4)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 12, 16))
+    o1, _ = moe(p, x, top_k=k, capacity_factor=cf, impl="einsum")
+    o2, _ = moe(p, x, top_k=k, capacity_factor=cf, impl="gather")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_moe_gradients_flow_both_impls():
+    key = jax.random.PRNGKey(0)
+    p = init_moe(key, 8, 16, 4, shared_expert=True)
+    x = jax.random.normal(key, (2, 8, 8))
+    for impl in ("einsum", "gather"):
+        g = jax.grad(lambda pp: moe(pp, x, top_k=2, impl=impl)[0].sum())(p)
+        total = jax.tree_util.tree_reduce(
+            lambda a, b: a + float(jnp.abs(b).sum()), g, 0.0)
+        assert np.isfinite(total) and total > 0
+
+
+# -- Mamba (SSD) ----------------------------------------------------------------
+
+def _ssd_naive(x, dt, A, B, C, D):
+    Bb, L, H, P = x.shape
+    G, S = B.shape[-2], B.shape[-1]
+    rep = H // G
+    h = np.zeros((Bb, H, P, S))
+    Br = np.repeat(B, rep, axis=2)
+    Cr = np.repeat(C, rep, axis=2)
+    ys = []
+    for t in range(L):
+        h = h * np.exp(dt[:, t] * A)[..., None, None] + np.einsum(
+            "bh,bhp,bhs->bhps", dt[:, t], x[:, t], Br[:, t])
+        ys.append(np.einsum("bhs,bhps->bhp", Cr[:, t], h)
+                  + x[:, t] * D[None, :, None])
+    return np.stack(ys, 1), h
+
+
+@settings(max_examples=8, deadline=None)
+@given(L=st.integers(3, 50), chunk=st.sampled_from([4, 8, 16]),
+       G=st.sampled_from([1, 2]), seed=st.integers(0, 100))
+def test_ssd_chunked_matches_recurrence(L, chunk, G, seed):
+    rng = np.random.default_rng(seed)
+    Bb, H, P, S = 2, 4, 4, 8
+    x = rng.normal(size=(Bb, L, H, P)).astype(np.float32)
+    dt = rng.uniform(1e-3, 0.1, (Bb, L, H)).astype(np.float32)
+    A = -rng.uniform(0.3, 2.0, (H,)).astype(np.float32)
+    B = rng.normal(size=(Bb, L, G, S)).astype(np.float32)
+    C = rng.normal(size=(Bb, L, G, S)).astype(np.float32)
+    D = rng.normal(size=(H,)).astype(np.float32)
+    y, h = ssd_chunked(jnp.array(x), jnp.array(dt), jnp.array(A),
+                       jnp.array(B), jnp.array(C), jnp.array(D), chunk=chunk)
+    y_ref, h_ref = _ssd_naive(x, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), h_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_prefill_decode_consistency():
+    dims = mamba_dims(32, expand=2, headdim=8, d_state=16, n_groups=2,
+                      d_conv=4, chunk=16)
+    p = init_mamba(jax.random.PRNGKey(0), dims)
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, 21, 32))
+    full, _ = mamba_mixer(p, u, dims, mode="train")
+    cache = init_mamba_cache(2, dims)
+    pre, cache = mamba_mixer(p, u[:, :20], dims, mode="prefill", cache=cache)
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(full[:, :20]),
+                               atol=1e-5)
+    dec, cache = mamba_mixer(p, u[:, 20:21], dims, mode="decode", cache=cache)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, 20]),
+                               atol=1e-5)
+
+
+# -- quantization ----------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_quant_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 2, (4, 4)).astype(np.float64)
+    q, qp = quantize_activations_u8(x)
+    err = np.abs(q.astype(np.float64) * qp.scale - qp.zero_point * qp.scale
+                 - x).max()
+    assert err <= qp.scale * 0.51 + 1e-9
+
+
+def test_psum_bit_width_paper_case():
+    # B=8, K=3, M<=512 -> 2*8+3+2+9 = 30 bits <= 32-bit buffers (eq. 3)
+    assert psum_bit_width(8, 3, 24, 512) == 30
