@@ -14,6 +14,9 @@ EXPERIMENTS.md) can consume them directly. Sections:
   baselines TrIM vs Eyeriss-RS vs im2col-WS memory-access models.
   engine   Bit-faithful engine emulator timing + counter validation.
   kernels  Pallas kernel (interpret) vs oracle timing on small shapes.
+  kernels_fused  Fused-strided conv vs the FPGA's decimate-then-activate
+           schedule on the AlexNet/VGG layer shapes; writes
+           BENCH_kernels.json (perf trajectory artifact).
   roofline Dry-run roofline table (reads experiments/dryrun/*.json).
 """
 from __future__ import annotations
@@ -167,6 +170,67 @@ def bench_kernels() -> None:
           f"interpret_allclose_err={errm:.1e}")
 
 
+def bench_kernels_fused() -> None:
+    """Fused-strided TrIM conv vs decimate-then-activate (§V schedule).
+
+    Both run through the public ``ops.trim_conv2d`` dispatcher, so on TPU
+    this times the Pallas kernels and on CPU the jnp oracle with identical
+    schedules: the emulate_hw arm does the full stride-1 sweep, decimates,
+    then runs bias+ReLU as a separate jit (3 extra HBM round-trips); the
+    fused arm computes only the strided outputs with the epilogue in the
+    same pass.  Writes BENCH_kernels.json for the perf trajectory.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.ops import trim_conv2d
+
+    shapes = [
+        # name, x shape (NHWC), w shape (KKCF), stride, pad
+        ("alexnet_cl1", (1, 227, 227, 3), (11, 11, 3, 96), 4, 0),
+        ("alexnet_cl2", (1, 27, 27, 48), (5, 5, 48, 256), 1, 2),
+        ("vgg16_cl8", (1, 28, 28, 256), (3, 3, 256, 512), 1, 1),
+    ]
+    backend = jax.default_backend()
+    records: List[Dict] = []
+    print("section,name,us_fused,us_decimate,speedup,substrate")
+    for name, xs, ws, stride, pad in shapes:
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, xs, jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 1), ws, jnp.float32)
+        b = jax.random.normal(jax.random.fold_in(key, 2), (ws[-1],),
+                              jnp.float32)
+
+        def fused():
+            return jax.block_until_ready(trim_conv2d(
+                x, w, b, stride=stride, padding=pad, relu=True))
+
+        epilogue = jax.jit(lambda o: jnp.maximum(o + b, 0))
+
+        def decimate():
+            o = trim_conv2d(x, w, stride=stride, padding=pad,
+                            emulate_hw=True)
+            return jax.block_until_ready(epilogue(o))
+
+        us_f = _timeit(fused, n=3)
+        us_d = _timeit(decimate, n=3)
+        speedup = us_d / us_f if us_f else float("inf")
+        print(f"kernels_fused,{name},{us_f:.0f},{us_d:.0f},"
+              f"{speedup:.2f},{backend}")
+        records.append({"name": name, "x": list(xs), "w": list(ws),
+                        "stride": stride, "padding": pad,
+                        "us_fused": round(us_f, 1),
+                        "us_decimate": round(us_d, 1),
+                        "speedup": round(speedup, 2),
+                        "substrate": backend})
+    out_dir = os.environ.get("REPRO_BENCH_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, "BENCH_kernels.json")
+    with open(out_path, "w") as f:
+        json.dump({"section": "kernels_fused", "records": records}, f,
+                  indent=1)
+    print(f"kernels_fused,WROTE,{out_path},,,")
+
+
 def bench_roofline() -> None:
     files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
     print("section,arch,shape,mesh,compute_s,memory_s,collective_s,"
@@ -194,6 +258,7 @@ SECTIONS = {
     "baselines": bench_baselines,
     "engine": bench_engine,
     "kernels": bench_kernels,
+    "kernels_fused": bench_kernels_fused,
     "roofline": bench_roofline,
 }
 

@@ -3,7 +3,8 @@ attention kernel, each with a jit'd wrapper (ops.py) and a pure-jnp oracle
 (ref.py) asserted against in tests:
 
 - trim_conv2d — the paper's TrIM dataflow on the TPU memory hierarchy
-  (single-fetch haloed input tiles, weight-stationary, VMEM psum accum).
+  (single-fetch haloed input tiles, weight-stationary, VMEM psum accum),
+  stride-aware with a fused bias/ReLU/requant epilogue (DESIGN.md §2).
 - trim_conv1d — TrIM-1D causal depthwise conv (the Mamba short-conv).
 - trim_matmul — the K=1 degenerate TrIM (weight-stationary blocked GEMM).
 - flash_attention — fused streaming-softmax attention (scores in VMEM),

@@ -5,9 +5,13 @@ pure-jnp oracles (``ref.py``) for speed, or run the Pallas kernels in
 interpret mode when ``force_pallas=True`` (that is what the kernel tests do
 to validate the kernel bodies themselves).
 
-Striding for the conv path is done here by decimation of the stride-1
-result — exactly the hardware's behaviour for AlexNet CL1 (§V: full
-stride-1 sweep, downstream decimation).
+The conv path is stride-aware end to end: the kernel computes only the
+strided H_O x W_O outputs and can fuse the layer epilogue (bias + ReLU +
+power-of-two requantization) into its final-C_in flush.  ``emulate_hw=True``
+opts back into the hardware's behaviour for strided layers (§V, AlexNet
+CL1: full stride-1 sweep, downstream decimation) so model/benchmark
+comparisons against Tables I-II stay honest — on every substrate, including
+the CPU oracle.
 """
 from __future__ import annotations
 
@@ -27,39 +31,84 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _epilogue_jnp(out: jax.Array, bias: Optional[jax.Array], relu: bool,
+                  requant_shift: Optional[int]) -> jax.Array:
+    """Unfused epilogue (CPU oracle + emulate_hw decimation paths)."""
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    if relu:
+        out = jnp.maximum(out, 0)
+    if requant_shift is not None:
+        out = jnp.clip(jnp.right_shift(out, requant_shift),
+                       0, 255).astype(jnp.uint8)
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("stride", "padding",
                                              "force_pallas", "tile_h",
-                                             "block_c", "block_f", "groups"))
-def trim_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
+                                             "block_c", "block_f", "groups",
+                                             "relu", "requant_shift",
+                                             "emulate_hw"))
+def trim_conv2d(x: jax.Array, w: jax.Array,
+                bias: Optional[jax.Array] = None, *, stride: int = 1,
                 padding: Optional[int] = None, force_pallas: bool = False,
                 tile_h: int = 8, block_c: int = 128, block_f: int = 128,
-                groups: int = 1) -> jax.Array:
+                groups: int = 1, relu: bool = False,
+                requant_shift: Optional[int] = None,
+                emulate_hw: bool = False) -> jax.Array:
     """TrIM conv2d. x (N,H,W,C), w (K,K,C/groups,F) -> (N,H_O,W_O,F).
 
     groups > 1: grouped conv — each group maps onto its own set of TrIM
     cores (the hardware schedules groups as independent filter sets), here
-    one kernel call per group."""
+    one kernel call per group.
+
+    bias (F,) / relu / requant_shift: layer epilogue, fused into the kernel
+    flush on the Pallas path.  requant_shift (integer path only) applies the
+    engine's power-of-two requantization and returns uint8.
+
+    emulate_hw: replay the FPGA's strided-layer schedule — full stride-1
+    sweep, decimate, *then* the epilogue (3 extra HBM round-trips and
+    stride^2 wasted MACs, kept for Table I/II fidelity)."""
+    if requant_shift is not None:
+        assert jnp.issubdtype(x.dtype, jnp.integer), \
+            "requant_shift needs the integer path"
+    decimate = emulate_hw and stride > 1
     use_pallas = _on_tpu() or force_pallas
-    if use_pallas:
-        if groups == 1:
-            out = trim_conv2d_pallas(x, w, padding=padding, tile_h=tile_h,
-                                     block_c=block_c, block_f=block_f,
-                                     interpret=not _on_tpu())
+    if not use_pallas:
+        if decimate:
+            out = ref.conv2d_ref(x, w, stride=1, padding=padding,
+                                 groups=groups)[:, ::stride, ::stride, :]
         else:
-            cg = x.shape[-1] // groups
-            fg = w.shape[-1] // groups
-            outs = [trim_conv2d_pallas(
-                x[..., g * cg:(g + 1) * cg],
-                w[..., g * fg:(g + 1) * fg],
-                padding=padding, tile_h=tile_h, block_c=min(block_c, cg),
-                block_f=min(block_f, fg), interpret=not _on_tpu())
+            out = ref.conv2d_ref(x, w, stride=stride, padding=padding,
+                                 groups=groups)
+        return _epilogue_jnp(out, bias, relu, requant_shift)
+
+    def one(xg, wg, bg, bc, bf):
+        if decimate:
+            o = trim_conv2d_pallas(xg, wg, padding=padding, tile_h=tile_h,
+                                   block_c=bc, block_f=bf,
+                                   interpret=not _on_tpu())
+            return o[:, ::stride, ::stride, :]
+        return trim_conv2d_pallas(xg, wg, stride=stride, padding=padding,
+                                  bias=bg, relu=relu,
+                                  requant_shift=requant_shift,
+                                  tile_h=tile_h, block_c=bc, block_f=bf,
+                                  interpret=not _on_tpu())
+
+    if groups == 1:
+        out = one(x, w, bias, block_c, block_f)
+    else:
+        cg = x.shape[-1] // groups
+        fg = w.shape[-1] // groups
+        outs = [one(x[..., g * cg:(g + 1) * cg],
+                    w[..., g * fg:(g + 1) * fg],
+                    None if bias is None else bias[g * fg:(g + 1) * fg],
+                    min(block_c, cg), min(block_f, fg))
                 for g in range(groups)]
-            out = jnp.concatenate(outs, axis=-1)
-        if stride > 1:
-            out = out[:, ::stride, ::stride, :]
-        return out
-    return ref.conv2d_ref(x, w, stride=stride, padding=padding,
-                          groups=groups)
+        out = jnp.concatenate(outs, axis=-1)
+    if decimate:
+        out = _epilogue_jnp(out, bias, relu, requant_shift)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("force_pallas", "tile_l",

@@ -3,11 +3,11 @@
 Mapping of the paper's triangular input movement onto the TPU memory
 hierarchy (DESIGN.md §2):
 
-- **Single-fetch inputs**: each haloed input tile (TH+K-1 rows) travels
-  HBM -> VMEM exactly once per (spatial, C_in) grid step and is then reused
-  K*K times via *shifted VMEM slices* — the horizontal + diagonal movements
-  of the paper collapse into VMEM addressing (the halo rows play the role of
-  the shift-register buffers).
+- **Single-fetch inputs**: each haloed input tile travels HBM -> VMEM
+  exactly once per (spatial, C_in) grid step and is then reused K*K times
+  via *shifted VMEM slices* — the horizontal + diagonal movements of the
+  paper collapse into VMEM addressing (the halo rows play the role of the
+  shift-register buffers).
 - **Weight-stationary**: the (K, K, Cb, Fb) weight block's index_map is
   constant along the spatial grid axis, so Pallas' revolving-buffer pipeline
   keeps it resident in VMEM while the spatial sweep runs (the paper's
@@ -16,18 +16,27 @@ hierarchy (DESIGN.md §2):
   C_in grid axis (the engine's ceil(M/P_M) temporal steps + psum buffers);
   the output tile is written exactly once, on the last C_in step (the
   paper's single quantized writeback).
+- **Stride-aware sweep**: for stride S the input row blocks are TH*S rows
+  and the K*K shifted views decimate *at the slice* (step-S slices), so only
+  the H_O x W_O strided outputs are ever computed.  The FPGA instead streams
+  the full stride-1 extent and decimates downstream (§V, AlexNet CL1); that
+  behaviour is preserved as the wrapper's ``emulate_hw=True`` mode for
+  honest Table I/II comparisons (see ``ops.trim_conv2d``).
+- **Fused epilogue**: bias add + ReLU + optional power-of-two int32->uint8
+  requantization (the engine's output stage, ``core/trim/quant.py``) run in
+  the final-C_in flush, so the int32 psums never round-trip through HBM
+  between conv, bias, activation, and quant.
 - **Engine broadcast**: the input tile's index_map does not depend on the
   F (C_out) grid axis — the same fetched inputs serve all P_N "cores".
 
 The halo is expressed with plain blocked BlockSpecs by passing the input
-twice (row-block ht and ht+1) and concatenating the first K-1 rows of the
+twice (row-block ht and ht+1) and concatenating the first K-S rows of the
 second block — this keeps the kernel compatible with both compiled TPU
-lowering and interpret=True CPU validation.
+lowering and interpret=True CPU validation.  When K <= S no halo is needed
+and the input is passed once.
 
 Supports float (bf16/f32 in, f32 accum) and the paper's integer mode
-(uint8 x int8 -> int32 accum). Stride 1; striding/decimation is done by the
-wrapper (``ops.trim_conv2d``), matching the hardware (§V: strided layers
-stream the stride-1 sweep and decimate downstream).
+(uint8 x int8 -> int32 accum).
 """
 from __future__ import annotations
 
@@ -50,31 +59,48 @@ def _acc_dtype(x_dtype) -> jnp.dtype:
     return jnp.int32 if jnp.issubdtype(x_dtype, jnp.integer) else jnp.float32
 
 
-def _trim_conv2d_kernel(x_lo_ref, x_hi_ref, w_ref, o_ref, acc_ref, *,
-                        K: int, TH: int, W_O: int, n_cin: int):
+def _scratch(shape: Tuple[int, ...], dtype):
+    """Psum accumulator scratch: VMEM on TPU, backend-neutral otherwise."""
+    if _VMEM is not None:
+        return _VMEM(shape, dtype)
+    return pl.MemoryRef(shape, dtype, pl.ANY)
+
+
+def _trim_conv2d_kernel(*refs, K: int, TH: int, W_O: int, n_cin: int,
+                        stride: int, has_halo: bool, has_bias: bool,
+                        relu: bool, requant_shift: Optional[int]):
     """One grid step: TH output rows x W_O cols x Fb filters, one Cin block."""
+    it = iter(refs)
+    x_lo_ref = next(it)
+    x_hi_ref = next(it) if has_halo else None
+    w_ref = next(it)
+    b_ref = next(it) if has_bias else None
+    o_ref = next(it)
+    acc_ref = next(it)
+
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # Assemble the haloed tile: TH + K - 1 input rows, fetched once.
-    x_lo = x_lo_ref[0]                      # (TH, W_p, Cb)
-    if K > 1:
-        x_hi = x_hi_ref[0, :K - 1]          # halo rows from the next block
-        x = jnp.concatenate([x_lo, x_hi], axis=0)
-    else:
-        x = x_lo
+    # Assemble the haloed tile: TH*S + max(K-S, 0) input rows, fetched once.
+    x = x_lo_ref[0]                         # (TH*S, W_p, Cb)
+    if has_halo:
+        x = jnp.concatenate([x, x_hi_ref[0, :K - stride]], axis=0)
     w = w_ref[...]                          # (K, K, Cb, Fb) — stationary
     acc = acc_ref[...]
     cb = x.shape[-1]
     fb = w.shape[-1]
     acc_t = acc.dtype
-    # Triangular reuse: K*K shifted views of the SAME VMEM-resident tile.
+    rows = (TH - 1) * stride + 1
+    cols = (W_O - 1) * stride + 1
+    # Triangular reuse: K*K shifted (step-S) views of the SAME resident tile.
     for kh in range(K):
         for kw in range(K):
-            patch = x[kh:kh + TH, kw:kw + W_O, :]          # (TH, W_O, Cb)
+            patch = jax.lax.slice(x, (kh, kw, 0),
+                                  (kh + rows, kw + cols, cb),
+                                  (stride, stride, 1))  # (TH, W_O, Cb)
             tap = jnp.dot(
                 patch.reshape(TH * W_O, cb).astype(acc_t if acc_t == jnp.int32
                                                    else patch.dtype),
@@ -85,39 +111,71 @@ def _trim_conv2d_kernel(x_lo_ref, x_hi_ref, w_ref, o_ref, acc_ref, *,
 
     @pl.when(ci == n_cin - 1)
     def _flush():
-        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+        r = acc_ref[...]
+        # Fused epilogue: bias -> ReLU -> power-of-two requant, all while the
+        # int32/f32 psums are still accumulator-resident.
+        if has_bias:
+            r = r + b_ref[0]
+        if relu:
+            r = jnp.maximum(r, 0)
+        if requant_shift is not None:
+            r = jnp.clip(jnp.right_shift(r, requant_shift), 0, 255)
+        o_ref[0] = r.astype(o_ref.dtype)
 
 
 def trim_conv2d_pallas(x: jax.Array, w: jax.Array, *,
+                       stride: int = 1,
                        tile_h: int = 8, block_c: int = 128,
                        block_f: int = 128, padding: Optional[int] = None,
+                       bias: Optional[jax.Array] = None,
+                       relu: bool = False,
+                       requant_shift: Optional[int] = None,
                        out_dtype=None, interpret: bool = False) -> jax.Array:
-    """Stride-1 TrIM conv. x (N,H,W,C), w (K,K,C,F) -> (N,H_O,W_O,F).
+    """TrIM conv. x (N,H,W,C), w (K,K,C,F) -> (N,H_O,W_O,F).
 
-    The wrapper pads H/C/F up to tile multiples (zero padding is free w.r.t.
-    the convolution result) and slices the result back.
+    ``stride`` is static; only the strided H_O x W_O outputs are computed
+    (see DESIGN.md §2).  ``bias`` (F,), ``relu`` and ``requant_shift`` fuse
+    the layer epilogue into the final C_in flush; ``requant_shift`` (int
+    path only) applies the engine's power-of-two requantization and returns
+    uint8.  The wrapper pads H/C/F up to tile multiples (zero padding is
+    free w.r.t. the convolution result) and slices the result back.
     """
     N, H, W, C = x.shape
     K, K2, Cw, F = w.shape
     assert K == K2 and Cw == C, (x.shape, w.shape)
+    S = int(stride)
+    assert S >= 1
     p = K // 2 if padding is None else padding
     acc_dtype = _acc_dtype(x.dtype)
+    if requant_shift is not None:
+        assert acc_dtype == jnp.int32, "requant_shift needs the integer path"
+        out_dtype = jnp.uint8
     if out_dtype is None:
         out_dtype = acc_dtype if acc_dtype == jnp.int32 else x.dtype
 
     H_p, W_p = H + 2 * p, W + 2 * p
-    H_O, W_O = H_p - K + 1, W_p - K + 1
+    assert H_p >= K and W_p >= K, (x.shape, w.shape, p)
+    H_O, W_O = (H_p - K) // S + 1, (W_p - K) // S + 1
 
     TH = min(tile_h, H_O)
+    if K > S:
+        # The halo comes from a single following row block, so the block
+        # must be tall enough to contain it: K - S <= TH*S.  (Covers large
+        # kernels at small strides — e.g. K=11 stride-1 — and tiny maps.)
+        TH = max(TH, -(-(K - S) // S))
     n_ht = -(-H_O // TH)                    # ceil
     Cb = min(block_c, C)
     n_ci = -(-C // Cb)
     Fb = min(block_f, F)
     n_f = -(-F // Fb)
 
-    # Row padding: n_ht blocks of TH output rows need n_ht*TH + K - 1 input
-    # rows; one extra TH-row block makes the ht+1 halo index always valid.
-    rows_needed = (n_ht + 1) * TH
+    RB = TH * S                             # input rows per spatial block
+    halo = K - S
+    has_halo = halo > 0
+    # Row padding: n_ht blocks of RB input rows cover the strided sweep; one
+    # extra RB-row block (halo case) makes the ht+1 halo index always valid.
+    n_rb = n_ht + (1 if has_halo else 0)
+    rows_needed = -(-max(n_rb * RB, H_p) // RB) * RB
     x_pad = jnp.pad(x, ((0, 0), (p, rows_needed - H - p), (p, p),
                         (0, n_ci * Cb - C)))
     w_pad = jnp.pad(w, ((0, 0), (0, 0), (0, n_ci * Cb - C),
@@ -131,24 +189,33 @@ def trim_conv2d_pallas(x: jax.Array, w: jax.Array, *,
     def x_hi_idx(bt, f, c):
         return (bt // n_ht, bt % n_ht + 1, 0, c)
 
+    inputs = [x_pad]
+    in_specs = [pl.BlockSpec((1, RB, W_p, Cb), x_lo_idx)]
+    if has_halo:
+        inputs.append(x_pad)
+        in_specs.append(pl.BlockSpec((1, RB, W_p, Cb), x_hi_idx))
+    inputs.append(w_pad)
+    in_specs.append(pl.BlockSpec((K, K, Cb, Fb), lambda bt, f, c: (0, 0, c, f)))
+    if bias is not None:
+        assert bias.shape == (F,), bias.shape
+        b_pad = jnp.pad(bias.astype(acc_dtype),
+                        (0, n_f * Fb - F)).reshape(1, n_f * Fb)
+        inputs.append(b_pad)
+        in_specs.append(pl.BlockSpec((1, Fb), lambda bt, f, c: (0, f)))
+
     kernel = functools.partial(_trim_conv2d_kernel, K=K, TH=TH, W_O=W_O,
-                               n_cin=n_ci)
+                               n_cin=n_ci, stride=S, has_halo=has_halo,
+                               has_bias=bias is not None, relu=relu,
+                               requant_shift=requant_shift)
     out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, TH, W_p, Cb), x_lo_idx),
-            pl.BlockSpec((1, TH, W_p, Cb), x_hi_idx),
-            pl.BlockSpec((K, K, Cb, Fb), lambda bt, f, c: (0, 0, c, f)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, TH, W_O, Fb),
                                lambda bt, f, c: (bt // n_ht, bt % n_ht, 0, f)),
         out_shape=jax.ShapeDtypeStruct((N, n_ht * TH, W_O, n_f * Fb),
                                        out_dtype),
-        scratch_shapes=[
-            _VMEM((TH, W_O, Fb), acc_dtype) if _VMEM is not None else
-            pltpu.VMEM((TH, W_O, Fb), acc_dtype)  # pragma: no cover
-        ],
+        scratch_shapes=[_scratch((TH, W_O, Fb), acc_dtype)],
         interpret=interpret,
-    )(x_pad, x_pad, w_pad)
+    )(*inputs)
     return out[:, :H_O, :, :F]

@@ -38,7 +38,8 @@ from repro.distributed.steps import (StepConfig, batch_pspec, cache_pspec,
                                      make_decode_step, make_prefill_step,
                                      make_train_step, state_pspec,
                                      train_state_shapes, _to_shardings)
-from repro.launch.hlo_stats import (collective_stats, hbm_bytes_estimate,
+from repro.launch.hlo_stats import (collective_stats, cost_dict,
+                                    hbm_bytes_estimate,
                                     total_collective_bytes)
 from repro.launch.mesh import (HBM_BW, HBM_BYTES, ICI_BW, PEAK_FLOPS_BF16,
                                make_production_mesh)
@@ -127,7 +128,7 @@ def _cell_costs(cfg: ModelConfig, cell: ShapeCell, mesh,
     with activate_mesh(mesh), mesh:
         compiled = jax.jit(fn, in_shardings=in_sh,
                            out_shardings=out_sh).lower(*args).compile()
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled.cost_analysis())
     hlo = compiled.as_text()
     stats = collective_stats(hlo)
     out = {"flops": float(cost.get("flops", 0.0)),
@@ -217,7 +218,7 @@ def run_cell(arch: str, cell: ShapeCell, multi_pod: bool,
     except Exception as e:  # pragma: no cover
         record["memory"] = {"error": str(e)}
     try:
-        cost = compiled.cost_analysis()
+        cost = cost_dict(compiled.cost_analysis())
         record["cost"] = {k: float(v) for k, v in cost.items()
                           if isinstance(v, (int, float))
                           and k in ("flops", "bytes accessed",

@@ -20,7 +20,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import CNN_REGISTRY
 from repro.distributed.sharding import activate_mesh
 from repro.launch.dryrun import scaled_mesh
-from repro.launch.hlo_stats import (collective_stats, hbm_bytes_estimate,
+from repro.launch.hlo_stats import (collective_stats, cost_dict,
+                                    hbm_bytes_estimate,
                                     total_collective_bytes)
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 from repro.nn.conv import cnn_loss, init_cnn
@@ -33,6 +34,10 @@ def main() -> None:
     ap.add_argument("--arch", default="vgg16", choices=sorted(CNN_REGISTRY))
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--emulate-hw", action="store_true",
+                    help="FPGA-faithful strided layers: stride-1 sweep + "
+                         "decimation + unfused epilogue (§V) instead of the "
+                         "stride-aware fused kernel")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -43,7 +48,8 @@ def main() -> None:
     def train_step(state, batch):
         params, opt = state
         (loss, mets), g = jax.value_and_grad(
-            lambda p: cnn_loss(p, batch, cfg), has_aux=True)(params)
+            lambda p: cnn_loss(p, batch, cfg, emulate_hw=args.emulate_hw),
+            has_aux=True)(params)
         params, opt, _ = adamw_update(g, opt, params, 1e-3, AdamWConfig())
         return (params, opt), loss
 
@@ -68,14 +74,14 @@ def main() -> None:
                            out_shardings=(rep, None)).lower(
             (pshapes, oshapes), batch).compile()
     hlo = compiled.as_text()
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled.cost_analysis())
     flops = float(cost.get("flops", 0.0))
     byts = float(cost.get("bytes accessed", 0.0))
     coll = total_collective_bytes(hlo)
     conv_flops = 3 * sum(layer_ops(l) for l in cfg.layers) * args.batch
     rec = {
         "arch": args.arch, "shape": f"train_{H}x{W}_b{args.batch}",
-        "kind": "train", "chips": chips,
+        "kind": "train", "chips": chips, "emulate_hw": args.emulate_hw,
         "mesh": {ax: int(mesh.shape[ax]) for ax in mesh.axis_names},
         "compile_s": round(time.time() - t0, 1),
         "memory": hbm_bytes_estimate(compiled.memory_analysis()),
@@ -92,7 +98,9 @@ def main() -> None:
         },
     }
     os.makedirs(args.out, exist_ok=True)
-    tag = f"{args.arch}__cnn_train__{'multi' if args.multi_pod else 'single'}"
+    tag = (f"{args.arch}__cnn_train__"
+           f"{'multi' if args.multi_pod else 'single'}"
+           f"{'__emuhw' if args.emulate_hw else ''}")
     with open(os.path.join(args.out, tag + ".json"), "w") as f:
         json.dump(rec, f, indent=1)
     r = rec["roofline"]

@@ -1,4 +1,6 @@
-"""Layer stacks: periodic layer schedules + scan-over-layers execution.
+"""Layer stacks: periodic layer schedules + scan-over-layers execution,
+plus the CNN conv block (conv + fused epilogue + pool) for the paper's
+own workloads.
 
 Every assigned architecture is expressible as a *periodic* schedule of slots
 (mixer, ffn) repeated n_layers/period times:
@@ -294,3 +296,57 @@ def run_stack(params: Params, x: jax.Array, spec: StackSpec, *,
     (x, aux), new_cache = jax.lax.scan(
         scan_body, (x, jnp.zeros((), jnp.float32)), (params, cache))
     return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# CNN conv blocks (the paper's VGG-16 / AlexNet layers)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ConvBlockSpec:
+    """One TrIM conv layer: conv -> fused bias/ReLU[/requant] -> [pool].
+
+    ``emulate_hw`` replays the FPGA's strided-layer schedule (stride-1 sweep
+    + downstream decimation + unfused epilogue, §V) instead of the
+    stride-aware fused kernel — see ``ops.trim_conv2d``.
+    """
+    stride: int = 1
+    padding: Optional[int] = None
+    groups: int = 1
+    relu: bool = True
+    pool: bool = False               # 2x2/stride-2 max pool after the conv
+    requant_shift: Optional[int] = None
+    emulate_hw: bool = False
+
+
+def max_pool2x2(x: jax.Array) -> jax.Array:
+    """2x2/stride-2 max pool via reshape+max (VALID). Equivalent to
+    reduce_window but robustly reverse-differentiable under nested jit."""
+    B, H, W, C = x.shape
+    x = x[:, : H // 2 * 2, : W // 2 * 2]
+    x = x.reshape(B, H // 2, 2, W // 2, 2, C)
+    return x.max(axis=(2, 4))
+
+
+def conv_block(p: Params, x: jax.Array, spec: ConvBlockSpec) -> jax.Array:
+    """Run one conv block. p: {"kernel": (K,K,C/groups,F) [, "bias": (F,)]}.
+
+    The bias/ReLU/requant epilogue executes inside the Pallas kernel's flush
+    step (fused — no int32/f32 psum round-trip through HBM) unless
+    ``spec.emulate_hw`` asks for the hardware-faithful decimation schedule.
+    """
+    from repro.distributed.sharding import shard
+    from repro.kernels.ops import trim_conv2d
+
+    w = p["kernel"]
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        w = w.astype(x.dtype)
+    x = trim_conv2d(x, w, p.get("bias"), stride=spec.stride,
+                    padding=spec.padding, groups=spec.groups, relu=spec.relu,
+                    requant_shift=spec.requant_shift,
+                    emulate_hw=spec.emulate_hw)
+    x = shard(x, "batch", "img_h", "img_w", "cout")
+    if spec.pool:
+        x = max_pool2x2(x)
+    return x

@@ -1,17 +1,25 @@
 """CNN path — the paper's own workload (VGG-16 / AlexNet) built on the TrIM
 conv kernels.
 
-Float mode (training + inference): NHWC convs through ``ops.trim_conv2d``
-(Pallas TrIM kernel on TPU / interpret validation, lax.conv oracle on CPU),
-ReLU, max-pool, dense classifier.
+Float mode (training + inference): NHWC convs through ``nn.blocks.conv_block``
+(Pallas TrIM kernel on TPU / interpret validation, lax.conv oracle on CPU)
+with the bias+ReLU epilogue fused into the kernel flush, max-pool, dense
+classifier.
 
 Integer mode (the paper's inference datapath): uint8 activations x int8
 weights -> int32 psums, per-layer requantization — numerically identical to
 the bit-faithful engine in ``repro.core.trim.engine`` (tests assert this),
-but running through the TPU-native kernel.
+but running through the TPU-native kernel.  With calibrated
+``requant_shifts`` the ReLU+requant epilogue also fuses into the kernel, so
+int32 psums never round-trip through HBM (DESIGN.md §2).
+
+``CNNConfig.emulate_hw`` / the ``emulate_hw=`` overrides select the
+FPGA-faithful strided-layer schedule (stride-1 sweep + downstream
+decimation, §V) for honest Table I/II comparisons.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -20,8 +28,8 @@ import jax.numpy as jnp
 
 from repro.core.trim.model import (ALEXNET_LAYERS, VGG16_LAYERS,
                                    ConvLayerSpec)
-from repro.distributed.sharding import shard
 from repro.kernels.ops import trim_conv2d
+from repro.nn.blocks import ConvBlockSpec, conv_block, max_pool2x2
 from repro.nn.layers import Params, _normal
 
 
@@ -33,6 +41,7 @@ class CNNConfig:
     classifier: Tuple[int, ...]          # hidden dims of the FC head
     n_classes: int = 1000
     input_hw: Tuple[int, int] = (224, 224)
+    emulate_hw: bool = False             # FPGA-faithful strided-layer path
 
 
 VGG16_CNN = CNNConfig(
@@ -44,14 +53,8 @@ ALEXNET_CNN = CNNConfig(
     classifier=(4096, 4096), input_hw=(227, 227))
 
 
-def _pool(x: jax.Array, window: int = 2, stride: int = 2) -> jax.Array:
-    """2x2/stride-2 max pool via reshape+max (VALID). Equivalent to
-    reduce_window but robustly reverse-differentiable under nested jit."""
-    assert window == 2 and stride == 2
-    B, H, W, C = x.shape
-    x = x[:, : H // 2 * 2, : W // 2 * 2]
-    x = x.reshape(B, H // 2, 2, W // 2, 2, C)
-    return x.max(axis=(2, 4))
+#: 2x2/stride-2 max pool (moved to nn.blocks; alias kept for callers)
+_pool = max_pool2x2
 
 
 def init_cnn(key, cfg: CNNConfig, dtype=jnp.float32) -> Params:
@@ -80,20 +83,37 @@ def init_cnn(key, cfg: CNNConfig, dtype=jnp.float32) -> Params:
     return p
 
 
-def cnn_forward(params: Params, images: jax.Array, cfg: CNNConfig,
-                ) -> jax.Array:
-    """images (B, H, W, C) float -> logits (B, n_classes)."""
-    x = images
+def conv_block_specs(cfg: CNNConfig, c_in: Optional[int] = None,
+                     ) -> Tuple[ConvBlockSpec, ...]:
+    """Per-layer ConvBlockSpecs (fused bias/ReLU epilogue + pool schedule).
+
+    ``c_in`` is the actual input channel count of the first layer's input
+    (grouped AlexNet two-tower layers have running C = groups * layer.M)."""
+    specs = []
+    c = cfg.layers[0].M if c_in is None else c_in
     for i, l in enumerate(cfg.layers):
-        w = params["conv"][i]["kernel"].astype(x.dtype)
-        groups = x.shape[-1] // l.M     # AlexNet two-tower layers: 2
-        x = trim_conv2d(x, w, stride=l.stride, padding=l.padding,
-                        groups=groups)
-        x = x + params["conv"][i]["bias"].astype(x.dtype)
-        x = jax.nn.relu(x)
-        x = shard(x, "batch", "img_h", "img_w", "cout")
-        if i in cfg.pool_after:
-            x = _pool(x)
+        specs.append(ConvBlockSpec(
+            stride=l.stride, padding=l.padding, groups=c // l.M,
+            relu=True, pool=i in cfg.pool_after,
+            emulate_hw=cfg.emulate_hw))
+        c = l.N
+    return tuple(specs)
+
+
+def cnn_forward(params: Params, images: jax.Array, cfg: CNNConfig,
+                emulate_hw: Optional[bool] = None) -> jax.Array:
+    """images (B, H, W, C) float -> logits (B, n_classes).
+
+    Each conv layer runs as one fused conv_block (conv + bias + ReLU inside
+    the kernel flush); ``emulate_hw`` (default: cfg.emulate_hw) opts into
+    the FPGA's decimation schedule for strided layers."""
+    x = images
+    hw = cfg.emulate_hw if emulate_hw is None else emulate_hw
+    if hw != cfg.emulate_hw:
+        cfg = dataclasses.replace(cfg, emulate_hw=hw)
+    specs = conv_block_specs(cfg, c_in=x.shape[-1])
+    for i, spec in enumerate(specs):
+        x = conv_block(params["conv"][i], x, spec)
     x = x.reshape(x.shape[0], -1)
     for j, fc in enumerate(params["fc"]):
         x = x @ fc["kernel"].astype(x.dtype) + fc["bias"].astype(x.dtype)
@@ -103,8 +123,9 @@ def cnn_forward(params: Params, images: jax.Array, cfg: CNNConfig,
 
 
 def cnn_loss(params: Params, batch: Dict[str, jax.Array], cfg: CNNConfig,
+             emulate_hw: Optional[bool] = None,
              ) -> Tuple[jax.Array, Dict[str, Any]]:
-    logits = cnn_forward(params, batch["images"], cfg)
+    logits = cnn_forward(params, batch["images"], cfg, emulate_hw=emulate_hw)
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     ll = jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
     ce = -ll.mean()
@@ -132,30 +153,67 @@ def quantize_cnn(params: Params, cfg: CNNConfig,
     return qp, scales
 
 
-def cnn_forward_int8(qparams: Params, images_u8: jax.Array, cfg: CNNConfig,
-                     act_scales: Optional[Sequence[float]] = None,
-                     ) -> jax.Array:
-    """uint8 NHWC images through the integer TrIM datapath.
+def _int8_forward(qparams: Params, images_u8: jax.Array, cfg: CNNConfig,
+                  requant_shifts: Optional[Sequence[int]] = None,
+                  ) -> Tuple[jax.Array, List[jax.Array]]:
+    """Shared int8 datapath: returns (final int32 psums, dynamic shifts).
 
-    Each layer: uint8 x int8 -> int32 psums (exact), ReLU in int32, then
-    requantize to uint8 with a per-layer right-shift scale (power-of-two
-    requantization — what the paper's engine output stage does).
-    Returns the final int32 feature map (pre-classifier).
-    """
+    The shifts list collects the per-layer power-of-two requant shifts
+    actually used on the dynamic (uncalibrated) path — traced scalars, so
+    calibration must run this eagerly to concretize them."""
     x = images_u8
+    shifts: List[jax.Array] = []
     for i, l in enumerate(cfg.layers):
         w = qparams["conv"][i]["kernel"]
-        psum = trim_conv2d(x, w, stride=l.stride, padding=l.padding)
-        psum = jax.nn.relu(psum)                      # int32 relu
-        if i < len(cfg.layers) - 1:
+        groups = x.shape[-1] // w.shape[-2]  # AlexNet two-tower layers: 2
+        last = i == len(cfg.layers) - 1
+        if requant_shifts is not None and not last:
+            # Calibrated shift: conv + ReLU + requant in one kernel pass.
+            x = trim_conv2d(x, w, stride=l.stride, padding=l.padding,
+                            groups=groups, relu=True,
+                            requant_shift=int(requant_shifts[i]),
+                            emulate_hw=cfg.emulate_hw)
+        else:
+            psum = trim_conv2d(x, w, stride=l.stride, padding=l.padding,
+                               groups=groups, relu=True,
+                               emulate_hw=cfg.emulate_hw)
+            if last:
+                return psum, shifts
             # power-of-two requantize back to uint8 for the next layer
             shift = jnp.maximum(
                 jnp.ceil(jnp.log2(jnp.maximum(
                     psum.max().astype(jnp.float32), 1.0) / 255.0)), 0
             ).astype(jnp.int32)
+            shifts.append(shift)
             x = jnp.clip(psum >> shift, 0, 255).astype(jnp.uint8)
-        else:
-            return psum
         if i in cfg.pool_after:
             x = _pool(x)
-    return x
+    return x, shifts
+
+
+def cnn_forward_int8(qparams: Params, images_u8: jax.Array, cfg: CNNConfig,
+                     act_scales: Optional[Sequence[float]] = None,
+                     requant_shifts: Optional[Sequence[int]] = None,
+                     ) -> jax.Array:
+    """uint8 NHWC images through the integer TrIM datapath.
+
+    Each layer: uint8 x int8 -> int32 psums (exact), ReLU in int32 (fused
+    into the kernel flush), then requantize to uint8 with a per-layer
+    right-shift scale (power-of-two requantization — what the paper's
+    engine output stage does).  When ``requant_shifts`` supplies calibrated
+    per-layer shifts the whole epilogue fuses into the conv kernel and the
+    int32 psums never reach HBM; otherwise the shift is derived from the
+    running psum maximum (data-dependent, so it runs post-kernel).
+    Returns the final int32 feature map (pre-classifier).
+    """
+    return _int8_forward(qparams, images_u8, cfg, requant_shifts)[0]
+
+
+def calibrate_requant_shifts(qparams: Params, sample_u8: jax.Array,
+                             cfg: CNNConfig) -> List[int]:
+    """Derive static per-layer power-of-two requant shifts from a sample
+    batch (the engine's offline output-stage calibration).  The returned
+    shifts make ``cnn_forward_int8(..., requant_shifts=...)`` fully fused.
+    Runs the dynamic datapath eagerly (not under jit) to concretize the
+    per-layer shifts."""
+    return [int(s) for s in _int8_forward(qparams, sample_u8, cfg)[1]]

@@ -26,7 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import current_mesh_context
+from repro.distributed.sharding import (current_mesh_context,
+                                        shard_map_compat)
 
 NEG_INF = -1e30
 
@@ -103,7 +104,7 @@ def seqshard_flash_decode(q: jax.Array, k_cache: jax.Array,
     sizes = [mesh.shape[a] for a in axes]
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map_compat, mesh=mesh,
         in_specs=(P(), P(None, axes), P(None, axes), P(), P(), P(), P()),
         out_specs=(P(), P(None, axes), P(None, axes)),
         check_vma=False, axis_names=frozenset(axes))

@@ -1,4 +1,5 @@
-"""Model compositions: CausalLM (dense/MoE/SSM/hybrid/VLM-stub) and EncDecLM.
+"""Model compositions: CausalLM (dense/MoE/SSM/hybrid/VLM-stub), EncDecLM,
+and ConvNet (the paper's own CNN workloads on the TrIM conv path).
 
 Pure-functional: a ``Model`` object holds only static structure (the config,
 the derived StackSpec(s)); parameters/caches are explicit pytrees. ``tp`` is
@@ -308,7 +309,55 @@ class EncDecLM:
         return self._logits(params, x)[:, 0], cache
 
 
-def build_model(cfg: ModelConfig, tp: int = 1):
+@dataclass(frozen=True)
+class ConvNet:
+    """The paper's CNN workloads (VGG-16 / AlexNet) on the TrIM conv path.
+
+    ``emulate_hw`` selects the FPGA-faithful decimation schedule for strided
+    layers (stride-1 sweep + downstream epilogue) instead of the stride-aware
+    fused kernel — see ``kernels.ops.trim_conv2d`` and DESIGN.md §2.
+    """
+
+    cfg: "CNNConfig"
+    emulate_hw: Optional[bool] = None    # None: follow cfg.emulate_hw
+
+    def _cfg(self) -> "CNNConfig":
+        import dataclasses as _dc
+        if self.emulate_hw is None or self.emulate_hw == self.cfg.emulate_hw:
+            return self.cfg
+        return _dc.replace(self.cfg, emulate_hw=self.emulate_hw)
+
+    def init(self, key) -> Params:
+        from repro.nn.conv import init_cnn
+        return init_cnn(key, self.cfg)
+
+    def forward(self, params: Params, images: jax.Array) -> jax.Array:
+        from repro.nn.conv import cnn_forward
+        return cnn_forward(params, images, self._cfg())
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]):
+        from repro.nn.conv import cnn_loss
+        return cnn_loss(params, batch, self._cfg())
+
+    def quantize(self, params: Params):
+        from repro.nn.conv import quantize_cnn
+        return quantize_cnn(params, self.cfg)
+
+    def forward_int8(self, qparams: Params, images_u8: jax.Array,
+                     requant_shifts=None) -> jax.Array:
+        from repro.nn.conv import cnn_forward_int8
+        return cnn_forward_int8(qparams, images_u8, self._cfg(),
+                                requant_shifts=requant_shifts)
+
+    def calibrate(self, qparams: Params, sample_u8: jax.Array):
+        from repro.nn.conv import calibrate_requant_shifts
+        return calibrate_requant_shifts(qparams, sample_u8, self._cfg())
+
+
+def build_model(cfg, tp: int = 1, emulate_hw: Optional[bool] = None):
+    from repro.nn.conv import CNNConfig
+    if isinstance(cfg, CNNConfig):
+        return ConvNet(cfg, emulate_hw=emulate_hw)
     if cfg.family == "encdec":
         return EncDecLM(cfg, tp)
     return CausalLM(cfg, tp)

@@ -1,0 +1,70 @@
+"""Thin deterministic stand-in for `hypothesis` when it is not installed.
+
+Loaded by conftest.py into ``sys.modules["hypothesis"]`` only when the real
+package is missing (e.g. a clean container).  It implements just the API
+surface the test-suite uses — ``given``, ``settings``, ``strategies.integers``
+/ ``sampled_from`` / ``booleans`` — and replays each property test over a
+fixed, seeded sample instead of hypothesis' adaptive search.  CI installs
+real hypothesis (requirements-dev.txt) and gets the full property-based
+suite; this shim only keeps the tier-1 lane collectable and meaningful in
+minimal environments.
+
+The per-test example count is capped by REPRO_SHIM_MAX_EXAMPLES (default 5)
+so the fallback lane stays fast.
+"""
+from __future__ import annotations
+
+
+import os
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:  # mirrors `hypothesis.strategies` as used by the suite
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        seq = list(elements)
+        return _Strategy(lambda rng: rng.choice(seq))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def settings(max_examples: int = 10, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        def wrapper():
+            cap = int(os.environ.get("REPRO_SHIM_MAX_EXAMPLES", "5"))
+            n = min(getattr(wrapper, "_max_examples", 10), cap)
+            # str seeding is deterministic and PYTHONHASHSEED-independent
+            rng = random.Random(f"{fn.__module__}.{fn.__name__}")
+            for _ in range(n):
+                fn(**{k: s.example(rng) for k, s in strats.items()})
+        # Plain zero-arg wrapper on purpose: functools.wraps would copy
+        # __wrapped__ and pytest would then treat the drawn parameters as
+        # fixtures.  Copy only the identity attributes.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # mimic real hypothesis' attribute (pytest plugins introspect it)
+        wrapper.hypothesis = type("hypothesis", (), {"inner_test": fn})()
+        return wrapper
+    return deco

@@ -1,8 +1,26 @@
+import importlib.util
 import os
+import pathlib
+import sys
 
 # Tests run on the single host device; the 512-device dry-run sets its own
 # XLA_FLAGS before importing jax (and is exercised via subprocess here).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Property tests use hypothesis when available; in minimal environments
+# (no hypothesis wheel baked in) fall back to the deterministic shim so the
+# suite still collects and the property bodies still run over a fixed
+# sample.  CI installs real hypothesis via requirements-dev.txt.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        pathlib.Path(__file__).with_name("_hypothesis_shim.py"))
+    _shim = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_shim)
+    sys.modules["hypothesis"] = _shim
+    sys.modules["hypothesis.strategies"] = _shim.strategies
 
 import numpy as np
 import pytest

@@ -24,7 +24,9 @@ def run_py(code: str, devices: int = 8, timeout: int = 420) -> str:
     env = dict(os.environ,
                XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
                PYTHONPATH=os.path.join(REPO, "src"))
-    env.pop("JAX_PLATFORMS", None)
+    # fake host devices need the CPU platform; never let the child probe
+    # TPU (libtpu-installed, TPU-less containers hang in TPU client init)
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                          capture_output=True, text=True, env=env,
                          timeout=timeout)
@@ -184,7 +186,7 @@ def test_dryrun_scaled_cell():
     with tempfile.TemporaryDirectory() as d:
         env = dict(os.environ, REPRO_DRYRUN_DEVICES="8",
                    PYTHONPATH=os.path.join(REPO, "src"))
-        env.pop("JAX_PLATFORMS", None)
+        env["JAX_PLATFORMS"] = "cpu"
         out = subprocess.run(
             [sys.executable, "-m", "repro.launch.dryrun",
              "--arch", "mamba2-130m", "--shape", "decode_32k",

@@ -203,3 +203,202 @@ def test_conv2d_grouped():
     b = trim_conv2d(x, w, groups=2, force_pallas=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
                                atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# stride-aware fused conv2d (DESIGN.md §2): parity vs the oracle for
+# stride x kernel x dtype x epilogue, computing only the strided outputs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride", [1, 2, 4])
+@pytest.mark.parametrize("K", [1, 3])
+@pytest.mark.parametrize("fused", [False, True], ids=["plain", "fused"])
+def test_conv2d_strided_float(stride, K, fused):
+    key = jax.random.PRNGKey(stride * 10 + K)
+    x = jax.random.normal(key, (2, 13, 13, 4), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, K, 4, 8),
+                          jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(key, 2), (8,), jnp.float32)
+    out = trim_conv2d_pallas(x, w, stride=stride,
+                             bias=b if fused else None, relu=fused,
+                             tile_h=4, block_c=4, block_f=8, interpret=True)
+    want = ref.conv2d_ref(x, w, stride=stride)
+    if fused:
+        want = jnp.maximum(want + b, 0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("stride", [1, 2, 4])
+@pytest.mark.parametrize("K", [1, 3])
+@pytest.mark.parametrize("fused", [False, True], ids=["plain", "fused"])
+def test_conv2d_strided_int_exact(stride, K, fused):
+    """uint8 x int8 -> int32 stays bit-exact through the strided kernel,
+    with and without the fused bias/ReLU epilogue."""
+    key = jax.random.PRNGKey(stride * 100 + K)
+    x = jax.random.randint(key, (1, 13, 13, 4), 0, 255, jnp.uint8)
+    w = jax.random.randint(jax.random.fold_in(key, 1), (K, K, 4, 8),
+                           -127, 127, jnp.int8)
+    b = jax.random.randint(jax.random.fold_in(key, 2), (8,),
+                           -1000, 1000, jnp.int32)
+    out = trim_conv2d_pallas(x, w, stride=stride,
+                             bias=b if fused else None, relu=fused,
+                             tile_h=4, block_c=4, block_f=8, interpret=True)
+    want = ref.conv2d_ref(x, w, stride=stride)
+    if fused:
+        want = jnp.maximum(want + b, 0)
+    assert out.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_conv2d_fused_requant_uint8():
+    """Fused power-of-two requantization (the engine's output stage) returns
+    uint8 bit-identical to the unfused relu >> shift >> clip pipeline."""
+    key = jax.random.PRNGKey(5)
+    x = jax.random.randint(key, (1, 12, 12, 4), 0, 255, jnp.uint8)
+    w = jax.random.randint(jax.random.fold_in(key, 1), (3, 3, 4, 8),
+                           -127, 127, jnp.int8)
+    out = trim_conv2d_pallas(x, w, stride=2, relu=True, requant_shift=9,
+                             tile_h=4, block_c=4, block_f=8, interpret=True)
+    want = jnp.clip(jnp.right_shift(
+        jnp.maximum(ref.conv2d_ref(x, w, stride=2), 0), 9), 0, 255)
+    assert out.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(want, np.uint8))
+
+
+def test_conv2d_alexnet_cl1_shape():
+    """AlexNet CL1 structure (K=11, stride 4, no padding) on a reduced map:
+    the hard case for the halo/index-map math (K >> stride)."""
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (1, 23, 23, 3), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (11, 11, 3, 8),
+                          jnp.float32)
+    out = trim_conv2d_pallas(x, w, stride=4, padding=0, tile_h=2,
+                             block_c=3, block_f=8, interpret=True)
+    want = ref.conv2d_ref(x, w, stride=4, padding=0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_conv2d_emulate_hw_matches_fused():
+    """The FPGA-faithful decimation schedule (§V) and the stride-aware
+    kernel agree: same outputs, different work."""
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (1, 16, 16, 4))
+    w = jax.random.normal(key, (3, 3, 4, 8))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (8,))
+    hw = trim_conv2d(x, w, b, stride=2, relu=True, force_pallas=True,
+                     emulate_hw=True)
+    fused = trim_conv2d(x, w, b, stride=2, relu=True, force_pallas=True)
+    want = jnp.maximum(ref.conv2d_ref(x, w, stride=2) + b, 0)
+    np.testing.assert_allclose(np.asarray(hw), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_conv2d_scratch_fallback_off_tpu(monkeypatch):
+    """Regression: when the pltpu import fails (non-TPU jaxlib), the kernel
+    must fall back to a backend-neutral scratch, not crash on pltpu.VMEM."""
+    import importlib
+    m = importlib.import_module("repro.kernels.trim_conv2d")
+    monkeypatch.setattr(m, "pltpu", None)
+    monkeypatch.setattr(m, "_VMEM", None)
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (1, 10, 10, 4))
+    w = jax.random.normal(key, (3, 3, 4, 8))
+    out = m.trim_conv2d_pallas(x, w, stride=2, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.conv2d_ref(x, w, stride=2)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_conv2d_grouped_fused_bias():
+    """Grouped conv (AlexNet two-tower) with the fused epilogue: per-group
+    bias slices land on the right filters."""
+    key = jax.random.PRNGKey(8)
+    x = jax.random.normal(key, (1, 10, 10, 8))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 4, 6))
+    b = jax.random.normal(jax.random.fold_in(key, 2), (6,))
+    a = trim_conv2d(x, w, b, groups=2, relu=True)
+    p = trim_conv2d(x, w, b, groups=2, relu=True, force_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(p), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_cnn_int8_fused_requant_parity():
+    """Calibrated fused-requant int8 forward == dynamic-shift forward,
+    bit-exact (the whole epilogue moves into the kernel flush)."""
+    from repro.configs import CNN_SMOKES
+    from repro.nn.conv import (calibrate_requant_shifts, cnn_forward_int8,
+                               init_cnn, quantize_cnn)
+    cfg = CNN_SMOKES["vgg16"]
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    qp, _ = quantize_cnn(params, cfg)
+    u8 = jax.random.randint(jax.random.PRNGKey(1), (1, 16, 16, 3), 0, 255,
+                            jnp.uint8)
+    dyn = cnn_forward_int8(qp, u8, cfg)
+    shifts = calibrate_requant_shifts(qp, u8, cfg)
+    fused = cnn_forward_int8(qp, u8, cfg, requant_shifts=shifts)
+    np.testing.assert_array_equal(np.asarray(dyn), np.asarray(fused))
+
+
+def test_conv2d_halo_taller_than_block():
+    """Regression: K - stride > tile_h * stride (e.g. K=11 stride 1 with the
+    default tile_h, or tiny maps where H_O < K) must auto-grow the row block
+    instead of slicing past the assembled tile."""
+    key = jax.random.PRNGKey(12)
+    x = jax.random.normal(key, (1, 16, 16, 3), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (11, 11, 3, 4),
+                          jnp.float32)
+    out = trim_conv2d_pallas(x, w, padding=0, tile_h=8, block_c=3,
+                             block_f=4, interpret=True)  # halo 10 > RB 8
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.conv2d_ref(x, w, padding=0)),
+        rtol=2e-5, atol=2e-5)
+    # tiny map: H_O = 1 forces TH = 1 < K - 1
+    x2 = jax.random.normal(key, (1, 3, 3, 2), jnp.float32)
+    w2 = jax.random.normal(jax.random.fold_in(key, 2), (3, 3, 2, 4),
+                           jnp.float32)
+    out2 = trim_conv2d_pallas(x2, w2, padding=0, tile_h=8, block_c=2,
+                              block_f=4, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out2), np.asarray(ref.conv2d_ref(x2, w2, padding=0)),
+        rtol=2e-5, atol=2e-5)
+    # the emulate_hw decimate arm on an AlexNet-CL1-like layer hits the
+    # stride-1 sweep with the default tile_h
+    x3 = jax.random.normal(key, (1, 23, 23, 3))
+    w3 = jax.random.normal(jax.random.fold_in(key, 3), (11, 11, 3, 4))
+    hw = trim_conv2d(x3, w3, stride=4, padding=0, force_pallas=True,
+                     emulate_hw=True)
+    np.testing.assert_allclose(
+        np.asarray(hw), np.asarray(ref.conv2d_ref(x3, w3, stride=4,
+                                                  padding=0)),
+        rtol=2e-5, atol=2e-5)
+
+
+def test_cnn_int8_grouped_layers():
+    """Regression: the int8 datapath derives groups from the running channel
+    count (AlexNet two-tower layers), incl. the calibrated fused path."""
+    from repro.core.trim.model import ConvLayerSpec
+    from repro.nn.conv import (CNNConfig, calibrate_requant_shifts,
+                               cnn_forward_int8)
+    cfg = CNNConfig(
+        "two-tower-smoke",
+        layers=(ConvLayerSpec("CL1", 8, 8, 3, 4, 8),
+                ConvLayerSpec("CL2", 8, 8, 3, 4, 8)),   # 8 chans / M=4 -> 2
+        pool_after=(), classifier=(8,), n_classes=4, input_hw=(8, 8))
+    key = jax.random.PRNGKey(13)
+    qp = {"conv": [
+        {"kernel": jax.random.randint(key, (3, 3, 4, 8), -127, 127,
+                                      jnp.int8)},
+        {"kernel": jax.random.randint(jax.random.fold_in(key, 1),
+                                      (3, 3, 4, 8), -127, 127, jnp.int8)}]}
+    u8 = jax.random.randint(jax.random.fold_in(key, 2), (1, 8, 8, 4), 0,
+                            255, jnp.uint8)
+    dyn = cnn_forward_int8(qp, u8, cfg)
+    assert dyn.dtype == jnp.int32 and dyn.shape == (1, 8, 8, 8)
+    shifts = calibrate_requant_shifts(qp, u8, cfg)
+    fused = cnn_forward_int8(qp, u8, cfg, requant_shifts=shifts)
+    np.testing.assert_array_equal(np.asarray(dyn), np.asarray(fused))

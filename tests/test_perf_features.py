@@ -110,7 +110,9 @@ def test_seqshard_decode_distributed():
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8",
                PYTHONPATH=os.path.join(REPO, "src"))
-    env.pop("JAX_PLATFORMS", None)
+    # fake host devices need the CPU platform; never let the child probe
+    # TPU (libtpu-installed, TPU-less containers hang in TPU client init)
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                          capture_output=True, text=True, env=env,
                          timeout=560)
@@ -137,7 +139,9 @@ def test_fsdp_pspec_shards_params_over_dp():
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8",
                PYTHONPATH=os.path.join(REPO, "src"))
-    env.pop("JAX_PLATFORMS", None)
+    # fake host devices need the CPU platform; never let the child probe
+    # TPU (libtpu-installed, TPU-less containers hang in TPU client init)
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                          capture_output=True, text=True, env=env,
                          timeout=360)
@@ -189,7 +193,7 @@ def test_dryrun_cnn_scaled():
     with tempfile.TemporaryDirectory() as d:
         env = dict(os.environ, REPRO_DRYRUN_DEVICES="8",
                    PYTHONPATH=os.path.join(REPO, "src"))
-        env.pop("JAX_PLATFORMS", None)
+        env["JAX_PLATFORMS"] = "cpu"
         out = subprocess.run(
             [sys.executable, "-m", "repro.launch.dryrun_cnn",
              "--arch", "vgg16", "--batch", "32", "--out", d],
