@@ -1,0 +1,92 @@
+"""Benchmark regression gate: fresh BENCH_kernels.json vs the baseline.
+
+CI's bench-gate lane re-runs ``benchmarks.run kernels_fused`` and calls
+
+  python -m benchmarks.compare --baseline BENCH_baseline.json
+
+failing (exit 1) when any fused timing regresses by more than the
+threshold (default 1.3x) against the committed baseline.  Records present
+only on one side are reported but do not fail the gate (new shapes land
+with the PR that adds them; the baseline is refreshed deliberately).
+
+Metric direction is automatic: ``us_*`` metrics are lower-is-better
+wall-clock timings, ``speedup`` is higher-is-better.  Absolute ``us_*``
+comparisons are only meaningful against a baseline from the same runner
+class — refresh BENCH_baseline.json when the fleet (or a TPU runner)
+changes; ``--metric speedup`` compares the fused arm against the
+decimate arm measured in the *same* run, so it is machine-neutral.
+
+Exit codes: 0 ok, 1 regression, 2 usage/input error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_records(path):
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: r for r in data.get("records", [])}
+
+
+def compare(baseline, current, metric, threshold):
+    """Return (failures, lines) comparing current vs baseline records."""
+    lower_is_better = metric != "speedup"
+    failures = []
+    lines = []
+    for name in sorted(set(baseline) | set(current)):
+        if name not in baseline:
+            lines.append(f"NEW       {name}: no baseline entry (ok)")
+            continue
+        if name not in current:
+            lines.append(f"MISSING   {name}: not in current run (ok)")
+            continue
+        base = float(baseline[name][metric])
+        cur = float(current[name][metric])
+        if lower_is_better:
+            ratio = cur / base if base > 0 else float("inf")
+        else:
+            ratio = base / cur if cur > 0 else float("inf")
+        status = "OK"
+        if ratio > threshold:
+            status = "REGRESSED"
+            failures.append(name)
+        msg = f"{status:<10}{name}: {metric} {base:.1f} -> {cur:.1f}"
+        lines.append(msg + f" ({ratio:.2f}x worse, gate {threshold:.2f}x)")
+    return failures, lines
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--current", default="BENCH_kernels.json")
+    ap.add_argument("--metric", default="us_fused")
+    default_thresh = float(os.environ.get("BENCH_GATE_THRESHOLD", "1.3"))
+    ap.add_argument("--threshold", type=float, default=default_thresh)
+    args = ap.parse_args(argv)
+    for path in (args.baseline, args.current):
+        if not os.path.exists(path):
+            print(f"bench-gate: missing {path}", file=sys.stderr)
+            return 2
+    baseline = load_records(args.baseline)
+    current = load_records(args.current)
+    if not baseline or not current:
+        print("bench-gate: empty record set", file=sys.stderr)
+        return 2
+    failures, lines = compare(baseline, current, args.metric, args.threshold)
+    for line in lines:
+        print(f"bench-gate: {line}")
+    if failures:
+        names = ", ".join(failures)
+        print(f"bench-gate: FAIL — regressions in: {names}")
+        return 1
+    print("bench-gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

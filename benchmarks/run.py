@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import glob
 import json
-import math
 import os
 import sys
 import time
@@ -31,17 +30,15 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core.trim.explore import FIG7_GRID, derive_fpga_parameters, explore
+from repro.core.trim.explore import derive_fpga_parameters, explore
 from repro.core.trim.model import (ALEXNET_BATCH, ALEXNET_LAYERS,
                                    PAPER_ENGINE, PAPER_TABLE1_TRIM,
                                    PAPER_TABLE1_TRIM_TOTALS,
-                                   PAPER_TABLE1_EYERISS_TOTALS,
                                    PAPER_TABLE2_TRIM,
-                                   PAPER_TABLE2_TRIM_TOTALS,
-                                   PAPER_TABLE2_EYERISS_TOTALS, VGG16_BATCH,
+                                   PAPER_TABLE2_TRIM_TOTALS, VGG16_BATCH,
                                    VGG16_LAYERS, eyeriss_rs_memory_accesses,
-                                   layer_gops, network_gops, network_report,
-                                   pe_utilization, trim_memory_accesses,
+                                   layer_gops, network_gops, pe_utilization,
+                                   trim_memory_accesses,
                                    ws_im2col_memory_accesses)
 
 DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
@@ -129,7 +126,7 @@ def bench_baselines() -> None:
 
 def bench_engine() -> None:
     from repro.core.trim.engine import TrimEngine, reference_conv_layer
-    from repro.core.trim.model import ConvLayerSpec, TrimEngineConfig
+    from repro.core.trim.model import TrimEngineConfig
     rng = np.random.default_rng(0)
     x = rng.integers(0, 256, (8, 28, 28), dtype=np.uint8)
     w = rng.integers(-128, 128, (8, 8, 3, 3)).astype(np.int8)
@@ -189,6 +186,11 @@ def bench_kernels_fused() -> None:
         ("alexnet_cl1", (1, 227, 227, 3), (11, 11, 3, 96), 4, 0),
         ("alexnet_cl2", (1, 27, 27, 48), (5, 5, 48, 256), 1, 2),
         ("vgg16_cl8", (1, 28, 28, 256), (3, 3, 256, 512), 1, 1),
+        # wide feature maps (detection/segmentation-style backbones):
+        # W_O > the VGG/AlexNet range, exercising the width-tiled kernel
+        # on TPU (DESIGN.md §4); the CPU arm times the oracle as usual.
+        ("wide512_s1", (1, 96, 512, 64), (3, 3, 64, 64), 1, 1),
+        ("wide512_s2", (1, 96, 1024, 64), (3, 3, 64, 64), 2, 1),
     ]
     backend = jax.default_backend()
     records: List[Dict] = []

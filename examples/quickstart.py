@@ -17,7 +17,7 @@ def demo_trim_dataflow():
     from repro.core.trim.slice_sim import simulate_slice, padding_overhead
     from repro.core.trim.engine import TrimEngine, reference_conv_layer
     from repro.core.trim.model import (VGG16_LAYERS, PAPER_ENGINE,
-                                       layer_gops, network_gops)
+                                       network_gops)
 
     print("=== 1. TrIM dataflow (the paper) ===")
     rng = np.random.default_rng(0)

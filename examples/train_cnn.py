@@ -16,8 +16,7 @@ import numpy as np
 
 from repro.configs import CNN_SMOKES
 from repro.data import SyntheticImageDataset
-from repro.nn.conv import (cnn_forward, cnn_forward_int8, cnn_loss, init_cnn,
-                           quantize_cnn)
+from repro.nn.conv import cnn_forward_int8, cnn_loss, init_cnn, quantize_cnn
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
 

@@ -1,7 +1,7 @@
 """alexnet — the paper's second benchmark CNN (Table II): exercises the
 large-kernel tiling path (11x11 and 5x5 kernels split into 3x3 tiles, §V).
 """
-from repro.core.trim.model import ALEXNET_LAYERS, ConvLayerSpec
+from repro.core.trim.model import ConvLayerSpec
 from repro.nn.conv import ALEXNET_CNN, CNNConfig
 
 CONFIG = ALEXNET_CNN

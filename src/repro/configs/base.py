@@ -6,7 +6,7 @@ device-count env ordering.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Any, Dict, Optional, Tuple
 
 import jax.numpy as jnp

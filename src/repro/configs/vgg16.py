@@ -3,7 +3,7 @@
 CNN-family config: selectable via --arch vgg16 in the CNN examples and
 benchmarks; runs through the TrIM conv kernels / the bit-faithful engine.
 """
-from repro.core.trim.model import VGG16_LAYERS, ConvLayerSpec
+from repro.core.trim.model import ConvLayerSpec
 from repro.nn.conv import VGG16_CNN, CNNConfig
 
 CONFIG = VGG16_CNN

@@ -20,17 +20,12 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.trim.model import (
-    ConvLayerSpec,
-    TrimEngineConfig,
-    PAPER_ENGINE,
-    trim_input_fetches,
-    _kernel_tiles,
-)
+from repro.core.trim.model import (ConvLayerSpec, TrimEngineConfig,
+                                   PAPER_ENGINE, trim_input_fetches)
 
 
 # ---------------------------------------------------------------------------

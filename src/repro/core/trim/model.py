@@ -23,7 +23,7 @@ Modelling notes (divergences from the paper are *documented*, not hidden):
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 # ---------------------------------------------------------------------------

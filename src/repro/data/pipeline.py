@@ -13,7 +13,6 @@ the examples/tests rely on.
 """
 from __future__ import annotations
 
-import hashlib
 from dataclasses import dataclass
 from typing import Dict, Iterator, Optional, Tuple
 
@@ -21,11 +20,8 @@ import numpy as np
 
 
 def _philox(seed: int, counters: np.ndarray) -> np.ndarray:
-    """Counter-based uniform uint32s via numpy Philox (stateless)."""
-    bg = np.random.Philox(key=seed)
-    # use counter as the stream offset: hash counters into 64-bit offsets
-    rng = np.random.Generator(bg)
-    # simpler: fold counters through a splitmix-style mix (vectorized)
+    """Counter-based uniform uint32s (stateless splitmix-style mix)."""
+    # fold counters through a splitmix-style mix (vectorized, stateless)
     x = counters.astype(np.uint64) + np.uint64(
         (seed * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF)
     x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)

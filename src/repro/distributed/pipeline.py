@@ -16,7 +16,7 @@ each stage's compute).
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -44,8 +44,6 @@ def pipeline_run(stage_fn: Callable[[Any, jax.Array], jax.Array],
     n_stages = mesh.shape[axis]
     n_micro = x_micro.shape[0]
     T = n_micro + n_stages - 1
-    others = frozenset(a for a in mesh.axis_names if a != axis)
-
     params_spec = jax.tree.map(lambda _: P(axis), stage_params)
 
     @functools.partial(

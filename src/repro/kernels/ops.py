@@ -5,9 +5,11 @@ pure-jnp oracles (``ref.py``) for speed, or run the Pallas kernels in
 interpret mode when ``force_pallas=True`` (that is what the kernel tests do
 to validate the kernel bodies themselves).
 
-The conv path is stride-aware end to end: the kernel computes only the
-strided H_O x W_O outputs and can fuse the layer epilogue (bias + ReLU +
-power-of-two requantization) into its final-C_in flush.  ``emulate_hw=True``
+The conv path is stride-aware and width-tiled end to end: the kernel
+computes only the strided H_O x W_O outputs, splits W_O into VMEM-sized
+column tiles (``tile_w``; auto-picked by default) and can fuse the layer
+epilogue (bias + ReLU + power-of-two or arbitrary-scale multiplier+shift
+requantization) into its final-C_in flush.  ``emulate_hw=True``
 opts back into the hardware's behaviour for strided layers (§V, AlexNet
 CL1: full stride-1 sweep, downstream decimation) so model/benchmark
 comparisons against Tables I-II stay honest — on every substrate, including
@@ -16,12 +18,13 @@ the CPU oracle.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.requant import requant_mult_shift
 from repro.kernels.trim_conv1d import trim_conv1d_pallas
 from repro.kernels.trim_conv2d import trim_conv2d_pallas
 from repro.kernels.trim_matmul import trim_matmul_pallas
@@ -32,8 +35,14 @@ def _on_tpu() -> bool:
 
 
 def _epilogue_jnp(out: jax.Array, bias: Optional[jax.Array], relu: bool,
-                  requant_shift: Optional[int]) -> jax.Array:
-    """Unfused epilogue (CPU oracle + emulate_hw decimation paths)."""
+                  requant_shift: Optional[int],
+                  requant: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  ) -> jax.Array:
+    """Unfused epilogue (CPU oracle + emulate_hw decimation paths).
+
+    Bit-identical to the fused kernel flush: the power-of-two path shifts
+    without rounding (the engine's output stage) and the multiplier+shift
+    path reuses ``kernels.requant.requant_mult_shift``."""
     if bias is not None:
         out = out + bias.astype(out.dtype)
     if relu:
@@ -41,18 +50,24 @@ def _epilogue_jnp(out: jax.Array, bias: Optional[jax.Array], relu: bool,
     if requant_shift is not None:
         out = jnp.clip(jnp.right_shift(out, requant_shift),
                        0, 255).astype(jnp.uint8)
+    if requant is not None:
+        out = requant_mult_shift(out, requant[0],
+                                 requant[1]).astype(jnp.uint8)
     return out
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding",
                                              "force_pallas", "tile_h",
-                                             "block_c", "block_f", "groups",
-                                             "relu", "requant_shift",
-                                             "emulate_hw"))
+                                             "tile_w", "block_c", "block_f",
+                                             "groups", "relu",
+                                             "requant_shift", "emulate_hw"))
 def trim_conv2d(x: jax.Array, w: jax.Array,
-                bias: Optional[jax.Array] = None, *, stride: int = 1,
+                bias: Optional[jax.Array] = None,
+                requant: Optional[Tuple[jax.Array, jax.Array]] = None, *,
+                stride: int = 1,
                 padding: Optional[int] = None, force_pallas: bool = False,
-                tile_h: int = 8, block_c: int = 128, block_f: int = 128,
+                tile_h: int = 8, tile_w: Optional[int] = None,
+                block_c: int = 128, block_f: int = 128,
                 groups: int = 1, relu: bool = False,
                 requant_shift: Optional[int] = None,
                 emulate_hw: bool = False) -> jax.Array:
@@ -62,16 +77,24 @@ def trim_conv2d(x: jax.Array, w: jax.Array,
     cores (the hardware schedules groups as independent filter sets), here
     one kernel call per group.
 
-    bias (F,) / relu / requant_shift: layer epilogue, fused into the kernel
-    flush on the Pallas path.  requant_shift (integer path only) applies the
-    engine's power-of-two requantization and returns uint8.
+    bias (F,) / relu / requant_shift / requant: layer epilogue, fused into
+    the kernel flush on the Pallas path.  requant_shift (integer path only)
+    applies the engine's power-of-two requantization; requant=(mult, shift)
+    (scalars or per-channel (F,) int32 arrays) the arbitrary-scale
+    fixed-point requantization (``kernels/requant.py``) — both return uint8.
+
+    tile_w: output-width tile for the Pallas path (None: auto-picked from
+    the VMEM budget; wider-than-VGG maps tile instead of falling off the
+    fast path — DESIGN.md §4).
 
     emulate_hw: replay the FPGA's strided-layer schedule — full stride-1
     sweep, decimate, *then* the epilogue (3 extra HBM round-trips and
     stride^2 wasted MACs, kept for Table I/II fidelity)."""
-    if requant_shift is not None:
+    if requant_shift is not None or requant is not None:
         assert jnp.issubdtype(x.dtype, jnp.integer), \
-            "requant_shift needs the integer path"
+            "requantization needs the integer path"
+        assert requant_shift is None or requant is None, \
+            "requant_shift and requant are exclusive"
     decimate = emulate_hw and stride > 1
     use_pallas = _on_tpu() or force_pallas
     if not use_pallas:
@@ -81,33 +104,48 @@ def trim_conv2d(x: jax.Array, w: jax.Array,
         else:
             out = ref.conv2d_ref(x, w, stride=stride, padding=padding,
                                  groups=groups)
-        return _epilogue_jnp(out, bias, relu, requant_shift)
+        return _epilogue_jnp(out, bias, relu, requant_shift, requant)
 
-    def one(xg, wg, bg, bc, bf):
+    def one(xg, wg, bg, rq, bc, bf):
         if decimate:
             o = trim_conv2d_pallas(xg, wg, padding=padding, tile_h=tile_h,
-                                   block_c=bc, block_f=bf,
+                                   tile_w=tile_w, block_c=bc, block_f=bf,
                                    interpret=not _on_tpu())
             return o[:, ::stride, ::stride, :]
         return trim_conv2d_pallas(xg, wg, stride=stride, padding=padding,
                                   bias=bg, relu=relu,
                                   requant_shift=requant_shift,
-                                  tile_h=tile_h, block_c=bc, block_f=bf,
+                                  requant=rq,
+                                  tile_h=tile_h, tile_w=tile_w,
+                                  block_c=bc, block_f=bf,
                                   interpret=not _on_tpu())
 
     if groups == 1:
-        out = one(x, w, bias, block_c, block_f)
+        out = one(x, w, bias, requant, block_c, block_f)
     else:
         cg = x.shape[-1] // groups
         fg = w.shape[-1] // groups
+
+        def rq_slice(g):
+            # Per-group requant slices (scalars broadcast to (F,) first so
+            # per-channel and per-tensor calibrations both land per group).
+            if requant is None:
+                return None
+            m, s = requant
+            F = fg * groups
+            m = jnp.broadcast_to(jnp.asarray(m, jnp.int32), (F,))
+            s = jnp.broadcast_to(jnp.asarray(s, jnp.int32), (F,))
+            return (m[g * fg:(g + 1) * fg], s[g * fg:(g + 1) * fg])
+
         outs = [one(x[..., g * cg:(g + 1) * cg],
                     w[..., g * fg:(g + 1) * fg],
                     None if bias is None else bias[g * fg:(g + 1) * fg],
+                    rq_slice(g),
                     min(block_c, cg), min(block_f, fg))
                 for g in range(groups)]
         out = jnp.concatenate(outs, axis=-1)
     if decimate:
-        out = _epilogue_jnp(out, bias, relu, requant_shift)
+        out = _epilogue_jnp(out, bias, relu, requant_shift, requant)
     return out
 
 

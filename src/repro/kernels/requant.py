@@ -1,0 +1,96 @@
+"""Fixed-point multiplier + shift requantization (DESIGN.md §4).
+
+The paper's engine requantizes int32 psums to B-bit activations with a
+power-of-two right shift (``core/trim/quant.py``).  Arbitrary per-layer /
+per-channel scales — the serial-accumulation accelerator's output stage
+(Ahmadi et al., PAPERS.md) and standard int8 inference practice — need
+
+    out = clip(round(acc * scale), 0, 255),   scale = m * 2**-s
+
+with ``m`` a 15-bit integer multiplier and ``s`` an integer shift.  The
+exact semantics implemented here (and mirrored bit-for-bit by the fused
+Pallas epilogue, the jnp fallback epilogue, and the test oracles) is
+
+    requant(acc, m, s) = clip((acc * m + 2**(s-1)) >> s, 0, 255)
+
+i.e. round-half-up (round half toward +inf) of ``acc * m / 2**s``.
+
+TPU Pallas has no int64 (and JAX's default x64-disabled mode silently
+downcasts), so the 48-bit product ``acc * m`` is computed exactly with
+int32-only arithmetic via a hi/lo split (see ``requant_mult_shift``).
+Domain: ``1 <= m <= 32767`` and ``1 <= s <= 31`` — every scale in
+(2**-31, 255] is representable with 15 bits of mantissa precision
+(``scale_to_mult_shift``).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def requant_mult_shift(acc: jax.Array, mult, shift) -> jax.Array:
+    """``clip((acc * m + 2**(s-1)) >> s, 0, 255)`` — exact, int32-only.
+
+    ``acc`` int32 (any value); ``mult``/``shift`` scalars or arrays that
+    broadcast against ``acc`` (per-channel: shape (F,) against NHWF), with
+    ``1 <= mult <= 32767`` and ``1 <= shift <= 31``.  Returns int32 in
+    [0, 255] (caller casts to uint8).
+
+    The 48-bit product is split as ``acc = hi*2**16 + lo`` (``lo`` the
+    unsigned low half), so ``acc*m = (hi*m + (lo*m >> 16))*2**16 + c0``
+    with every intermediate in int32 range.  The two shift regimes:
+
+    - ``s >= 17``: the rounding constant is a multiple of 2**16, and the
+      low 16 bits can never carry past the shift, so
+      ``r = (h + 2**(s-17)) >> (s-16)`` is exact.
+    - ``s <= 16``: ``r = (h << (16-s)) + ((c0 + 2**(s-1)) >> s)`` is exact;
+      ``h`` is pre-clamped so the left shift saturates (clamped values are
+      far outside [0, 255] in the true result, so the final clip agrees).
+    """
+    m = jnp.asarray(mult, jnp.int32)
+    s = jnp.asarray(shift, jnp.int32)
+    hi = jnp.right_shift(acc, 16)
+    lo = jnp.bitwise_and(acc, 0xFFFF)
+    b = lo * m                                   # <= 65535*32767 < 2**31
+    h = hi * m + jnp.right_shift(b, 16)          # |h| < 2**30 + 2**15
+    c0 = jnp.bitwise_and(b, 0xFFFF)
+    # s >= 17 regime
+    r_hi = jnp.right_shift(h + jnp.left_shift(1, jnp.clip(s - 17, 0, 30)),
+                           jnp.clip(s - 16, 1, 31))
+    # 1 <= s <= 16 regime (clamp h so h << (16-s) stays in int32)
+    sl = jnp.clip(s, 1, 16)
+    lim = jnp.left_shift(1, jnp.minimum(15 + sl, 30)) - 2
+    hc = jnp.clip(h, -lim - 1, lim)
+    r_lo = (jnp.left_shift(hc, 16 - sl)
+            + jnp.right_shift(c0 + jnp.left_shift(1, sl - 1), sl))
+    return jnp.clip(jnp.where(s >= 17, r_hi, r_lo), 0, 255)
+
+
+def requant_ref_int64(acc: np.ndarray, mult, shift) -> np.ndarray:
+    """Independent numpy int64 oracle for ``requant_mult_shift``."""
+    a = acc.astype(np.int64)
+    m = np.asarray(mult, np.int64)
+    s = np.asarray(shift, np.int64)
+    r = (a * m + (np.int64(1) << (s - 1))) >> s
+    return np.clip(r, 0, 255).astype(np.int64)
+
+
+def scale_to_mult_shift(scale) -> Tuple[np.ndarray, np.ndarray]:
+    """Float scale(s) -> (mult int32, shift int32) with 15-bit mantissa.
+
+    Picks ``s`` so ``m = round(scale * 2**s)`` lands in [2**14, 2**15)
+    (full precision) and clamps to the valid domain ``m in [1, 32767]``,
+    ``s in [1, 31]``.  Accepts scalars or arrays (per-channel scales).
+    """
+    sc = np.maximum(np.asarray(scale, np.float64), 2.0 ** -40)
+    e = np.floor(np.log2(sc)).astype(np.int64)
+    s = np.clip(14 - e, 1, 31)
+    m = np.round(sc * np.exp2(s.astype(np.float64))).astype(np.int64)
+    over = m >= 32768
+    m = np.where(over, m >> 1, m)
+    s = np.where(over, np.maximum(s - 1, 1), s)
+    m = np.clip(m, 1, 32767).astype(np.int32)
+    return m, s.astype(np.int32)

@@ -15,7 +15,6 @@ x (B, L, D), w (K, D) -> (B, L, D), causal (left) padding.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

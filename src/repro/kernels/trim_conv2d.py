@@ -1,15 +1,15 @@
 """TrIM conv2d — the paper's dataflow, realized as a Pallas TPU kernel.
 
 Mapping of the paper's triangular input movement onto the TPU memory
-hierarchy (DESIGN.md §2):
+hierarchy (DESIGN.md §2, §4):
 
 - **Single-fetch inputs**: each haloed input tile travels HBM -> VMEM
   exactly once per (spatial, C_in) grid step and is then reused K*K times
   via *shifted VMEM slices* — the horizontal + diagonal movements of the
-  paper collapse into VMEM addressing (the halo rows play the role of the
-  shift-register buffers).
+  paper collapse into VMEM addressing (the halo rows/columns play the role
+  of the shift-register buffers).
 - **Weight-stationary**: the (K, K, Cb, Fb) weight block's index_map is
-  constant along the spatial grid axis, so Pallas' revolving-buffer pipeline
+  constant along the spatial grid axes, so Pallas' revolving-buffer pipeline
   keeps it resident in VMEM while the spatial sweep runs (the paper's
   weights loaded once, held for the whole layer).
 - **Psum accumulation**: a VMEM scratch accumulator integrates over the
@@ -22,18 +22,25 @@ hierarchy (DESIGN.md §2):
   the full stride-1 extent and decimates downstream (§V, AlexNet CL1); that
   behaviour is preserved as the wrapper's ``emulate_hw=True`` mode for
   honest Table I/II comparisons (see ``ops.trim_conv2d``).
-- **Fused epilogue**: bias add + ReLU + optional power-of-two int32->uint8
-  requantization (the engine's output stage, ``core/trim/quant.py``) run in
-  the final-C_in flush, so the int32 psums never round-trip through HBM
+- **Width tiling** (DESIGN.md §4): W_O is split into ``n_wt`` tiles of TW
+  output columns; each input block is a ``(TH*S, (TW-1)*S + K)`` window
+  with K-S halo columns, mirroring the halo-row logic, so maps wider than
+  the VGG/AlexNet shapes no longer blow VMEM.  ``tile_w=None`` auto-picks
+  TW from a VMEM budget (``pick_tile_w``); ``n_wt == 1`` degenerates to
+  the original single-block layout (same grid, same schedule).
+- **Fused epilogue**: bias add + ReLU + requantization (power-of-two shift
+  or arbitrary-scale multiplier+shift, ``kernels/requant.py``) run in the
+  final-C_in flush, so the int32 psums never round-trip through HBM
   between conv, bias, activation, and quant.
 - **Engine broadcast**: the input tile's index_map does not depend on the
   F (C_out) grid axis — the same fetched inputs serve all P_N "cores".
 
-The halo is expressed with plain blocked BlockSpecs by passing the input
-twice (row-block ht and ht+1) and concatenating the first K-S rows of the
-second block — this keeps the kernel compatible with both compiled TPU
-lowering and interpret=True CPU validation.  When K <= S no halo is needed
-and the input is passed once.
+Halos are expressed with plain blocked BlockSpecs by passing the input
+multiple times at shifted block indices — row-block ht+1 for the K-S halo
+rows, column-block wt+1 for the K-S halo columns (up to four passes when
+width-tiled) — and concatenating inside the kernel.  This keeps the kernel
+compatible with both compiled TPU lowering and interpret=True CPU
+validation.  When K <= S no halo is needed and the input is passed once.
 
 Supports float (bf16/f32 in, f32 accum) and the paper's integer mode
 (uint8 x int8 -> int32 accum).
@@ -47,12 +54,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.requant import requant_mult_shift
+
 try:  # TPU-specific memory spaces; fall back gracefully off-TPU.
     from jax.experimental.pallas import tpu as pltpu
     _VMEM = pltpu.VMEM
 except Exception:  # pragma: no cover
     pltpu = None
     _VMEM = None
+
+#: Default per-core VMEM budget for the width-tile auto-pick: conservative
+#: vs the ~16 MiB of a TPU core so weights + revolving buffers still fit.
+VMEM_BUDGET_BYTES = 12 * 2 ** 20
 
 
 def _acc_dtype(x_dtype) -> jnp.dtype:
@@ -66,79 +79,144 @@ def _scratch(shape: Tuple[int, ...], dtype):
     return pl.MemoryRef(shape, dtype, pl.ANY)
 
 
-def _trim_conv2d_kernel(*refs, K: int, TH: int, W_O: int, n_cin: int,
-                        stride: int, has_halo: bool, has_bias: bool,
-                        relu: bool, requant_shift: Optional[int]):
-    """One grid step: TH output rows x W_O cols x Fb filters, one Cin block."""
+def _vmem_bytes(*, RB: int, cols: int, Cb: int, Fb: int, K: int, TH: int,
+                TW: int, passes: int, in_sz: int, w_sz: int,
+                out_sz: int) -> int:
+    """Estimated VMEM for one grid step: double-buffered in/out blocks +
+    the weight block + the psum scratch."""
+    xb = passes * RB * cols * Cb * in_sz
+    wb = K * K * Cb * Fb * w_sz
+    ob = TH * TW * Fb * out_sz
+    ab = TH * TW * Fb * 4
+    return 2 * (xb + wb + ob) + ab
+
+
+def pick_tile_w(W_O: int, *, K: int, stride: int, RB: int, TH: int,
+                W_p: int, Cb: int, Fb: int, in_sz: int = 4, w_sz: int = 4,
+                out_sz: int = 4,
+                vmem_budget: int = VMEM_BUDGET_BYTES) -> int:
+    """Auto-pick the output-column tile TW from a VMEM budget.
+
+    Returns ``W_O`` (single block — the degenerate layout) whenever the
+    full-width block fits the budget, so the VGG/AlexNet shapes keep their
+    original schedule; otherwise halves TW (rounded up to a multiple of 8
+    sublanes) until the 4-pass haloed tile fits.
+    """
+    halo = max(K - stride, 0)
+    full = _vmem_bytes(RB=RB, cols=W_p, Cb=Cb, Fb=Fb, K=K, TH=TH, TW=W_O,
+                       passes=2 if halo else 1, in_sz=in_sz, w_sz=w_sz,
+                       out_sz=out_sz)
+    if full <= vmem_budget:
+        return W_O
+    TW = W_O
+    while TW > 8:
+        TW = -(-TW // 2)
+        TW = -(-TW // 8) * 8
+        used = _vmem_bytes(RB=RB, cols=TW * stride, Cb=Cb, Fb=Fb, K=K,
+                           TH=TH, TW=TW, passes=4 if halo else 1,
+                           in_sz=in_sz, w_sz=w_sz, out_sz=out_sz)
+        if used <= vmem_budget:
+            break
+    if halo:
+        TW = max(TW, -(-halo // stride))
+    return min(TW, W_O)
+
+
+def _trim_conv2d_kernel(*refs, K: int, TH: int, TW: int, n_cin: int,
+                        stride: int, ci_axis: int, has_halo_h: bool,
+                        has_halo_w: bool, has_bias: bool, relu: bool,
+                        requant_shift: Optional[int], has_requant: bool):
+    """One grid step: TH output rows x TW cols x Fb filters, one Cin block."""
     it = iter(refs)
-    x_lo_ref = next(it)
-    x_hi_ref = next(it) if has_halo else None
+    x_ll_ref = next(it)
+    x_lh_ref = next(it) if has_halo_w else None
+    x_hl_ref = next(it) if has_halo_h else None
+    x_hh_ref = next(it) if (has_halo_h and has_halo_w) else None
     w_ref = next(it)
     b_ref = next(it) if has_bias else None
+    m_ref = next(it) if has_requant else None
+    s_ref = next(it) if has_requant else None
     o_ref = next(it)
     acc_ref = next(it)
 
-    ci = pl.program_id(2)
+    ci = pl.program_id(ci_axis)
 
     @pl.when(ci == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # Assemble the haloed tile: TH*S + max(K-S, 0) input rows, fetched once.
-    x = x_lo_ref[0]                         # (TH*S, W_p, Cb)
-    if has_halo:
-        x = jnp.concatenate([x, x_hi_ref[0, :K - stride]], axis=0)
+    # Assemble the haloed tile — (TH*S + max(K-S,0), TW*S + max(K-S,0))
+    # input pixels, each fetched exactly once per (spatial, Cin) step.
+    halo = K - stride
+    x = x_ll_ref[0]                         # (TH*S, cols, Cb)
+    if has_halo_w:
+        x = jnp.concatenate([x, x_lh_ref[0][:, :halo]], axis=1)
+    if has_halo_h:
+        bot = x_hl_ref[0][:halo]
+        if has_halo_w:
+            bot = jnp.concatenate([bot, x_hh_ref[0][:halo, :halo]], axis=1)
+        x = jnp.concatenate([x, bot], axis=0)
     w = w_ref[...]                          # (K, K, Cb, Fb) — stationary
     acc = acc_ref[...]
     cb = x.shape[-1]
     fb = w.shape[-1]
     acc_t = acc.dtype
     rows = (TH - 1) * stride + 1
-    cols = (W_O - 1) * stride + 1
+    cols = (TW - 1) * stride + 1
     # Triangular reuse: K*K shifted (step-S) views of the SAME resident tile.
     for kh in range(K):
         for kw in range(K):
             patch = jax.lax.slice(x, (kh, kw, 0),
                                   (kh + rows, kw + cols, cb),
-                                  (stride, stride, 1))  # (TH, W_O, Cb)
+                                  (stride, stride, 1))  # (TH, TW, Cb)
             tap = jnp.dot(
-                patch.reshape(TH * W_O, cb).astype(acc_t if acc_t == jnp.int32
-                                                   else patch.dtype),
+                patch.reshape(TH * TW, cb).astype(acc_t if acc_t == jnp.int32
+                                                  else patch.dtype),
                 w[kh, kw].astype(acc_t if acc_t == jnp.int32 else w.dtype),
                 preferred_element_type=acc_t)
-            acc = acc + tap.reshape(TH, W_O, fb)
+            acc = acc + tap.reshape(TH, TW, fb)
     acc_ref[...] = acc
 
     @pl.when(ci == n_cin - 1)
     def _flush():
         r = acc_ref[...]
-        # Fused epilogue: bias -> ReLU -> power-of-two requant, all while the
-        # int32/f32 psums are still accumulator-resident.
+        # Fused epilogue: bias -> ReLU -> requant, all while the int32/f32
+        # psums are still accumulator-resident.
         if has_bias:
             r = r + b_ref[0]
         if relu:
             r = jnp.maximum(r, 0)
         if requant_shift is not None:
             r = jnp.clip(jnp.right_shift(r, requant_shift), 0, 255)
+        if has_requant:
+            r = requant_mult_shift(r, m_ref[0], s_ref[0])
         o_ref[0] = r.astype(o_ref.dtype)
 
 
 def trim_conv2d_pallas(x: jax.Array, w: jax.Array, *,
                        stride: int = 1,
-                       tile_h: int = 8, block_c: int = 128,
+                       tile_h: int = 8, tile_w: Optional[int] = None,
+                       block_c: int = 128,
                        block_f: int = 128, padding: Optional[int] = None,
                        bias: Optional[jax.Array] = None,
                        relu: bool = False,
                        requant_shift: Optional[int] = None,
+                       requant: Optional[Tuple[jax.Array, jax.Array]] = None,
+                       vmem_budget: int = VMEM_BUDGET_BYTES,
                        out_dtype=None, interpret: bool = False) -> jax.Array:
     """TrIM conv. x (N,H,W,C), w (K,K,C,F) -> (N,H_O,W_O,F).
 
     ``stride`` is static; only the strided H_O x W_O outputs are computed
-    (see DESIGN.md §2).  ``bias`` (F,), ``relu`` and ``requant_shift`` fuse
-    the layer epilogue into the final C_in flush; ``requant_shift`` (int
-    path only) applies the engine's power-of-two requantization and returns
-    uint8.  The wrapper pads H/C/F up to tile multiples (zero padding is
-    free w.r.t. the convolution result) and slices the result back.
+    (see DESIGN.md §2).  ``tile_w`` tiles the output width (None: auto-pick
+    from ``vmem_budget``; the single-block layout is kept whenever one tile
+    covers W_O).  ``bias`` (F,), ``relu``, ``requant_shift`` and ``requant``
+    fuse the layer epilogue into the final C_in flush; ``requant_shift``
+    (int path only) applies the engine's power-of-two requantization,
+    ``requant=(mult, shift)`` (scalars or per-channel (F,) int32 arrays,
+    see ``kernels/requant.py``) the arbitrary-scale fixed-point
+    requantization — both return uint8.  The wrapper pads H/W/C/F up to
+    tile multiples (zero padding is free w.r.t. the convolution result)
+    and slices the result back.
     """
     N, H, W, C = x.shape
     K, K2, Cw, F = w.shape
@@ -147,8 +225,10 @@ def trim_conv2d_pallas(x: jax.Array, w: jax.Array, *,
     assert S >= 1
     p = K // 2 if padding is None else padding
     acc_dtype = _acc_dtype(x.dtype)
-    if requant_shift is not None:
-        assert acc_dtype == jnp.int32, "requant_shift needs the integer path"
+    assert requant_shift is None or requant is None, \
+        "requant_shift (power-of-two) and requant (mult+shift) are exclusive"
+    if requant_shift is not None or requant is not None:
+        assert acc_dtype == jnp.int32, "requantization needs the integer path"
         out_dtype = jnp.uint8
     if out_dtype is None:
         out_dtype = acc_dtype if acc_dtype == jnp.int32 else x.dtype
@@ -157,12 +237,14 @@ def trim_conv2d_pallas(x: jax.Array, w: jax.Array, *,
     assert H_p >= K and W_p >= K, (x.shape, w.shape, p)
     H_O, W_O = (H_p - K) // S + 1, (W_p - K) // S + 1
 
+    halo = K - S
+    has_halo = halo > 0
     TH = min(tile_h, H_O)
-    if K > S:
+    if has_halo:
         # The halo comes from a single following row block, so the block
         # must be tall enough to contain it: K - S <= TH*S.  (Covers large
         # kernels at small strides — e.g. K=11 stride-1 — and tiny maps.)
-        TH = max(TH, -(-(K - S) // S))
+        TH = max(TH, -(-halo // S))
     n_ht = -(-H_O // TH)                    # ceil
     Cb = min(block_c, C)
     n_ci = -(-C // Cb)
@@ -170,52 +252,123 @@ def trim_conv2d_pallas(x: jax.Array, w: jax.Array, *,
     n_f = -(-F // Fb)
 
     RB = TH * S                             # input rows per spatial block
-    halo = K - S
-    has_halo = halo > 0
+
+    if tile_w is not None:
+        TW = min(int(tile_w), W_O)
+    else:
+        TW = pick_tile_w(W_O, K=K, stride=S, RB=RB, TH=TH, W_p=W_p, Cb=Cb,
+                         Fb=Fb, in_sz=x.dtype.itemsize,
+                         w_sz=w.dtype.itemsize,
+                         out_sz=jnp.dtype(out_dtype).itemsize,
+                         vmem_budget=vmem_budget)
+    if has_halo:
+        # Same single-following-block constraint along the width.
+        TW = max(TW, -(-halo // S))
+    n_wt = -(-W_O // TW)                    # ceil
+    tiled = n_wt > 1
+    if not tiled:
+        TW = W_O
+
     # Row padding: n_ht blocks of RB input rows cover the strided sweep; one
     # extra RB-row block (halo case) makes the ht+1 halo index always valid.
     n_rb = n_ht + (1 if has_halo else 0)
     rows_needed = -(-max(n_rb * RB, H_p) // RB) * RB
-    x_pad = jnp.pad(x, ((0, 0), (p, rows_needed - H - p), (p, p),
-                        (0, n_ci * Cb - C)))
+    if tiled:
+        # Column padding mirrors the rows: n_wt blocks of CB input columns
+        # plus one extra block backing the wt+1 halo columns.
+        CB = TW * S
+        n_cb = n_wt + (1 if has_halo else 0)
+        cols_needed = -(-max(n_cb * CB, W_p) // CB) * CB
+    else:
+        CB = W_p
+        cols_needed = W_p
+    x_pad = jnp.pad(x, ((0, 0), (p, rows_needed - H - p),
+                        (p, cols_needed - W - p), (0, n_ci * Cb - C)))
     w_pad = jnp.pad(w, ((0, 0), (0, 0), (0, n_ci * Cb - C),
                         (0, n_f * Fb - F)))
 
-    grid = (N * n_ht, n_f, n_ci)
+    if tiled:
+        grid = (N * n_ht, n_wt, n_f, n_ci)
+        ci_axis = 3
 
-    def x_lo_idx(bt, f, c):
-        return (bt // n_ht, bt % n_ht, 0, c)
+        def x_idx(dh, dw):
+            return lambda bt, wt, f, c: (bt // n_ht, bt % n_ht + dh,
+                                         wt + dw, c)
 
-    def x_hi_idx(bt, f, c):
-        return (bt // n_ht, bt % n_ht + 1, 0, c)
+        def chan_idx():
+            return lambda bt, wt, f, c: (0, f)
 
+        def w_idx(bt, wt, f, c):
+            return (0, 0, c, f)
+
+        def o_idx(bt, wt, f, c):
+            return (bt // n_ht, bt % n_ht, wt, f)
+    else:
+        grid = (N * n_ht, n_f, n_ci)
+        ci_axis = 2
+
+        def x_idx(dh, dw):
+            return lambda bt, f, c: (bt // n_ht, bt % n_ht + dh, 0, c)
+
+        def chan_idx():
+            return lambda bt, f, c: (0, f)
+
+        def w_idx(bt, f, c):
+            return (0, 0, c, f)
+
+        def o_idx(bt, f, c):
+            return (bt // n_ht, bt % n_ht, 0, f)
+
+    xspec = (1, RB, CB, Cb)
     inputs = [x_pad]
-    in_specs = [pl.BlockSpec((1, RB, W_p, Cb), x_lo_idx)]
-    if has_halo:
+    in_specs = [pl.BlockSpec(xspec, x_idx(0, 0))]
+    if has_halo and tiled:                  # lh: halo columns, top rows
         inputs.append(x_pad)
-        in_specs.append(pl.BlockSpec((1, RB, W_p, Cb), x_hi_idx))
+        in_specs.append(pl.BlockSpec(xspec, x_idx(0, 1)))
+    if has_halo:                            # hl: halo rows
+        inputs.append(x_pad)
+        in_specs.append(pl.BlockSpec(xspec, x_idx(1, 0)))
+    if has_halo and tiled:                  # hh: halo corner
+        inputs.append(x_pad)
+        in_specs.append(pl.BlockSpec(xspec, x_idx(1, 1)))
     inputs.append(w_pad)
-    in_specs.append(pl.BlockSpec((K, K, Cb, Fb), lambda bt, f, c: (0, 0, c, f)))
+    in_specs.append(pl.BlockSpec((K, K, Cb, Fb), w_idx))
     if bias is not None:
         assert bias.shape == (F,), bias.shape
         b_pad = jnp.pad(bias.astype(acc_dtype),
                         (0, n_f * Fb - F)).reshape(1, n_f * Fb)
         inputs.append(b_pad)
-        in_specs.append(pl.BlockSpec((1, Fb), lambda bt, f, c: (0, f)))
+        in_specs.append(pl.BlockSpec((1, Fb), chan_idx()))
+    if requant is not None:
+        mult, shift = requant
+        # Scalars broadcast; padded channels carry (m=1, s=15) and their
+        # zero psums requantize to 0.
+        m_pad = jnp.pad(jnp.broadcast_to(
+            jnp.asarray(mult, jnp.int32), (F,)), (0, n_f * Fb - F),
+            constant_values=1).reshape(1, n_f * Fb)
+        s_pad = jnp.pad(jnp.broadcast_to(
+            jnp.asarray(shift, jnp.int32), (F,)), (0, n_f * Fb - F),
+            constant_values=15).reshape(1, n_f * Fb)
+        inputs.append(m_pad)
+        in_specs.append(pl.BlockSpec((1, Fb), chan_idx()))
+        inputs.append(s_pad)
+        in_specs.append(pl.BlockSpec((1, Fb), chan_idx()))
 
-    kernel = functools.partial(_trim_conv2d_kernel, K=K, TH=TH, W_O=W_O,
-                               n_cin=n_ci, stride=S, has_halo=has_halo,
+    kernel = functools.partial(_trim_conv2d_kernel, K=K, TH=TH, TW=TW,
+                               n_cin=n_ci, stride=S, ci_axis=ci_axis,
+                               has_halo_h=has_halo,
+                               has_halo_w=has_halo and tiled,
                                has_bias=bias is not None, relu=relu,
-                               requant_shift=requant_shift)
+                               requant_shift=requant_shift,
+                               has_requant=requant is not None)
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, TH, W_O, Fb),
-                               lambda bt, f, c: (bt // n_ht, bt % n_ht, 0, f)),
-        out_shape=jax.ShapeDtypeStruct((N, n_ht * TH, W_O, n_f * Fb),
+        out_specs=pl.BlockSpec((1, TH, TW, Fb), o_idx),
+        out_shape=jax.ShapeDtypeStruct((N, n_ht * TH, n_wt * TW, n_f * Fb),
                                        out_dtype),
-        scratch_shapes=[_scratch((TH, W_O, Fb), acc_dtype)],
+        scratch_shapes=[_scratch((TH, TW, Fb), acc_dtype)],
         interpret=interpret,
     )(*inputs)
-    return out[:, :H_O, :, :F]
+    return out[:, :H_O, :W_O, :F]

@@ -22,7 +22,6 @@ pre-repeat outside). Matches ``ref.ssd_ref`` == ``nn.mamba.ssd_chunked``.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

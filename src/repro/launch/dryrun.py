@@ -25,14 +25,13 @@ import json
 import math
 import time
 import traceback
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config, shape_cells
-from repro.configs.base import ALL_SHAPES, ModelConfig, ShapeCell
+from repro.configs.base import ModelConfig, ShapeCell
 from repro.distributed.sharding import activate_mesh, fsdp_pspec, param_pspec
 from repro.distributed.steps import (StepConfig, batch_pspec, cache_pspec,
                                      make_decode_step, make_prefill_step,
@@ -156,7 +155,9 @@ def calibrated_costs(cfg: ModelConfig, cell: ShapeCell, mesh,
         return _cell_costs(cfg.with_overrides(**over), cell, mesh,
                            fsdp=fsdp)
 
-    keys_of = lambda *ds: sorted(set().union(*[d.keys() for d in ds]))
+    def keys_of(*ds):
+        return sorted(set().union(*[d.keys() for d in ds]))
+
     if cfg.family == "encdec":
         c22 = variant(2, 2)
         c42 = variant(4, 2)

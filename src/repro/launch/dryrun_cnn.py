@@ -8,6 +8,10 @@ if os.environ.get("REPRO_DRYRUN_DEVICES"):
 pod-scale data-parallel training step through the TrIM conv path.
 
   PYTHONPATH=src python -m repro.launch.dryrun_cnn --arch vgg16
+
+``--int8`` additionally compiles the integer inference datapath with the
+arbitrary-scale fused requant epilogue (DESIGN.md §4) and emits a second
+roofline record.
 """
 import argparse
 import json
@@ -24,9 +28,62 @@ from repro.launch.hlo_stats import (collective_stats, cost_dict,
                                     hbm_bytes_estimate,
                                     total_collective_bytes)
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
-from repro.nn.conv import cnn_loss, init_cnn
+from repro.nn.conv import cnn_forward_int8, cnn_loss, init_cnn
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.core.trim.model import layer_ops
+
+
+def _int8_record(cfg, args, mesh, dp):
+    """Compile the int8 inference forward (fused multiplier+shift requant
+    in every non-last layer) and derive its roofline.  Requant constants
+    are placeholder calibrations — the dry-run only studies the compiled
+    schedule, not accuracy."""
+    H, W = cfg.input_hw
+    qshapes = {"conv": [
+        {"kernel": jax.ShapeDtypeStruct((l.K, l.K, l.M, l.N), jnp.int8)}
+        for l in cfg.layers]}
+    requant = [(jnp.full((l.N,), 16384, jnp.int32),
+                jnp.full((l.N,), 20, jnp.int32)) for l in cfg.layers[:-1]]
+    imgs = jax.ShapeDtypeStruct((args.batch, H, W, cfg.layers[0].M),
+                                jnp.uint8)
+
+    def infer(qp, u8):
+        return cnn_forward_int8(qp, u8, cfg, requant=requant)
+
+    rep = jax.tree.map(lambda _: NamedSharding(mesh, P()), qshapes)
+    ish = NamedSharding(mesh, P(dp))
+    t0 = time.time()
+    with activate_mesh(mesh), mesh:
+        compiled = jax.jit(infer, in_shardings=(rep, ish)).lower(
+            qshapes, imgs).compile()
+    hlo = compiled.as_text()
+    cost = cost_dict(compiled.cost_analysis())
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = total_collective_bytes(hlo)
+    conv_flops = sum(layer_ops(l) for l in cfg.layers) * args.batch
+    times = {"compute": flops / PEAK_FLOPS_BF16, "memory": byts / HBM_BW,
+             "collective": coll / ICI_BW}
+    return {
+        "arch": cfg.name, "shape": f"int8_infer_{H}x{W}_b{args.batch}",
+        "kind": "int8_infer", "chips": mesh.size,
+        "multi_pod": args.multi_pod,
+        "mesh": {ax: int(mesh.shape[ax]) for ax in mesh.axis_names},
+        "compile_s": round(time.time() - t0, 1),
+        "memory": hbm_bytes_estimate(compiled.memory_analysis()),
+        "cost": {"flops": flops, "bytes accessed": byts},
+        "collectives": collective_stats(hlo),
+        "collective_bytes": coll,
+        "roofline": {
+            "compute_s": times["compute"],
+            "memory_s": times["memory"],
+            "collective_s": times["collective"],
+            "dominant": max(times, key=times.get),
+            "model_flops_total": conv_flops,
+            "useful_flops_ratio": (conv_flops / mesh.size) / flops
+            if flops else 0.0,
+        },
+    }
 
 
 def main() -> None:
@@ -38,6 +95,9 @@ def main() -> None:
                     help="FPGA-faithful strided layers: stride-1 sweep + "
                          "decimation + unfused epilogue (§V) instead of the "
                          "stride-aware fused kernel")
+    ap.add_argument("--int8", action="store_true",
+                    help="also compile the int8 inference datapath with "
+                         "the fused arbitrary-scale requant epilogue")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -92,6 +152,10 @@ def main() -> None:
             "compute_s": flops / PEAK_FLOPS_BF16,
             "memory_s": byts / HBM_BW,
             "collective_s": coll / ICI_BW,
+            "dominant": max(
+                (("compute", flops / PEAK_FLOPS_BF16),
+                 ("memory", byts / HBM_BW),
+                 ("collective", coll / ICI_BW)), key=lambda kv: kv[1])[0],
             "model_flops_total": conv_flops,
             "useful_flops_ratio": (conv_flops / chips) / flops
             if flops else 0.0,
@@ -109,6 +173,18 @@ def main() -> None:
           f"{r['memory_s']*1e3:.1f}ms  collective "
           f"{r['collective_s']*1e3:.1f}ms  useful "
           f"{r['useful_flops_ratio']:.2f}")
+
+    if args.int8:
+        irec = _int8_record(cfg, args, mesh, dp)
+        itag = (f"{args.arch}__cnn_int8__"
+                f"{'multi' if args.multi_pod else 'single'}")
+        with open(os.path.join(args.out, itag + ".json"), "w") as f:
+            json.dump(irec, f, indent=1)
+        ir = irec["roofline"]
+        print(f"[dryrun_cnn] {itag}: compile {irec['compile_s']}s  "
+              f"compute {ir['compute_s']*1e3:.1f}ms  memory "
+              f"{ir['memory_s']*1e3:.1f}ms  collective "
+              f"{ir['collective_s']*1e3:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -13,7 +13,7 @@ Mesh geometry (DESIGN.md §6):
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 

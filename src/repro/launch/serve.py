@@ -14,9 +14,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke
 from repro.distributed import activate_mesh
-from repro.distributed.steps import (_to_shardings, cache_pspec,
-                                     make_decode_step, make_prefill_step)
-from repro.distributed.sharding import param_pspec
+from repro.distributed.steps import make_decode_step, make_prefill_step
 from repro.launch.mesh import make_host_mesh
 from repro.nn.models import build_model
 
@@ -39,7 +37,7 @@ def main() -> None:
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
 
-    with activate_mesh(mesh) as ctx, mesh:
+    with activate_mesh(mesh), mesh:
         params = model.init(jax.random.PRNGKey(0))
         if cfg.family == "encdec":
             src = jnp.asarray(rng.normal(

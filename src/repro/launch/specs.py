@@ -16,7 +16,7 @@ Shape-cell semantics (DESIGN.md §5):
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, get_smoke
 from repro.data import SyntheticLMDataset
@@ -23,7 +22,6 @@ from repro.distributed import (StepConfig, TrainLoopConfig, activate_mesh,
 from repro.distributed.steps import _to_shardings, batch_pspec
 from repro.launch.mesh import make_host_mesh
 from repro.nn.models import build_model
-from repro.optim import AdamWConfig
 
 
 def main() -> None:

@@ -17,8 +17,7 @@ fully-masked upper-triangle blocks (a §Perf hillclimb lever).
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -20,9 +20,8 @@ the 512-device dry-run), optionally under ``jax.checkpoint`` (remat).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -310,6 +309,12 @@ class ConvBlockSpec:
     ``emulate_hw`` replays the FPGA's strided-layer schedule (stride-1 sweep
     + downstream decimation + unfused epilogue, §V) instead of the
     stride-aware fused kernel — see ``ops.trim_conv2d``.
+
+    ``requant`` is a static per-tensor (mult, shift) pair for the
+    arbitrary-scale fixed-point requantization (``kernels/requant.py``);
+    per-channel calibrations ride in the params dict instead (a
+    ``"requant"`` entry of (F,) int32 arrays, which takes precedence).
+    ``tile_w`` overrides the kernel's VMEM-budget width-tile auto-pick.
     """
     stride: int = 1
     padding: Optional[int] = None
@@ -317,6 +322,8 @@ class ConvBlockSpec:
     relu: bool = True
     pool: bool = False               # 2x2/stride-2 max pool after the conv
     requant_shift: Optional[int] = None
+    requant: Optional[Tuple[int, int]] = None
+    tile_w: Optional[int] = None
     emulate_hw: bool = False
 
 
@@ -342,9 +349,10 @@ def conv_block(p: Params, x: jax.Array, spec: ConvBlockSpec) -> jax.Array:
     w = p["kernel"]
     if jnp.issubdtype(x.dtype, jnp.floating):
         w = w.astype(x.dtype)
-    x = trim_conv2d(x, w, p.get("bias"), stride=spec.stride,
+    requant = p.get("requant", spec.requant)
+    x = trim_conv2d(x, w, p.get("bias"), requant, stride=spec.stride,
                     padding=spec.padding, groups=spec.groups, relu=spec.relu,
-                    requant_shift=spec.requant_shift,
+                    requant_shift=spec.requant_shift, tile_w=spec.tile_w,
                     emulate_hw=spec.emulate_hw)
     x = shard(x, "batch", "img_h", "img_w", "cout")
     if spec.pool:

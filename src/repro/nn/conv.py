@@ -10,8 +10,10 @@ Integer mode (the paper's inference datapath): uint8 activations x int8
 weights -> int32 psums, per-layer requantization — numerically identical to
 the bit-faithful engine in ``repro.core.trim.engine`` (tests assert this),
 but running through the TPU-native kernel.  With calibrated
-``requant_shifts`` the ReLU+requant epilogue also fuses into the kernel, so
-int32 psums never round-trip through HBM (DESIGN.md §2).
+``requant_shifts`` (power-of-two) or ``requant`` (arbitrary-scale
+multiplier+shift pairs from ``calibrate_requant``, per-channel capable) the
+ReLU+requant epilogue also fuses into the kernel, so int32 psums never
+round-trip through HBM (DESIGN.md §2, §4).
 
 ``CNNConfig.emulate_hw`` / the ``emulate_hw=`` overrides select the
 FPGA-faithful strided-layer schedule (stride-1 sweep + downstream
@@ -20,11 +22,12 @@ decimation, §V) for honest Table I/II comparisons.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.trim.model import (ALEXNET_LAYERS, VGG16_LAYERS,
                                    ConvLayerSpec)
@@ -155,19 +158,31 @@ def quantize_cnn(params: Params, cfg: CNNConfig,
 
 def _int8_forward(qparams: Params, images_u8: jax.Array, cfg: CNNConfig,
                   requant_shifts: Optional[Sequence[int]] = None,
+                  requant: Optional[Sequence[Tuple[jax.Array, jax.Array]]]
+                  = None,
                   ) -> Tuple[jax.Array, List[jax.Array]]:
     """Shared int8 datapath: returns (final int32 psums, dynamic shifts).
 
-    The shifts list collects the per-layer power-of-two requant shifts
-    actually used on the dynamic (uncalibrated) path — traced scalars, so
-    calibration must run this eagerly to concretize them."""
+    ``requant_shifts`` fuses calibrated power-of-two shifts into the kernel;
+    ``requant`` fuses calibrated arbitrary-scale (mult, shift) pairs
+    (per-tensor scalars or per-channel (F,) arrays) instead.  The shifts
+    list collects the per-layer power-of-two requant shifts actually used
+    on the dynamic (uncalibrated) path — traced scalars, so calibration
+    must run this eagerly to concretize them."""
+    assert requant_shifts is None or requant is None
     x = images_u8
     shifts: List[jax.Array] = []
     for i, l in enumerate(cfg.layers):
         w = qparams["conv"][i]["kernel"]
         groups = x.shape[-1] // w.shape[-2]  # AlexNet two-tower layers: 2
         last = i == len(cfg.layers) - 1
-        if requant_shifts is not None and not last:
+        if requant is not None and not last:
+            # Calibrated arbitrary scale: conv + ReLU + multiplier+shift
+            # requant in one kernel pass (DESIGN.md §4).
+            x = trim_conv2d(x, w, None, tuple(requant[i]), stride=l.stride,
+                            padding=l.padding, groups=groups, relu=True,
+                            emulate_hw=cfg.emulate_hw)
+        elif requant_shifts is not None and not last:
             # Calibrated shift: conv + ReLU + requant in one kernel pass.
             x = trim_conv2d(x, w, stride=l.stride, padding=l.padding,
                             groups=groups, relu=True,
@@ -194,19 +209,24 @@ def _int8_forward(qparams: Params, images_u8: jax.Array, cfg: CNNConfig,
 def cnn_forward_int8(qparams: Params, images_u8: jax.Array, cfg: CNNConfig,
                      act_scales: Optional[Sequence[float]] = None,
                      requant_shifts: Optional[Sequence[int]] = None,
+                     requant: Optional[Sequence[Tuple[jax.Array, jax.Array]]]
+                     = None,
                      ) -> jax.Array:
     """uint8 NHWC images through the integer TrIM datapath.
 
     Each layer: uint8 x int8 -> int32 psums (exact), ReLU in int32 (fused
-    into the kernel flush), then requantize to uint8 with a per-layer
-    right-shift scale (power-of-two requantization — what the paper's
-    engine output stage does).  When ``requant_shifts`` supplies calibrated
-    per-layer shifts the whole epilogue fuses into the conv kernel and the
-    int32 psums never reach HBM; otherwise the shift is derived from the
-    running psum maximum (data-dependent, so it runs post-kernel).
+    into the kernel flush), then requantize to uint8 for the next layer.
+    When ``requant_shifts`` supplies calibrated per-layer power-of-two
+    shifts (what the paper's engine output stage does), or ``requant``
+    supplies calibrated per-layer (mult, shift) fixed-point pairs
+    (arbitrary scales, per-channel capable — ``calibrate_requant``), the
+    whole epilogue fuses into the conv kernel and the int32 psums never
+    reach HBM; otherwise the shift is derived from the running psum
+    maximum (data-dependent, so it runs post-kernel).
     Returns the final int32 feature map (pre-classifier).
     """
-    return _int8_forward(qparams, images_u8, cfg, requant_shifts)[0]
+    return _int8_forward(qparams, images_u8, cfg, requant_shifts,
+                         requant)[0]
 
 
 def calibrate_requant_shifts(qparams: Params, sample_u8: jax.Array,
@@ -217,3 +237,44 @@ def calibrate_requant_shifts(qparams: Params, sample_u8: jax.Array,
     Runs the dynamic datapath eagerly (not under jit) to concretize the
     per-layer shifts."""
     return [int(s) for s in _int8_forward(qparams, sample_u8, cfg)[1]]
+
+
+def calibrate_requant(qparams: Params, sample_u8: jax.Array, cfg: CNNConfig,
+                      per_channel: bool = True,
+                      ) -> List[Tuple[jax.Array, jax.Array]]:
+    """Arbitrary-scale calibration: per-layer (mult, shift) pairs.
+
+    Generalizes ``calibrate_requant_shifts`` from power-of-two scales to
+    15-bit-mantissa fixed-point scales (DESIGN.md §4): each non-last layer
+    maps its observed post-ReLU psum range [0, amax] onto [0, 255] with
+    ``scale = 255 / amax``, encoded as ``m * 2**-s`` via
+    ``kernels.requant.scale_to_mult_shift``.  ``per_channel=True`` (the
+    default) calibrates one scale per output channel — the headroom win
+    arbitrary scales exist for.  Runs eagerly; the returned (F,) int32
+    array pairs make ``cnn_forward_int8(..., requant=...)`` fully fused.
+    """
+    from repro.kernels.requant import (requant_mult_shift,
+                                       scale_to_mult_shift)
+    x = sample_u8
+    pairs: List[Tuple[jax.Array, jax.Array]] = []
+    for i, l in enumerate(cfg.layers[:-1]):
+        w = qparams["conv"][i]["kernel"]
+        groups = x.shape[-1] // w.shape[-2]
+        psum = trim_conv2d(x, w, stride=l.stride, padding=l.padding,
+                           groups=groups, relu=True,
+                           emulate_hw=cfg.emulate_hw)
+        axes = (0, 1, 2) if per_channel else None
+        amax = np.maximum(np.asarray(psum.max(axis=axes),
+                                     np.float64), 1.0)
+        m, s = scale_to_mult_shift(255.0 / amax)
+        F = w.shape[-1]
+        m = jnp.broadcast_to(jnp.asarray(m, jnp.int32), (F,))
+        s = jnp.broadcast_to(jnp.asarray(s, jnp.int32), (F,))
+        pairs.append((m, s))
+        # Propagate through the exact fixed-point datapath the fused
+        # forward will run, so downstream layers calibrate on what they
+        # will actually see.
+        x = requant_mult_shift(psum, m, s).astype(jnp.uint8)
+        if i in cfg.pool_after:
+            x = _pool(x)
+    return pairs

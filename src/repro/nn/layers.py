@@ -10,7 +10,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -12,7 +12,6 @@ vocab axis) and each chunk's logits are recomputed in the backward pass
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -344,14 +344,22 @@ class ConvNet:
         return quantize_cnn(params, self.cfg)
 
     def forward_int8(self, qparams: Params, images_u8: jax.Array,
-                     requant_shifts=None) -> jax.Array:
+                     requant_shifts=None, requant=None) -> jax.Array:
         from repro.nn.conv import cnn_forward_int8
         return cnn_forward_int8(qparams, images_u8, self._cfg(),
-                                requant_shifts=requant_shifts)
+                                requant_shifts=requant_shifts,
+                                requant=requant)
 
     def calibrate(self, qparams: Params, sample_u8: jax.Array):
         from repro.nn.conv import calibrate_requant_shifts
         return calibrate_requant_shifts(qparams, sample_u8, self._cfg())
+
+    def calibrate_requant(self, qparams: Params, sample_u8: jax.Array,
+                          per_channel: bool = True):
+        """Arbitrary-scale (mult, shift) calibration — see nn.conv."""
+        from repro.nn.conv import calibrate_requant
+        return calibrate_requant(qparams, sample_u8, self._cfg(),
+                                 per_channel=per_channel)
 
 
 def build_model(cfg, tp: int = 1, emulate_hw: Optional[bool] = None):

@@ -14,13 +14,13 @@ Variants required by the assigned architectures:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import shard
-from repro.nn.layers import Params, _normal, init_dense, init_mlp, mlp
+from repro.nn.layers import Params, _normal, init_mlp, mlp
 
 
 def init_moe(key, d: int, ff: int, n_experts: int, *, mlp_kind: str = "swiglu",

@@ -39,7 +39,9 @@ def clip_by_global_norm(tree, max_norm: float):
 
 
 def adamw_init(params) -> Dict[str, Any]:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),

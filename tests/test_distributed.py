@@ -9,13 +9,11 @@ import tempfile
 import textwrap
 
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import (LOGICAL_RULES, activate_mesh,
-                                        logical_to_spec, param_logical_axes,
-                                        param_pspec, zero1_pspec)
+from repro.distributed.sharding import (activate_mesh, logical_to_spec,
+                                        param_logical_axes)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -7,7 +7,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
-from repro.kernels.ops import trim_conv1d, trim_conv2d, trim_matmul
+from repro.kernels.ops import trim_conv2d
 from repro.kernels.trim_conv1d import trim_conv1d_pallas
 from repro.kernels.trim_conv2d import trim_conv2d_pallas
 from repro.kernels.trim_matmul import trim_matmul_pallas

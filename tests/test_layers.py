@@ -6,9 +6,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.trim.quant import (dequantize_psums, psum_bit_width,
-                                   quantize_activations_u8,
-                                   quantize_weights_i8)
+from repro.core.trim.quant import psum_bit_width, quantize_activations_u8
 from repro.nn.attention import (attn_layout, attention, flash_attention,
                                 init_attention, init_kv_cache)
 from repro.nn.mamba import (init_mamba, init_mamba_cache, mamba_dims,

@@ -1,6 +1,5 @@
 """TrIM-SSD Pallas kernel vs the chunked-scan oracle (shape/chunk sweep +
 hypothesis property)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,12 +1,10 @@
 """Substrate units: optimizer, schedules, data pipeline, checkpointing."""
 import os
-import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import (CheckpointManager, latest_step, restore_pytree,
                               save_pytree)

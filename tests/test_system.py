@@ -1,15 +1,13 @@
 """End-to-end system behaviour: training converges on structured data,
 fault-tolerant resume is exact, NaN steps are skipped, straggler detection
 fires, and the integer CNN datapath matches the bit-faithful engine."""
-import os
 import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs import CNN_SMOKES, get_smoke
+from repro.configs import get_smoke
 from repro.core.trim.engine import TrimEngine
 from repro.data import SyntheticLMDataset
 from repro.distributed import (StepConfig, StragglerMonitor, TrainLoopConfig,

@@ -6,15 +6,12 @@ import pytest
 
 from repro.core.trim.model import (ALEXNET_LAYERS, PAPER_ENGINE,
                                    PAPER_TABLE1_TRIM, PAPER_TABLE2_TRIM,
-                                   VGG16_LAYERS, ConvLayerSpec,
-                                   TrimEngineConfig, engine_cycles,
-                                   eyeriss_rs_memory_accesses,
+                                   VGG16_LAYERS, TrimEngineConfig,
+                                   engine_cycles, eyeriss_rs_memory_accesses,
                                    io_bandwidth_bits, layer_gops, layer_ops,
                                    network_gops, psum_buffer_bits,
-                                   steady_pe_activity, trim_memory_accesses,
-                                   ws_im2col_memory_accesses)
-from repro.core.trim.explore import (FIG7_GRID, derive_fpga_parameters,
-                                     explore)
+                                   steady_pe_activity, trim_memory_accesses)
+from repro.core.trim.explore import derive_fpga_parameters, explore
 
 
 def test_peak_throughput_exact():
