@@ -7,7 +7,11 @@ CI's bench-gate lane re-runs ``benchmarks.run kernels_fused`` and calls
 failing (exit 1) when any fused timing regresses by more than the
 threshold (default 1.3x) against the committed baseline.  Records present
 only on one side are reported but do not fail the gate (new shapes land
-with the PR that adds them; the baseline is refreshed deliberately).
+with the PR that adds them; the baseline is refreshed deliberately), and
+records that do not carry the requested metric are skipped with a warning
+— e.g. the ``conv2d_grads`` records carry ``us_grads`` but no
+``us_fused``/``speedup``, and vice versa — so mixed-metric record sets
+never KeyError the gate.
 
 Metric direction is automatic: ``us_*`` metrics are lower-is-better
 wall-clock timings, ``speedup`` is higher-is-better.  Absolute ``us_*``
@@ -43,7 +47,17 @@ def compare(baseline, current, metric, threshold):
             lines.append(f"NEW       {name}: no baseline entry (ok)")
             continue
         if name not in current:
-            lines.append(f"MISSING   {name}: not in current run (ok)")
+            lines.append(
+                f"MISSING   {name}: baseline entry absent from the fresh "
+                "run — skipped (warning)"
+            )
+            continue
+        if metric not in baseline[name] or metric not in current[name]:
+            side = "baseline" if metric not in baseline[name] else "current"
+            lines.append(
+                f"SKIPPED   {name}: {side} record has no metric "
+                f"'{metric}' (warning)"
+            )
             continue
         base = float(baseline[name][metric])
         cur = float(current[name][metric])

@@ -168,14 +168,20 @@ def bench_kernels() -> None:
 
 
 def bench_kernels_fused() -> None:
-    """Fused-strided TrIM conv vs decimate-then-activate (§V schedule).
+    """Fused-strided TrIM conv vs decimate-then-activate (§V schedule),
+    plus the training direction (``conv2d_grads``).
 
-    Both run through the public ``ops.trim_conv2d`` dispatcher, so on TPU
-    this times the Pallas kernels and on CPU the jnp oracle with identical
-    schedules: the emulate_hw arm does the full stride-1 sweep, decimates,
-    then runs bias+ReLU as a separate jit (3 extra HBM round-trips); the
-    fused arm computes only the strided outputs with the epilogue in the
-    same pass.  Writes BENCH_kernels.json for the perf trajectory.
+    Both arms run through the public ``ops.trim_conv2d`` dispatcher, so on
+    TPU this times the Pallas kernels and on CPU the jnp oracle with
+    identical schedules: the emulate_hw arm does the full stride-1 sweep,
+    decimates, then runs bias+ReLU as a separate jit (3 extra HBM
+    round-trips); the fused arm computes only the strided outputs with the
+    epilogue in the same pass.  The ``conv2d_grads`` records time
+    ``jax.value_and_grad`` w.r.t. (x, w, bias) through the same dispatcher
+    — on TPU that is the custom-VJP input-grad/weight-grad Pallas pair
+    (DESIGN.md §6), on CPU the oracle's autodiff; they carry a ``us_grads``
+    metric (gated separately by ``benchmarks.compare --metric us_grads``).
+    Writes BENCH_kernels.json for the perf trajectory.
     """
     import jax
     import jax.numpy as jnp
@@ -223,6 +229,35 @@ def bench_kernels_fused() -> None:
                         "us_fused": round(us_f, 1),
                         "us_decimate": round(us_d, 1),
                         "speedup": round(speedup, 2),
+                        "substrate": backend})
+
+    # Training direction: value+grad through the same dispatcher.
+    grad_shapes = [
+        ("conv2d_grads_alexnet_cl2", (1, 27, 27, 48), (5, 5, 48, 256), 1, 2),
+        ("conv2d_grads_vgg16_cl8", (1, 28, 28, 256), (3, 3, 256, 512), 1, 1),
+        ("conv2d_grads_wide512_s2", (1, 96, 1024, 64), (3, 3, 64, 64), 2, 1),
+    ]
+    print("section,name,us_grads,substrate")
+    for name, xs, ws, stride, pad in grad_shapes:
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, xs, jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 1), ws, jnp.float32)
+        b = jax.random.normal(jax.random.fold_in(key, 2), (ws[-1],),
+                              jnp.float32)
+
+        grad_fn = jax.jit(jax.value_and_grad(
+            lambda x, w, b: trim_conv2d(
+                x, w, b, stride=stride, padding=pad, relu=True).sum(),
+            argnums=(0, 1, 2)))
+
+        def grads():
+            return jax.block_until_ready(grad_fn(x, w, b))
+
+        us_g = _timeit(grads, n=3)
+        print(f"kernels_fused,{name},{us_g:.0f},{backend}")
+        records.append({"name": name, "x": list(xs), "w": list(ws),
+                        "stride": stride, "padding": pad,
+                        "us_grads": round(us_g, 1),
                         "substrate": backend})
     out_dir = os.environ.get("REPRO_BENCH_DIR", ".")
     os.makedirs(out_dir, exist_ok=True)

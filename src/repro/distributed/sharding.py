@@ -156,7 +156,8 @@ PARAM_AXIS_PATTERNS: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
     (r"conv1d/w", ("conv_k", "d_inner")),
     (r"(A_log|dt_bias|D)$", ("d_inner",)),
     (r"ssm_norm/scale", ("d_inner",)),
-    (r"conv/kernel", ("conv_k", "conv_k", "cin", "cout")),
+    # ConvNet params live in a list: conv/<layer-idx>/kernel.
+    (r"conv/(\d+/)?kernel", ("conv_k", "conv_k", "cin", "cout")),
     (r"(norm|ln)[^/]*/(scale|bias)", ("embed",)),
     (r"bias$", (None,)),
 )

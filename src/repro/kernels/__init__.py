@@ -4,7 +4,10 @@ attention kernel, each with a jit'd wrapper (ops.py) and a pure-jnp oracle
 
 - trim_conv2d — the paper's TrIM dataflow on the TPU memory hierarchy
   (single-fetch haloed input tiles, weight-stationary, VMEM psum accum),
-  stride-aware with a fused bias/ReLU/requant epilogue (DESIGN.md §2).
+  stride-aware with a fused bias/ReLU/requant epilogue (DESIGN.md §2) and
+  a custom VJP (trim_conv2d_vjp — dilated-cotangent input-grad + per-tap
+  weight-grad Pallas kernels, DESIGN.md §6) so training runs TrIM in both
+  directions.
 - trim_conv1d — TrIM-1D causal depthwise conv (the Mamba short-conv).
 - trim_matmul — the K=1 degenerate TrIM (weight-stationary blocked GEMM).
 - flash_attention — fused streaming-softmax attention (scores in VMEM),
@@ -14,6 +17,8 @@ attention kernel, each with a jit'd wrapper (ops.py) and a pure-jnp oracle
   psum-buffer pattern; the mamba2 train cell's deep §Perf fix).
 """
 from repro.kernels.ops import trim_conv1d, trim_conv2d, trim_matmul  # noqa: F401
+from repro.kernels.trim_conv2d_vjp import (  # noqa: F401
+    trim_conv2d_input_grad, trim_conv2d_wgrad_pallas)
 from repro.kernels.flash_attention import (  # noqa: F401
     flash_attention_pallas, flash_attention_ref)
 from repro.kernels.trim_ssd import trim_ssd_pallas  # noqa: F401

@@ -14,6 +14,13 @@ opts back into the hardware's behaviour for strided layers (§V, AlexNet
 CL1: full stride-1 sweep, downstream decimation) so model/benchmark
 comparisons against Tables I-II stay honest — on every substrate, including
 the CPU oracle.
+
+The float conv path is differentiable on every substrate: the Pallas arm
+carries a custom VJP (``trim_conv2d_vjp.py`` — dilated-cotangent forward
+for dL/dx, per-tap reduction kernel for dL/dw, DESIGN.md §6), so
+``jax.grad`` through ``trim_conv2d`` hits Pallas in both directions; the
+CPU-oracle arm differentiates through ``lax.conv`` as before.  The
+integer/requant datapath and ``emulate_hw`` stay forward-only.
 """
 from __future__ import annotations
 
@@ -27,6 +34,7 @@ from repro.kernels import ref
 from repro.kernels.requant import requant_mult_shift
 from repro.kernels.trim_conv1d import trim_conv1d_pallas
 from repro.kernels.trim_conv2d import trim_conv2d_pallas
+from repro.kernels.trim_conv2d_vjp import make_trim_conv2d_vjp
 from repro.kernels.trim_matmul import trim_matmul_pallas
 
 
@@ -108,10 +116,23 @@ def trim_conv2d(x: jax.Array, w: jax.Array,
 
     def one(xg, wg, bg, rq, bc, bf):
         if decimate:
+            # emulate_hw stays forward-only on the Pallas path (DESIGN.md
+            # §6): the FPGA-faithful decimation schedule is an inference/
+            # benchmark artifact, not a training datapath.
             o = trim_conv2d_pallas(xg, wg, padding=padding, tile_h=tile_h,
                                    tile_w=tile_w, block_c=bc, block_f=bf,
                                    interpret=not _on_tpu())
             return o[:, ::stride, ::stride, :]
+        if jnp.issubdtype(xg.dtype, jnp.floating):
+            # Float path: the custom-VJP-wrapped fused kernel, so jax.grad
+            # runs the Pallas input-grad/weight-grad pair instead of
+            # falling off to the oracle (DESIGN.md §6).
+            f = make_trim_conv2d_vjp(stride=stride, padding=padding,
+                                     relu=relu, has_bias=bg is not None,
+                                     tile_h=tile_h, tile_w=tile_w,
+                                     block_c=bc, block_f=bf,
+                                     interpret=not _on_tpu())
+            return f(xg, wg, bg) if bg is not None else f(xg, wg)
         return trim_conv2d_pallas(xg, wg, stride=stride, padding=padding,
                                   bias=bg, relu=relu,
                                   requant_shift=requant_shift,

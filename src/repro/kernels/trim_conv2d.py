@@ -44,11 +44,19 @@ validation.  When K <= S no halo is needed and the input is passed once.
 
 Supports float (bf16/f32 in, f32 accum) and the paper's integer mode
 (uint8 x int8 -> int32 accum).
+
+The tiling geometry (``conv2d_geom``), padding (``pad_conv2d_x`` /
+``pad_conv2d_w``), halo BlockSpec construction (``halo_x_specs``) and
+in-kernel halo assembly (``assemble_halo_tile``) are shared with the
+backward pass (``trim_conv2d_vjp.py``, DESIGN.md §6): the weight-grad
+kernel sweeps the *same* haloed input blocks and the input-grad kernel is
+this forward kernel applied to the dilated cotangent.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -122,6 +130,155 @@ def pick_tile_w(W_O: int, *, K: int, stride: int, RB: int, TH: int,
     return min(TW, W_O)
 
 
+@dataclasses.dataclass(frozen=True)
+class Conv2DGeom:
+    """Tiling geometry shared by the forward and weight-grad kernels.
+
+    Both passes sweep identical haloed input blocks with identical
+    (TH, TW) output tiles (DESIGN.md §2, §4, §6); computing the geometry
+    once keeps their block maps bit-identical.
+    """
+    S: int                  # stride
+    p: int                  # symmetric spatial padding
+    K: int
+    H_O: int
+    W_O: int
+    halo: int               # K - S (halo rows/cols when > 0)
+    has_halo: bool
+    TH: int                 # output rows per tile
+    n_ht: int
+    TW: int                 # output cols per tile
+    n_wt: int
+    tiled: bool             # n_wt > 1 (width-tiled grid)
+    RB: int                 # input rows per spatial block (TH * S)
+    CB: int                 # input cols per spatial block
+    Cb: int
+    n_ci: int
+    Fb: int
+    n_f: int
+    rows_needed: int        # padded input rows (block multiples + halo)
+    cols_needed: int
+
+
+def conv2d_geom(x_shape, w_shape, *, stride: int, padding: Optional[int],
+                tile_h: int, tile_w: Optional[int], block_c: int,
+                block_f: int, in_sz: int = 4, w_sz: int = 4,
+                out_sz: int = 4,
+                vmem_budget: int = VMEM_BUDGET_BYTES) -> Conv2DGeom:
+    """Derive the blocked-grid geometry for x (N,H,W,C), w (K,K,C,F)."""
+    N, H, W, C = x_shape
+    K, K2, Cw, F = w_shape
+    assert K == K2 and Cw == C, (x_shape, w_shape)
+    S = int(stride)
+    assert S >= 1
+    p = K // 2 if padding is None else padding
+    H_p, W_p = H + 2 * p, W + 2 * p
+    assert H_p >= K and W_p >= K, (x_shape, w_shape, p)
+    H_O, W_O = (H_p - K) // S + 1, (W_p - K) // S + 1
+
+    halo = K - S
+    has_halo = halo > 0
+    TH = min(tile_h, H_O)
+    if has_halo:
+        # The halo comes from a single following row block, so the block
+        # must be tall enough to contain it: K - S <= TH*S.  (Covers large
+        # kernels at small strides — e.g. K=11 stride-1 — and tiny maps.)
+        TH = max(TH, -(-halo // S))
+    n_ht = -(-H_O // TH)                    # ceil
+    Cb = min(block_c, C)
+    n_ci = -(-C // Cb)
+    Fb = min(block_f, F)
+    n_f = -(-F // Fb)
+
+    RB = TH * S                             # input rows per spatial block
+
+    if tile_w is not None:
+        TW = min(int(tile_w), W_O)
+    else:
+        TW = pick_tile_w(W_O, K=K, stride=S, RB=RB, TH=TH, W_p=W_p, Cb=Cb,
+                         Fb=Fb, in_sz=in_sz, w_sz=w_sz, out_sz=out_sz,
+                         vmem_budget=vmem_budget)
+    if has_halo:
+        # Same single-following-block constraint along the width.
+        TW = max(TW, -(-halo // S))
+    n_wt = -(-W_O // TW)                    # ceil
+    tiled = n_wt > 1
+    if not tiled:
+        TW = W_O
+
+    # Row padding: n_ht blocks of RB input rows cover the strided sweep; one
+    # extra RB-row block (halo case) makes the ht+1 halo index always valid.
+    n_rb = n_ht + (1 if has_halo else 0)
+    rows_needed = -(-max(n_rb * RB, H_p) // RB) * RB
+    if tiled:
+        # Column padding mirrors the rows: n_wt blocks of CB input columns
+        # plus one extra block backing the wt+1 halo columns.
+        CB = TW * S
+        n_cb = n_wt + (1 if has_halo else 0)
+        cols_needed = -(-max(n_cb * CB, W_p) // CB) * CB
+    else:
+        CB = W_p
+        cols_needed = W_p
+    return Conv2DGeom(S=S, p=p, K=K, H_O=H_O, W_O=W_O, halo=halo,
+                      has_halo=has_halo, TH=TH, n_ht=n_ht, TW=TW, n_wt=n_wt,
+                      tiled=tiled, RB=RB, CB=CB, Cb=Cb, n_ci=n_ci, Fb=Fb,
+                      n_f=n_f, rows_needed=rows_needed,
+                      cols_needed=cols_needed)
+
+
+def pad_conv2d_x(x: jax.Array, g: Conv2DGeom) -> jax.Array:
+    """Zero-pad x (N,H,W,C) to the blocked grid extent: the p-border plus
+    block-multiple rows/cols/channels (free w.r.t. the conv result)."""
+    N, H, W, C = x.shape
+    return jnp.pad(x, ((0, 0), (g.p, g.rows_needed - H - g.p),
+                       (g.p, g.cols_needed - W - g.p),
+                       (0, g.n_ci * g.Cb - C)))
+
+
+def pad_conv2d_w(w: jax.Array, g: Conv2DGeom) -> jax.Array:
+    """Zero-pad w (K,K,C,F) channels/filters to block multiples."""
+    return jnp.pad(w, ((0, 0), (0, 0), (0, g.n_ci * g.Cb - w.shape[2]),
+                       (0, g.n_f * g.Fb - w.shape[3])))
+
+
+def halo_x_specs(x_pad: jax.Array, g: Conv2DGeom,
+                 x_idx: Callable[[int, int], Callable]):
+    """The up-to-four shifted passes of the padded input (the ll/lh/hl/hh
+    table of DESIGN.md §4).  ``x_idx(dh, dw)`` must return the index_map
+    for a pass shifted ``dh`` row blocks and ``dw`` column blocks; the
+    grid signature is the caller's (forward and weight-grad kernels order
+    their grids differently)."""
+    xspec = (1, g.RB, g.CB, g.Cb)
+    inputs = [x_pad]
+    specs = [pl.BlockSpec(xspec, x_idx(0, 0))]
+    if g.has_halo and g.tiled:              # lh: halo columns, top rows
+        inputs.append(x_pad)
+        specs.append(pl.BlockSpec(xspec, x_idx(0, 1)))
+    if g.has_halo:                          # hl: halo rows
+        inputs.append(x_pad)
+        specs.append(pl.BlockSpec(xspec, x_idx(1, 0)))
+    if g.has_halo and g.tiled:              # hh: halo corner
+        inputs.append(x_pad)
+        specs.append(pl.BlockSpec(xspec, x_idx(1, 1)))
+    return inputs, specs
+
+
+def assemble_halo_tile(x_ll_ref, x_lh_ref, x_hl_ref, x_hh_ref,
+                       halo: int) -> jax.Array:
+    """Concatenate the ll/lh/hl/hh passes into the haloed VMEM tile —
+    (TH*S + max(K-S,0), TW*S + max(K-S,0)) input pixels, each fetched
+    exactly once per grid step (shared by forward and weight-grad)."""
+    x = x_ll_ref[0]                         # (TH*S, cols, Cb)
+    if x_lh_ref is not None:
+        x = jnp.concatenate([x, x_lh_ref[0][:, :halo]], axis=1)
+    if x_hl_ref is not None:
+        bot = x_hl_ref[0][:halo]
+        if x_hh_ref is not None:
+            bot = jnp.concatenate([bot, x_hh_ref[0][:halo, :halo]], axis=1)
+        x = jnp.concatenate([x, bot], axis=0)
+    return x
+
+
 def _trim_conv2d_kernel(*refs, K: int, TH: int, TW: int, n_cin: int,
                         stride: int, ci_axis: int, has_halo_h: bool,
                         has_halo_w: bool, has_bias: bool, relu: bool,
@@ -148,14 +305,7 @@ def _trim_conv2d_kernel(*refs, K: int, TH: int, TW: int, n_cin: int,
     # Assemble the haloed tile — (TH*S + max(K-S,0), TW*S + max(K-S,0))
     # input pixels, each fetched exactly once per (spatial, Cin) step.
     halo = K - stride
-    x = x_ll_ref[0]                         # (TH*S, cols, Cb)
-    if has_halo_w:
-        x = jnp.concatenate([x, x_lh_ref[0][:, :halo]], axis=1)
-    if has_halo_h:
-        bot = x_hl_ref[0][:halo]
-        if has_halo_w:
-            bot = jnp.concatenate([bot, x_hh_ref[0][:halo, :halo]], axis=1)
-        x = jnp.concatenate([x, bot], axis=0)
+    x = assemble_halo_tile(x_ll_ref, x_lh_ref, x_hl_ref, x_hh_ref, halo)
     w = w_ref[...]                          # (K, K, Cb, Fb) — stationary
     acc = acc_ref[...]
     cb = x.shape[-1]
@@ -219,11 +369,7 @@ def trim_conv2d_pallas(x: jax.Array, w: jax.Array, *,
     and slices the result back.
     """
     N, H, W, C = x.shape
-    K, K2, Cw, F = w.shape
-    assert K == K2 and Cw == C, (x.shape, w.shape)
-    S = int(stride)
-    assert S >= 1
-    p = K // 2 if padding is None else padding
+    K, _, _, F = w.shape
     acc_dtype = _acc_dtype(x.dtype)
     assert requant_shift is None or requant is None, \
         "requant_shift (power-of-two) and requant (mult+shift) are exclusive"
@@ -233,61 +379,19 @@ def trim_conv2d_pallas(x: jax.Array, w: jax.Array, *,
     if out_dtype is None:
         out_dtype = acc_dtype if acc_dtype == jnp.int32 else x.dtype
 
-    H_p, W_p = H + 2 * p, W + 2 * p
-    assert H_p >= K and W_p >= K, (x.shape, w.shape, p)
-    H_O, W_O = (H_p - K) // S + 1, (W_p - K) // S + 1
+    g = conv2d_geom(x.shape, w.shape, stride=stride, padding=padding,
+                    tile_h=tile_h, tile_w=tile_w, block_c=block_c,
+                    block_f=block_f, in_sz=x.dtype.itemsize,
+                    w_sz=w.dtype.itemsize,
+                    out_sz=jnp.dtype(out_dtype).itemsize,
+                    vmem_budget=vmem_budget)
+    TH, TW, n_ht, n_wt = g.TH, g.TW, g.n_ht, g.n_wt
+    Cb, n_ci, Fb, n_f = g.Cb, g.n_ci, g.Fb, g.n_f
 
-    halo = K - S
-    has_halo = halo > 0
-    TH = min(tile_h, H_O)
-    if has_halo:
-        # The halo comes from a single following row block, so the block
-        # must be tall enough to contain it: K - S <= TH*S.  (Covers large
-        # kernels at small strides — e.g. K=11 stride-1 — and tiny maps.)
-        TH = max(TH, -(-halo // S))
-    n_ht = -(-H_O // TH)                    # ceil
-    Cb = min(block_c, C)
-    n_ci = -(-C // Cb)
-    Fb = min(block_f, F)
-    n_f = -(-F // Fb)
+    x_pad = pad_conv2d_x(x, g)
+    w_pad = pad_conv2d_w(w, g)
 
-    RB = TH * S                             # input rows per spatial block
-
-    if tile_w is not None:
-        TW = min(int(tile_w), W_O)
-    else:
-        TW = pick_tile_w(W_O, K=K, stride=S, RB=RB, TH=TH, W_p=W_p, Cb=Cb,
-                         Fb=Fb, in_sz=x.dtype.itemsize,
-                         w_sz=w.dtype.itemsize,
-                         out_sz=jnp.dtype(out_dtype).itemsize,
-                         vmem_budget=vmem_budget)
-    if has_halo:
-        # Same single-following-block constraint along the width.
-        TW = max(TW, -(-halo // S))
-    n_wt = -(-W_O // TW)                    # ceil
-    tiled = n_wt > 1
-    if not tiled:
-        TW = W_O
-
-    # Row padding: n_ht blocks of RB input rows cover the strided sweep; one
-    # extra RB-row block (halo case) makes the ht+1 halo index always valid.
-    n_rb = n_ht + (1 if has_halo else 0)
-    rows_needed = -(-max(n_rb * RB, H_p) // RB) * RB
-    if tiled:
-        # Column padding mirrors the rows: n_wt blocks of CB input columns
-        # plus one extra block backing the wt+1 halo columns.
-        CB = TW * S
-        n_cb = n_wt + (1 if has_halo else 0)
-        cols_needed = -(-max(n_cb * CB, W_p) // CB) * CB
-    else:
-        CB = W_p
-        cols_needed = W_p
-    x_pad = jnp.pad(x, ((0, 0), (p, rows_needed - H - p),
-                        (p, cols_needed - W - p), (0, n_ci * Cb - C)))
-    w_pad = jnp.pad(w, ((0, 0), (0, 0), (0, n_ci * Cb - C),
-                        (0, n_f * Fb - F)))
-
-    if tiled:
+    if g.tiled:
         grid = (N * n_ht, n_wt, n_f, n_ci)
         ci_axis = 3
 
@@ -319,18 +423,7 @@ def trim_conv2d_pallas(x: jax.Array, w: jax.Array, *,
         def o_idx(bt, f, c):
             return (bt // n_ht, bt % n_ht, 0, f)
 
-    xspec = (1, RB, CB, Cb)
-    inputs = [x_pad]
-    in_specs = [pl.BlockSpec(xspec, x_idx(0, 0))]
-    if has_halo and tiled:                  # lh: halo columns, top rows
-        inputs.append(x_pad)
-        in_specs.append(pl.BlockSpec(xspec, x_idx(0, 1)))
-    if has_halo:                            # hl: halo rows
-        inputs.append(x_pad)
-        in_specs.append(pl.BlockSpec(xspec, x_idx(1, 0)))
-    if has_halo and tiled:                  # hh: halo corner
-        inputs.append(x_pad)
-        in_specs.append(pl.BlockSpec(xspec, x_idx(1, 1)))
+    inputs, in_specs = halo_x_specs(x_pad, g, x_idx)
     inputs.append(w_pad)
     in_specs.append(pl.BlockSpec((K, K, Cb, Fb), w_idx))
     if bias is not None:
@@ -355,9 +448,9 @@ def trim_conv2d_pallas(x: jax.Array, w: jax.Array, *,
         in_specs.append(pl.BlockSpec((1, Fb), chan_idx()))
 
     kernel = functools.partial(_trim_conv2d_kernel, K=K, TH=TH, TW=TW,
-                               n_cin=n_ci, stride=S, ci_axis=ci_axis,
-                               has_halo_h=has_halo,
-                               has_halo_w=has_halo and tiled,
+                               n_cin=n_ci, stride=g.S, ci_axis=ci_axis,
+                               has_halo_h=g.has_halo,
+                               has_halo_w=g.has_halo and g.tiled,
                                has_bias=bias is not None, relu=relu,
                                requant_shift=requant_shift,
                                has_requant=requant is not None)
@@ -371,4 +464,4 @@ def trim_conv2d_pallas(x: jax.Array, w: jax.Array, *,
         scratch_shapes=[_scratch((TH, TW, Fb), acc_dtype)],
         interpret=interpret,
     )(*inputs)
-    return out[:, :H_O, :W_O, :F]
+    return out[:, :g.H_O, :g.W_O, :F]

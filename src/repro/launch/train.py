@@ -6,16 +6,30 @@
 On a real TPU slice this would run under `jax.distributed.initialize()`
 with the production mesh; in this container it runs the smoke config on
 the host devices (the full configs are exercised by the dry-run).
+
+CNN archs (vgg16 / alexnet — the paper's own workloads) train through the
+TrIM conv path in BOTH directions: the fused forward Pallas kernel and its
+custom VJP (input-grad / weight-grad kernel pair, DESIGN.md §6).
+
+  PYTHONPATH=src python -m repro.launch.train --arch vgg16 --smoke \
+      --steps 3 --batch 4 --force-pallas
+
+``--force-pallas`` runs the Pallas kernels off-TPU in interpret mode —
+CI's train-smoke lane uses it to prove the backward path on CPU runners;
+the launcher exits non-zero unless the final loss AND grad_norm are
+finite, so backward-path regressions fail PRs.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import get_config, get_smoke
-from repro.data import SyntheticLMDataset
+from repro.configs import CNN_REGISTRY, CNN_SMOKES, get_config, get_smoke
+from repro.data import SyntheticImageDataset, SyntheticLMDataset
 from repro.distributed import (StepConfig, TrainLoopConfig, activate_mesh,
                                make_train_state, make_train_step, state_pspec,
                                train_loop)
@@ -37,19 +51,41 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--force-pallas", action="store_true",
+                    help="CNN archs: run the TrIM Pallas kernels (forward "
+                         "+ custom-VJP backward) even off-TPU, in "
+                         "interpret mode (DESIGN.md §6)")
     ap.add_argument("--tp", type=int, default=1,
                     help="model-axis size of the host mesh")
     args = ap.parse_args()
 
-    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    is_cnn = args.arch in CNN_REGISTRY
+    if is_cnn:
+        cfg = CNN_SMOKES[args.arch] if args.smoke else CNN_REGISTRY[args.arch]
+        if args.force_pallas:
+            cfg = dataclasses.replace(cfg, force_pallas=True)
+        H, W = cfg.input_hw
+        c_in = cfg.layers[0].M
+        ds = SyntheticImageDataset(hw=cfg.input_hw, channels=c_in,
+                                   n_classes=cfg.n_classes,
+                                   global_batch=args.batch)
+        batch_shapes = {
+            "images": jax.ShapeDtypeStruct((args.batch, H, W, c_in),
+                                           jnp.float32),
+            "labels": jax.ShapeDtypeStruct((args.batch,), jnp.int32)}
+    else:
+        cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+        ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=args.seq + 1,
+                                global_batch=args.batch)
+        batch_shapes = {
+            "tokens": jax.ShapeDtypeStruct((args.batch, args.seq + 1),
+                                           jnp.int32)}
+
     mesh = make_host_mesh(model=args.tp)
     model = build_model(cfg, tp=int(mesh.shape["model"]))
     scfg = StepConfig(peak_lr=args.lr, warmup_steps=max(args.steps // 20, 5),
                       total_steps=args.steps, accum=args.accum,
                       compress_grads=args.compress_grads)
-
-    ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=args.seq + 1,
-                            global_batch=args.batch)
 
     with activate_mesh(mesh) as ctx, mesh:
         state = make_train_state(model, jax.random.PRNGKey(0))
@@ -58,9 +94,7 @@ def main() -> None:
         state = jax.device_put(state, sshard)
         step = jax.jit(make_train_step(model, scfg, mesh),
                        in_shardings=(sshard, _to_shardings(
-                           batch_pspec({"tokens": jax.ShapeDtypeStruct(
-                               (args.batch, args.seq + 1), jnp.int32)},
-                               ctx), mesh)),
+                           batch_pspec(batch_shapes, ctx), mesh)),
                        out_shardings=(sshard, None),
                        donate_argnums=(0,))
         out = train_loop(step, state, ds,
@@ -68,9 +102,23 @@ def main() -> None:
                                          ckpt_every=args.ckpt_every,
                                          ckpt_dir=args.ckpt_dir),
                          state_shardings=sshard)
-    losses = [h["loss"] for h in out["history"]]
+    hist = out["history"]
+    losses = [h["loss"] for h in hist]
+    grad_norm = hist[-1].get("grad_norm", float("nan"))
     print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f}; "
+          f"grad_norm {grad_norm:.4f}; "
           f"{len(out['stragglers'])} straggler steps")
+    # Backward-path health gate (CI train-smoke lane): a broken VJP shows
+    # up as NaN/Inf loss or grad_norm — fail loudly, not silently.  Every
+    # step is checked (skip_nonfinite keeps the *state* sane on a bad
+    # step, which would otherwise mask a batch-dependent NaN from a
+    # final-step-only check).
+    bad = [h["step"] for h in hist
+           if not (np.isfinite(h["loss"])
+                   and np.isfinite(h.get("grad_norm", float("nan"))))]
+    if bad:
+        raise SystemExit(f"[train] FAIL: non-finite loss or grad_norm at "
+                         f"steps {bad} — backward path broken")
 
 
 if __name__ == "__main__":

@@ -315,6 +315,11 @@ class ConvBlockSpec:
     per-channel calibrations ride in the params dict instead (a
     ``"requant"`` entry of (F,) int32 arrays, which takes precedence).
     ``tile_w`` overrides the kernel's VMEM-budget width-tile auto-pick.
+
+    ``force_pallas`` runs the Pallas kernels (forward AND the custom-VJP
+    backward pair, DESIGN.md §6) even off-TPU, in interpret mode — the
+    gradient-parity tests and CI's train-smoke lane use it to prove the
+    TrIM backward path on CPU runners.
     """
     stride: int = 1
     padding: Optional[int] = None
@@ -325,6 +330,7 @@ class ConvBlockSpec:
     requant: Optional[Tuple[int, int]] = None
     tile_w: Optional[int] = None
     emulate_hw: bool = False
+    force_pallas: bool = False
 
 
 def max_pool2x2(x: jax.Array) -> jax.Array:
@@ -353,7 +359,8 @@ def conv_block(p: Params, x: jax.Array, spec: ConvBlockSpec) -> jax.Array:
     x = trim_conv2d(x, w, p.get("bias"), requant, stride=spec.stride,
                     padding=spec.padding, groups=spec.groups, relu=spec.relu,
                     requant_shift=spec.requant_shift, tile_w=spec.tile_w,
-                    emulate_hw=spec.emulate_hw)
+                    emulate_hw=spec.emulate_hw,
+                    force_pallas=spec.force_pallas)
     x = shard(x, "batch", "img_h", "img_w", "cout")
     if spec.pool:
         x = max_pool2x2(x)

@@ -45,6 +45,7 @@ class CNNConfig:
     n_classes: int = 1000
     input_hw: Tuple[int, int] = (224, 224)
     emulate_hw: bool = False             # FPGA-faithful strided-layer path
+    force_pallas: bool = False           # Pallas fwd + VJP even off-TPU
 
 
 VGG16_CNN = CNNConfig(
@@ -98,22 +99,27 @@ def conv_block_specs(cfg: CNNConfig, c_in: Optional[int] = None,
         specs.append(ConvBlockSpec(
             stride=l.stride, padding=l.padding, groups=c // l.M,
             relu=True, pool=i in cfg.pool_after,
-            emulate_hw=cfg.emulate_hw))
+            emulate_hw=cfg.emulate_hw, force_pallas=cfg.force_pallas))
         c = l.N
     return tuple(specs)
 
 
 def cnn_forward(params: Params, images: jax.Array, cfg: CNNConfig,
-                emulate_hw: Optional[bool] = None) -> jax.Array:
+                emulate_hw: Optional[bool] = None,
+                force_pallas: Optional[bool] = None) -> jax.Array:
     """images (B, H, W, C) float -> logits (B, n_classes).
 
     Each conv layer runs as one fused conv_block (conv + bias + ReLU inside
     the kernel flush); ``emulate_hw`` (default: cfg.emulate_hw) opts into
-    the FPGA's decimation schedule for strided layers."""
+    the FPGA's decimation schedule for strided layers.  ``force_pallas``
+    (default: cfg.force_pallas) runs the Pallas kernels — forward and the
+    custom-VJP backward pair — even off-TPU, so ``jax.grad`` of this
+    forward exercises the TrIM kernel in both directions (DESIGN.md §6)."""
     x = images
     hw = cfg.emulate_hw if emulate_hw is None else emulate_hw
-    if hw != cfg.emulate_hw:
-        cfg = dataclasses.replace(cfg, emulate_hw=hw)
+    fp = cfg.force_pallas if force_pallas is None else force_pallas
+    if hw != cfg.emulate_hw or fp != cfg.force_pallas:
+        cfg = dataclasses.replace(cfg, emulate_hw=hw, force_pallas=fp)
     specs = conv_block_specs(cfg, c_in=x.shape[-1])
     for i, spec in enumerate(specs):
         x = conv_block(params["conv"][i], x, spec)
@@ -127,8 +133,10 @@ def cnn_forward(params: Params, images: jax.Array, cfg: CNNConfig,
 
 def cnn_loss(params: Params, batch: Dict[str, jax.Array], cfg: CNNConfig,
              emulate_hw: Optional[bool] = None,
+             force_pallas: Optional[bool] = None,
              ) -> Tuple[jax.Array, Dict[str, Any]]:
-    logits = cnn_forward(params, batch["images"], cfg, emulate_hw=emulate_hw)
+    logits = cnn_forward(params, batch["images"], cfg, emulate_hw=emulate_hw,
+                         force_pallas=force_pallas)
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     ll = jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
     ce = -ll.mean()
@@ -181,17 +189,20 @@ def _int8_forward(qparams: Params, images_u8: jax.Array, cfg: CNNConfig,
             # requant in one kernel pass (DESIGN.md §4).
             x = trim_conv2d(x, w, None, tuple(requant[i]), stride=l.stride,
                             padding=l.padding, groups=groups, relu=True,
-                            emulate_hw=cfg.emulate_hw)
+                            emulate_hw=cfg.emulate_hw,
+                            force_pallas=cfg.force_pallas)
         elif requant_shifts is not None and not last:
             # Calibrated shift: conv + ReLU + requant in one kernel pass.
             x = trim_conv2d(x, w, stride=l.stride, padding=l.padding,
                             groups=groups, relu=True,
                             requant_shift=int(requant_shifts[i]),
-                            emulate_hw=cfg.emulate_hw)
+                            emulate_hw=cfg.emulate_hw,
+                            force_pallas=cfg.force_pallas)
         else:
             psum = trim_conv2d(x, w, stride=l.stride, padding=l.padding,
                                groups=groups, relu=True,
-                               emulate_hw=cfg.emulate_hw)
+                               emulate_hw=cfg.emulate_hw,
+                               force_pallas=cfg.force_pallas)
             if last:
                 return psum, shifts
             # power-of-two requantize back to uint8 for the next layer
@@ -262,7 +273,8 @@ def calibrate_requant(qparams: Params, sample_u8: jax.Array, cfg: CNNConfig,
         groups = x.shape[-1] // w.shape[-2]
         psum = trim_conv2d(x, w, stride=l.stride, padding=l.padding,
                            groups=groups, relu=True,
-                           emulate_hw=cfg.emulate_hw)
+                           emulate_hw=cfg.emulate_hw,
+                           force_pallas=cfg.force_pallas)
         axes = (0, 1, 2) if per_channel else None
         amax = np.maximum(np.asarray(psum.max(axis=axes),
                                      np.float64), 1.0)

@@ -316,16 +316,27 @@ class ConvNet:
     ``emulate_hw`` selects the FPGA-faithful decimation schedule for strided
     layers (stride-1 sweep + downstream epilogue) instead of the stride-aware
     fused kernel — see ``kernels.ops.trim_conv2d`` and DESIGN.md §2.
+
+    ``force_pallas`` runs the Pallas kernels even off-TPU (interpret mode).
+    With the custom VJP (DESIGN.md §6) that covers *both* directions:
+    ``jax.grad`` of ``loss``/``forward`` runs the TrIM input-grad and
+    weight-grad kernels instead of the lax.conv oracle — what the
+    gradient-parity tests and CI's train-smoke lane assert.
     """
 
     cfg: "CNNConfig"
     emulate_hw: Optional[bool] = None    # None: follow cfg.emulate_hw
+    force_pallas: Optional[bool] = None  # None: follow cfg.force_pallas
 
     def _cfg(self) -> "CNNConfig":
         import dataclasses as _dc
-        if self.emulate_hw is None or self.emulate_hw == self.cfg.emulate_hw:
-            return self.cfg
-        return _dc.replace(self.cfg, emulate_hw=self.emulate_hw)
+        cfg = self.cfg
+        if self.emulate_hw is not None and self.emulate_hw != cfg.emulate_hw:
+            cfg = _dc.replace(cfg, emulate_hw=self.emulate_hw)
+        if (self.force_pallas is not None
+                and self.force_pallas != cfg.force_pallas):
+            cfg = _dc.replace(cfg, force_pallas=self.force_pallas)
+        return cfg
 
     def init(self, key) -> Params:
         from repro.nn.conv import init_cnn
@@ -362,10 +373,12 @@ class ConvNet:
                                  per_channel=per_channel)
 
 
-def build_model(cfg, tp: int = 1, emulate_hw: Optional[bool] = None):
+def build_model(cfg, tp: int = 1, emulate_hw: Optional[bool] = None,
+                force_pallas: Optional[bool] = None):
     from repro.nn.conv import CNNConfig
     if isinstance(cfg, CNNConfig):
-        return ConvNet(cfg, emulate_hw=emulate_hw)
+        return ConvNet(cfg, emulate_hw=emulate_hw,
+                       force_pallas=force_pallas)
     if cfg.family == "encdec":
         return EncDecLM(cfg, tp)
     return CausalLM(cfg, tp)

@@ -1,0 +1,203 @@
+"""Gradient-parity suite for the TrIM conv2d custom VJP (DESIGN.md §6).
+
+``jax.grad`` through the Pallas path (input-grad transposed-conv forward +
+weight-grad per-tap reduction kernel, interpret mode) must match the
+lax.conv oracle path for stride 1/2/4, K=3/5/11, grouped conv, partial
+W-tiles, and fp32/bf16 inputs — plus the model-level acceptance criterion:
+grads of the full ConvNet loss agree to 1e-4 on CPU."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.trim.model import ConvLayerSpec
+from repro.kernels import ref
+from repro.kernels.ops import trim_conv2d
+from repro.kernels.trim_conv2d_vjp import (trim_conv2d_input_grad,
+                                           trim_conv2d_wgrad_pallas)
+from repro.nn.conv import CNNConfig, cnn_loss, init_cnn
+
+
+def _assert_tree_close(a, b, rtol=1e-4, atol=1e-4):
+    for pa, pb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(pa, np.float32),
+                                   np.asarray(pb, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# kernel-level: the two backward kernels vs the oracle VJP
+# ---------------------------------------------------------------------------
+
+GRAD_CASES = [
+    # (H, W, K, stride, pad) — pad=None means 'same' (K//2)
+    (12, 12, 3, 1, None),
+    (12, 13, 3, 2, 1),
+    (11, 12, 3, 2, 0),           # (H+2p-K) % S > 0: remainder rows/cols
+    (13, 13, 5, 1, 2),
+    (13, 15, 5, 2, 2),
+    (23, 23, 11, 4, 0),          # AlexNet CL1 shape family
+]
+
+
+@pytest.mark.parametrize("case", GRAD_CASES, ids=str)
+def test_backward_kernels_match_oracle_vjp(case):
+    """Input-grad and weight-grad Pallas kernels == jax.vjp of the oracle
+    conv, directly at the kernel wrappers."""
+    H, W, K, stride, pad = case
+    key = jax.random.PRNGKey(sum(v or 0 for v in case))
+    x = jax.random.normal(key, (2, H, W, 4), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, K, 4, 8),
+                          jnp.float32)
+    out, vjp = jax.vjp(
+        lambda x, w: ref.conv2d_ref(x, w, stride=stride, padding=pad), x, w)
+    g = jax.random.normal(jax.random.fold_in(key, 2), out.shape, jnp.float32)
+    dx_ref, dw_ref = vjp(g)
+    dx = trim_conv2d_input_grad(g, w, x_hw=(H, W), stride=stride,
+                                padding=pad, tile_h=4, block_c=4, block_f=8,
+                                interpret=True)
+    dw = trim_conv2d_wgrad_pallas(x, g, K=K, stride=stride, padding=pad,
+                                  tile_h=4, block_c=4, block_f=8,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(dw_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# dispatcher-level: jax.grad through ops.trim_conv2d, Pallas vs oracle
+# ---------------------------------------------------------------------------
+
+OPS_CASES = [
+    # (H, W, K, stride, pad, groups, tile_w)
+    (12, 12, 3, 1, None, 1, None),
+    (11, 12, 3, 2, 0, 1, None),
+    (13, 15, 5, 2, 2, 1, None),
+    (23, 23, 11, 4, 0, 1, None),
+    (10, 10, 3, 1, None, 2, None),    # grouped (AlexNet two-tower)
+    (9, 12, 3, 2, 1, 2, None),        # grouped + stride 2
+    (8, 13, 3, 1, 1, 1, 4),           # partial W-tiles (W_O=13, TW=4)
+    (9, 13, 3, 2, 1, 1, 3),           # partial W-tiles + stride-2 halo cols
+]
+
+
+def _ops_grads(x, w, b, cot, force, **kw):
+    def f(x, w, b):
+        out = trim_conv2d(x, w, b, relu=True, force_pallas=force,
+                          block_c=4, block_f=4, **kw)
+        return (out.astype(jnp.float32) * cot).sum()
+    return jax.grad(f, argnums=(0, 1, 2))(x, w, b)
+
+
+@pytest.mark.parametrize("case", OPS_CASES, ids=str)
+def test_ops_grad_parity_fp32(case):
+    """jax.grad of the fused (conv+bias+ReLU) dispatcher: Pallas custom VJP
+    == oracle autodiff, to 1e-4 (the acceptance tolerance)."""
+    H, W, K, stride, pad, groups, tile_w = case
+    C, F = 4, 8
+    key = jax.random.PRNGKey(sum(v or 0 for v in case))
+    x = jax.random.normal(key, (2, H, W, C), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1),
+                          (K, K, C // groups, F), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(key, 2), (F,), jnp.float32)
+    kw = dict(stride=stride, padding=pad, groups=groups, tile_w=tile_w)
+    out_sd = jax.eval_shape(
+        lambda x, w, b: trim_conv2d(x, w, b, relu=True, **kw), x, w, b)
+    cot = jax.random.normal(jax.random.fold_in(key, 3), out_sd.shape,
+                            jnp.float32)
+    g_pal = _ops_grads(x, w, b, cot, True, **kw)
+    g_ref = _ops_grads(x, w, b, cot, False, **kw)
+    _assert_tree_close(g_pal, g_ref)
+
+
+def test_ops_grad_parity_bf16():
+    """bf16 inputs: the Pallas VJP accumulates in f32 and returns bf16
+    cotangents; parity vs the oracle within bf16 rounding."""
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (2, 10, 11, 4), jnp.bfloat16)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 4, 8),
+                          jnp.bfloat16)
+    b = jax.random.normal(jax.random.fold_in(key, 2), (8,), jnp.float32)
+    cot = jax.random.normal(jax.random.fold_in(key, 3), (2, 5, 6, 8),
+                            jnp.float32)
+
+    def f(x, w, b, force):
+        out = trim_conv2d(x, w, b, stride=2, relu=True, force_pallas=force,
+                          block_c=4, block_f=4)
+        return (out.astype(jnp.float32) * cot).sum()
+
+    g_pal = jax.grad(lambda *a: f(*a, True), (0, 1, 2))(x, w, b)
+    for a in g_pal[:2]:
+        assert a.dtype == jnp.bfloat16          # cotangents follow primals
+    g_ref = jax.grad(lambda *a: f(*a, False), (0, 1, 2))(x, w, b)
+    scale = max(float(jnp.abs(g.astype(jnp.float32)).max())
+                for g in jax.tree.leaves(g_ref))
+    _assert_tree_close(g_pal, g_ref, rtol=0.1, atol=0.05 * scale)
+
+
+def test_emulate_hw_stays_forward_capable():
+    """emulate_hw replays the FPGA decimation schedule; on the CPU oracle
+    arm it still differentiates (through lax.conv) — the Pallas VJP is
+    deliberately not wired into that mode (DESIGN.md §6)."""
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (1, 9, 9, 4), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 4, 8),
+                          jnp.float32)
+    g = jax.grad(lambda x: trim_conv2d(x, w, stride=2,
+                                       emulate_hw=True).sum())(x)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+# ---------------------------------------------------------------------------
+# model-level: the acceptance criterion
+# ---------------------------------------------------------------------------
+
+#: stride-2 + grouped two-tower mini-CNN — the acceptance case the paper
+#: smokes don't cover (vgg16-smoke is all stride 1, alexnet-smoke stride 4).
+GROUPED_S2_CNN = CNNConfig(
+    "grouped-s2-smoke",
+    layers=(
+        ConvLayerSpec("CL1", 12, 12, 3, 3, 8, stride=1, pad=1),
+        ConvLayerSpec("CL2", 12, 12, 3, 4, 8, stride=2, pad=1),   # groups=2
+        ConvLayerSpec("CL3", 6, 6, 3, 8, 8, stride=1, pad=1),
+    ),
+    pool_after=(), classifier=(16,), n_classes=4, input_hw=(12, 12))
+
+
+def _cnn_grad_parity(cfg, hw, c_in, n_classes, seed=0):
+    params = init_cnn(jax.random.PRNGKey(seed), cfg)
+    key = jax.random.PRNGKey(seed + 1)
+    batch = {"images": jax.random.normal(key, (2,) + hw + (c_in,),
+                                         jnp.float32),
+             "labels": jax.random.randint(jax.random.fold_in(key, 1), (2,),
+                                          0, n_classes, jnp.int32)}
+    g_ref = jax.grad(lambda p: cnn_loss(p, batch, cfg)[0])(params)
+    cfg_p = dataclasses.replace(cfg, force_pallas=True)
+    g_pal = jax.grad(lambda p: cnn_loss(p, batch, cfg_p)[0])(params)
+    _assert_tree_close(g_pal, g_ref)
+
+
+def test_convnet_grad_parity_vgg16_smoke():
+    """Acceptance: jax.grad of the full ConvNet loss (stride-1 3x3 stack +
+    pool + FC head) — Pallas VJP vs oracle to 1e-4 on CPU."""
+    from repro.configs import CNN_SMOKES
+    cfg = CNN_SMOKES["vgg16"]
+    _cnn_grad_parity(cfg, cfg.input_hw, cfg.layers[0].M, cfg.n_classes)
+
+
+def test_convnet_grad_parity_grouped_stride2():
+    """Acceptance: stride-2 + grouped conv layers through the model path."""
+    cfg = GROUPED_S2_CNN
+    _cnn_grad_parity(cfg, cfg.input_hw, cfg.layers[0].M, cfg.n_classes,
+                     seed=3)
+
+
+def test_convnet_grad_parity_alexnet_smoke():
+    """Large-kernel family: K=11 stride-4 + K=5 layers (alexnet-smoke)."""
+    from repro.configs import CNN_SMOKES
+    cfg = CNN_SMOKES["alexnet"]
+    _cnn_grad_parity(cfg, cfg.input_hw, cfg.layers[0].M, cfg.n_classes,
+                     seed=5)
