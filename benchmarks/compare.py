@@ -13,6 +13,12 @@ records that do not carry the requested metric are skipped with a warning
 ``us_fused``/``speedup``, and vice versa — so mixed-metric record sets
 never KeyError the gate.
 
+Each ``kernels_fused`` record also carries the resolved execution plan
+(substrate, chosen width tile, epilogue kind — ``repro.engine``); when a
+record regresses, the plan diff between baseline and current is printed so
+schedule changes (a different tile pick, a substrate switch) are
+attributable at the gate.
+
 Metric direction is automatic: ``us_*`` metrics are lower-is-better
 wall-clock timings, ``speedup`` is higher-is-better.  Absolute ``us_*``
 comparisons are only meaningful against a baseline from the same runner
@@ -71,6 +77,16 @@ def compare(baseline, current, metric, threshold):
             failures.append(name)
         msg = f"{status:<10}{name}: {metric} {base:.1f} -> {cur:.1f}"
         lines.append(msg + f" ({ratio:.2f}x worse, gate {threshold:.2f}x)")
+        if status == "REGRESSED":
+            # Attribute the regression: records carry the resolved
+            # execution plan (substrate / width tile / epilogue kind) —
+            # print the diff so schedule changes are visible at the gate.
+            bp = baseline[name].get("plan")
+            cp = current[name].get("plan")
+            if bp != cp:
+                lines.append(f"          plan changed: {bp} -> {cp}")
+            elif cp is not None:
+                lines.append(f"          plan unchanged: {cp}")
     return failures, lines
 
 

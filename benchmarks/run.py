@@ -185,7 +185,18 @@ def bench_kernels_fused() -> None:
     """
     import jax
     import jax.numpy as jnp
+    from repro.engine import ExecutionPolicy, plan_conv_layer
     from repro.kernels.ops import trim_conv2d
+
+    emu_policy = ExecutionPolicy(emulate_hw=True)
+
+    def plan_record(xs, ws, stride, pad):
+        """The resolved schedule for the fused arm (auto policy) — recorded
+        so bench-gate regressions are attributable to schedule changes."""
+        plan = plan_conv_layer(
+            (xs[1], xs[2]), xs[3], ws[0], ws[3], stride=stride, padding=pad,
+            relu=True, has_bias=True, policy=ExecutionPolicy())
+        return plan.describe()
 
     shapes = [
         # name, x shape (NHWC), w shape (KKCF), stride, pad
@@ -216,7 +227,7 @@ def bench_kernels_fused() -> None:
 
         def decimate():
             o = trim_conv2d(x, w, stride=stride, padding=pad,
-                            emulate_hw=True)
+                            policy=emu_policy)
             return jax.block_until_ready(epilogue(o))
 
         us_f = _timeit(fused, n=3)
@@ -229,7 +240,8 @@ def bench_kernels_fused() -> None:
                         "us_fused": round(us_f, 1),
                         "us_decimate": round(us_d, 1),
                         "speedup": round(speedup, 2),
-                        "substrate": backend})
+                        "substrate": backend,
+                        "plan": plan_record(xs, ws, stride, pad)})
 
     # Training direction: value+grad through the same dispatcher.
     grad_shapes = [
@@ -258,7 +270,8 @@ def bench_kernels_fused() -> None:
         records.append({"name": name, "x": list(xs), "w": list(ws),
                         "stride": stride, "padding": pad,
                         "us_grads": round(us_g, 1),
-                        "substrate": backend})
+                        "substrate": backend,
+                        "plan": plan_record(xs, ws, stride, pad)})
     out_dir = os.environ.get("REPRO_BENCH_DIR", ".")
     os.makedirs(out_dir, exist_ok=True)
     out_path = os.path.join(out_dir, "BENCH_kernels.json")

@@ -40,15 +40,21 @@ def demo_trim_dataflow():
 
 
 def demo_kernel():
+    from repro.engine import ExecutionPolicy, plan_conv_layer
     from repro.kernels.ops import trim_conv2d
     print("\n=== 2. TrIM Pallas kernel (interpret mode) ===")
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (1, 16, 16, 8))
     w = jax.random.normal(key, (3, 3, 8, 16))
-    out = trim_conv2d(x, w, force_pallas=True)
-    ref = trim_conv2d(x, w)  # CPU oracle
+    # ExecutionPolicy says HOW to run (substrate / emulate_hw / tiling);
+    # "pallas" runs the TrIM kernels everywhere — interpret mode off-TPU.
+    out = trim_conv2d(x, w, policy=ExecutionPolicy(substrate="pallas"))
+    ref = trim_conv2d(x, w)  # auto policy: CPU oracle off-TPU
     print(f"conv2d {x.shape} * {w.shape} -> {out.shape}; "
           f"max err vs oracle: {float(jnp.abs(out - ref).max()):.2e}")
+    plan = plan_conv_layer((16, 16), 8, 3, 16, relu=True, has_bias=True,
+                           policy=ExecutionPolicy(substrate="pallas"))
+    print(f"layer plan (compiled once, DESIGN.md §3): {plan.describe()}")
 
 
 def demo_lm():

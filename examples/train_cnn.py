@@ -1,12 +1,14 @@
 """End-to-end CNN training through the TrIM conv path (the paper's own
-workload, float mode), on deterministic synthetic images.
+workload, float mode), on deterministic synthetic images — written against
+the execution-plan API (``repro.engine``, DESIGN.md §3).
 
   PYTHONPATH=src python examples/train_cnn.py --steps 60
 
-Accuracy on the class-structured synthetic set rises well above chance
-within ~50 steps on CPU. After training, the conv stack is quantized to
-the paper's uint8/int8 integer datapath and the logits agreement between
-the float and integer paths is reported.
+``plan_model(cfg, policy)`` compiles the per-layer TrIM kernel schedule
+once; training, quantization, requant calibration, and the fused int8
+inference datapath all run off the same ``ModelPlan``.  Accuracy on the
+class-structured synthetic set rises well above chance within ~50 steps on
+CPU; afterwards the float/int8 agreement is reported.
 """
 import argparse
 
@@ -16,7 +18,7 @@ import numpy as np
 
 from repro.configs import CNN_SMOKES
 from repro.data import SyntheticImageDataset
-from repro.nn.conv import cnn_forward_int8, cnn_loss, init_cnn, quantize_cnn
+from repro.engine import ExecutionPolicy, plan_model
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
 
@@ -26,20 +28,26 @@ def main():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--arch", default="vgg16", choices=["vgg16", "alexnet"])
+    ap.add_argument("--substrate", default="auto",
+                    choices=["auto", "pallas", "oracle", "interpret"],
+                    help="kernel substrate (ExecutionPolicy)")
     args = ap.parse_args()
 
     cfg = CNN_SMOKES[args.arch]
+    # The plan is the whole execution story: substrate + per-layer schedule,
+    # resolved once — no kernel kwargs thread through the training step.
+    plan = plan_model(cfg, ExecutionPolicy(substrate=args.substrate))
     ds = SyntheticImageDataset(hw=cfg.input_hw, channels=cfg.layers[0].M,
                                n_classes=cfg.n_classes,
                                global_batch=args.batch)
-    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    params = plan.init(jax.random.PRNGKey(0))
     opt = adamw_init(params)
     ocfg = AdamWConfig(weight_decay=0.01)
 
     @jax.jit
     def step(params, opt, batch):
         (loss, mets), g = jax.value_and_grad(
-            lambda p: cnn_loss(p, batch, cfg), has_aux=True)(params)
+            lambda p: plan.loss(p, batch), has_aux=True)(params)
         params, opt, _ = adamw_update(g, opt, params, args.lr, ocfg)
         return params, opt, loss, mets["acc"]
 
@@ -52,16 +60,18 @@ def main():
             print(f"step {s:3d}  loss {float(loss):.3f}  "
                   f"acc {float(acc):.2f}")
 
-    # integer datapath (paper §III-A precision)
-    qp, scales = quantize_cnn(params, cfg)
+    # integer datapath (paper §III-A precision), same plan: quantize,
+    # calibrate the per-channel fused requant, run fully fused.
+    qp, scales = plan.quantize(params)
     b = ds.batch_at(0)
     imgs = np.asarray(b["images"])
     u8 = np.clip((imgs - imgs.min())
                  / max(float(imgs.max() - imgs.min()), 1e-6) * 255, 0,
                  255).astype(np.uint8)
-    feat = cnn_forward_int8(qp, jnp.asarray(u8), cfg)
+    pairs = plan.calibrate_requant(qp, jnp.asarray(u8))
+    feat = plan.forward_int8(qp, jnp.asarray(u8), requant=pairs)
     print(f"int8 TrIM datapath: output {feat.shape} dtype {feat.dtype} "
-          f"(int32 psums, bit-exact conv per tests)")
+          f"(int32 psums, fused per-channel requant, bit-exact per tests)")
 
 
 if __name__ == "__main__":

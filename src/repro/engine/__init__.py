@@ -1,0 +1,32 @@
+"""Execution planning for the TrIM kernels (DESIGN.md §3).
+
+``ExecutionPolicy`` (how to run) + ``plan_conv_layer``/``plan_model``
+(what was resolved) + ``execute`` (the one dispatch site that runs it).
+"""
+
+from repro.engine.policy import (
+    RESOLVED_SUBSTRATES,
+    SUBSTRATES,
+    ExecutionPolicy,
+    policy_from_legacy,
+)
+from repro.engine.plan import (
+    ConvLayerPlan,
+    ModelPlan,
+    plan_conv_layer,
+    plan_model,
+)
+from repro.engine.execute import run_conv2d, run_conv_layer
+
+__all__ = [
+    "RESOLVED_SUBSTRATES",
+    "SUBSTRATES",
+    "ConvLayerPlan",
+    "ExecutionPolicy",
+    "ModelPlan",
+    "plan_conv_layer",
+    "plan_model",
+    "policy_from_legacy",
+    "run_conv2d",
+    "run_conv_layer",
+]

@@ -1,0 +1,316 @@
+"""Execute planned TrIM conv layers and planned CNN models.
+
+This module owns the ONLY kernel dispatch site in the tree:
+:func:`run_conv2d` takes a resolved :class:`~repro.engine.plan.ConvLayerPlan`
+(a ``jax.jit`` static argument) and runs exactly the substrate the plan
+chose — the jnp oracle, the compiled Pallas kernel, or Pallas interpret
+mode — with the fused epilogue, grouped-conv splitting, the float custom
+VJP, and the ``emulate_hw`` decimation replay all handled here once.
+
+The model-level entry points (:func:`forward`, :func:`loss`,
+:func:`forward_int8`, :func:`calibrate_requant_shifts`,
+:func:`calibrate_requant`) iterate a :class:`~repro.engine.plan.ModelPlan`'s
+per-layer plans; they are what ``ConvNet``, the launchers, and the
+benchmarks call — nothing above this layer re-derives kernel kwargs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.plan import ConvLayerPlan, ModelPlan
+from repro.kernels import ref
+from repro.kernels.requant import requant_mult_shift
+from repro.kernels.trim_conv2d import trim_conv2d_pallas
+
+
+def apply_epilogue(
+    out: jax.Array,
+    bias: Optional[jax.Array],
+    relu: bool,
+    requant_shift: Optional[int],
+    requant: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> jax.Array:
+    """Unfused epilogue (oracle + emulate_hw decimation arms).
+
+    Bit-identical to the fused kernel flush: the power-of-two path shifts
+    without rounding (the engine's output stage) and the multiplier+shift
+    path reuses ``kernels.requant.requant_mult_shift``.
+    """
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    if relu:
+        out = jnp.maximum(out, 0)
+    if requant_shift is not None:
+        out = jnp.clip(jnp.right_shift(out, requant_shift), 0, 255)
+        out = out.astype(jnp.uint8)
+    if requant is not None:
+        out = requant_mult_shift(out, requant[0], requant[1])
+        out = out.astype(jnp.uint8)
+    return out
+
+
+def max_pool2x2(x: jax.Array) -> jax.Array:
+    """2x2/stride-2 max pool via reshape+max (VALID).  Equivalent to
+    reduce_window but robustly reverse-differentiable under nested jit."""
+    B, H, W, C = x.shape
+    x = x[:, : H // 2 * 2, : W // 2 * 2]
+    x = x.reshape(B, H // 2, 2, W // 2, 2, C)
+    return x.max(axis=(2, 4))
+
+
+def _group_call(plan, xg, wg, bg, rq, requant_shift):
+    """One conv group on the planned Pallas/interpret substrate."""
+    kw = dict(
+        padding=plan.padding,
+        tile_h=plan.tile_h,
+        tile_w=plan.tile_w_arg,
+        block_c=min(plan.block_c, xg.shape[-1]),
+        block_f=min(plan.block_f, wg.shape[-1]),
+        vmem_budget=plan.vmem_budget,
+        interpret=plan.interpret,
+    )
+    if plan.decimate:
+        # emulate_hw stays forward-only on the Pallas path (DESIGN.md §6):
+        # the FPGA-faithful decimation schedule is an inference/benchmark
+        # artifact, not a training datapath.
+        s = plan.stride
+        o = trim_conv2d_pallas(xg, wg, **kw)
+        return o[:, ::s, ::s, :]
+    if jnp.issubdtype(xg.dtype, jnp.floating):
+        # Float path: the custom-VJP-wrapped fused kernel, so jax.grad
+        # runs the Pallas input-grad/weight-grad pair (DESIGN.md §6).
+        f = plan.vjp(has_bias=bg is not None)
+        return f(xg, wg, bg) if bg is not None else f(xg, wg)
+    return trim_conv2d_pallas(
+        xg,
+        wg,
+        stride=plan.stride,
+        bias=bg,
+        relu=plan.relu,
+        requant_shift=requant_shift,
+        requant=rq,
+        **kw,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "requant_shift"))
+def run_conv2d(
+    plan: ConvLayerPlan,
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    requant: Optional[Tuple[jax.Array, jax.Array]] = None,
+    *,
+    requant_shift: Optional[int] = None,
+) -> jax.Array:
+    """Run one planned conv (+ fused epilogue).  THE dispatch site.
+
+    x (N,H,W,C), w (K,K,C/groups,F) -> (N,H_O,W_O,F); the substrate,
+    decimation mode, and tiling all come from ``plan`` (static).  ``bias``
+    / ``requant_shift`` / ``requant`` are the runtime epilogue inputs —
+    per-channel requant calibrations are traced (F,) int32 array pairs.
+    """
+    if plan.substrate == "oracle":
+        s = plan.stride
+        if plan.decimate:
+            full = ref.conv2d_ref(
+                x, w, stride=1, padding=plan.padding, groups=plan.groups
+            )
+            out = full[:, ::s, ::s, :]
+        else:
+            out = ref.conv2d_ref(
+                x, w, stride=s, padding=plan.padding, groups=plan.groups
+            )
+        return apply_epilogue(out, bias, plan.relu, requant_shift, requant)
+
+    if plan.groups == 1:
+        out = _group_call(plan, x, w, bias, requant, requant_shift)
+    else:
+        cg = x.shape[-1] // plan.groups
+        F = w.shape[-1]
+        fg = F // plan.groups
+
+        def rq_slice(g):
+            # Per-group requant slices (scalars broadcast to (F,) first so
+            # per-channel and per-tensor calibrations both land per group).
+            if requant is None:
+                return None
+            m, s = requant
+            m = jnp.broadcast_to(jnp.asarray(m, jnp.int32), (F,))
+            s = jnp.broadcast_to(jnp.asarray(s, jnp.int32), (F,))
+            return (m[g * fg : (g + 1) * fg], s[g * fg : (g + 1) * fg])
+
+        outs = [
+            _group_call(
+                plan,
+                x[..., g * cg : (g + 1) * cg],
+                w[..., g * fg : (g + 1) * fg],
+                None if bias is None else bias[g * fg : (g + 1) * fg],
+                rq_slice(g),
+                requant_shift,
+            )
+            for g in range(plan.groups)
+        ]
+        out = jnp.concatenate(outs, axis=-1)
+    if plan.decimate:
+        out = apply_epilogue(out, bias, plan.relu, requant_shift, requant)
+    return out
+
+
+def run_conv_layer(plan: ConvLayerPlan, p, x: jax.Array) -> jax.Array:
+    """One model conv block: planned conv -> shard -> optional 2x2 pool.
+
+    ``p``: {"kernel": (K,K,C/groups,F) [, "bias": (F,) , "requant":
+    ((F,), (F,)) int32 calibration]} — params-borne requant takes
+    precedence (the per-channel calibrated int8 datapath).
+    """
+    from repro.distributed.sharding import shard
+
+    w = p["kernel"]
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        w = w.astype(x.dtype)
+    x = run_conv2d(plan, x, w, p.get("bias"), p.get("requant"))
+    x = shard(x, "batch", "img_h", "img_w", "cout")
+    if plan.pool:
+        x = max_pool2x2(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Model-level entry points (consumed via ModelPlan)
+# ---------------------------------------------------------------------------
+
+
+def forward(plan: ModelPlan, params, images: jax.Array) -> jax.Array:
+    """images (B,H,W,C) float -> logits (B, n_classes) through the planned
+    conv stack (fused bias+ReLU epilogues) and the FC head."""
+    x = images
+    for i, lp in enumerate(plan.layers):
+        x = run_conv_layer(lp, params["conv"][i], x)
+    x = x.reshape(x.shape[0], -1)
+    for j, fc in enumerate(params["fc"]):
+        x = x @ fc["kernel"].astype(x.dtype) + fc["bias"].astype(x.dtype)
+        if j < len(params["fc"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def loss(plan: ModelPlan, params, batch):
+    logits = forward(plan, params, batch["images"])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+    ce = -ll.mean()
+    acc = (logits.argmax(-1) == batch["labels"]).mean()
+    return ce, {"ce": ce, "acc": acc}
+
+
+def _int8_forward(
+    plan: ModelPlan,
+    qparams,
+    images_u8: jax.Array,
+    requant_shifts: Optional[Sequence[int]] = None,
+    requant: Optional[Sequence[Tuple[jax.Array, jax.Array]]] = None,
+) -> Tuple[jax.Array, List[jax.Array]]:
+    """Shared int8 datapath: returns (final int32 psums, dynamic shifts).
+
+    ``requant_shifts`` fuses calibrated power-of-two shifts into the
+    kernel; ``requant`` fuses calibrated arbitrary-scale (mult, shift)
+    pairs (per-tensor scalars or per-channel (F,) arrays) instead.  The
+    shifts list collects the per-layer power-of-two shifts actually used
+    on the dynamic (uncalibrated) path — traced scalars, so calibration
+    must run this eagerly to concretize them.
+    """
+    assert requant_shifts is None or requant is None
+    x = images_u8
+    shifts: List[jax.Array] = []
+    layers = plan.int8.layers
+    n = len(layers)
+    for i, lp in enumerate(layers):
+        w = qparams["conv"][i]["kernel"]
+        last = i == n - 1
+        if requant is not None and not last:
+            # Calibrated arbitrary scale: conv + ReLU + multiplier+shift
+            # requant in one kernel pass (DESIGN.md §4).
+            x = run_conv2d(lp, x, w, None, tuple(requant[i]))
+        elif requant_shifts is not None and not last:
+            # Calibrated shift: conv + ReLU + requant in one kernel pass.
+            x = run_conv2d(lp, x, w, None, None, requant_shift=int(requant_shifts[i]))
+        else:
+            psum = run_conv2d(lp, x, w, None, None)
+            if last:
+                return psum, shifts
+            # power-of-two requantize back to uint8 for the next layer
+            amax = jnp.maximum(psum.max().astype(jnp.float32), 1.0)
+            shift = jnp.maximum(jnp.ceil(jnp.log2(amax / 255.0)), 0)
+            shift = shift.astype(jnp.int32)
+            shifts.append(shift)
+            x = jnp.clip(psum >> shift, 0, 255).astype(jnp.uint8)
+        if lp.pool:
+            x = max_pool2x2(x)
+    return x, shifts
+
+
+def forward_int8(
+    plan: ModelPlan,
+    qparams,
+    images_u8: jax.Array,
+    requant_shifts: Optional[Sequence[int]] = None,
+    requant: Optional[Sequence[Tuple[jax.Array, jax.Array]]] = None,
+) -> jax.Array:
+    """uint8 NHWC images through the planned integer TrIM datapath.
+
+    Each layer: uint8 x int8 -> int32 psums (exact), ReLU in int32 (fused
+    into the kernel flush), then requantize to uint8 for the next layer —
+    fully fused when calibrated shifts/pairs are supplied (see
+    ``calibrate_requant_shifts`` / ``calibrate_requant``).  Returns the
+    final int32 feature map (pre-classifier).
+    """
+    return _int8_forward(plan, qparams, images_u8, requant_shifts, requant)[0]
+
+
+def calibrate_requant_shifts(plan: ModelPlan, qparams, sample_u8) -> List[int]:
+    """Derive static per-layer power-of-two requant shifts from a sample
+    batch (the engine's offline output-stage calibration).  Runs the
+    dynamic datapath eagerly (not under jit) to concretize the shifts."""
+    return [int(s) for s in _int8_forward(plan, qparams, sample_u8)[1]]
+
+
+def calibrate_requant(
+    plan: ModelPlan, qparams, sample_u8, per_channel: bool = True
+) -> List[Tuple[jax.Array, jax.Array]]:
+    """Arbitrary-scale calibration: per-layer (mult, shift) pairs.
+
+    Maps each non-last layer's observed post-ReLU psum range [0, amax]
+    onto [0, 255] with ``scale = 255 / amax`` encoded as ``m * 2**-s``
+    (``kernels.requant.scale_to_mult_shift``; DESIGN.md §4).
+    ``per_channel=True`` calibrates one scale per output channel.  Runs
+    eagerly; the returned (F,) int32 pairs make
+    ``forward_int8(..., requant=...)`` fully fused.
+    """
+    from repro.kernels.requant import scale_to_mult_shift
+
+    x = sample_u8
+    pairs: List[Tuple[jax.Array, jax.Array]] = []
+    for i, lp in enumerate(plan.int8.layers[:-1]):
+        w = qparams["conv"][i]["kernel"]
+        psum = run_conv2d(lp, x, w, None, None)
+        axes = (0, 1, 2) if per_channel else None
+        amax = np.maximum(np.asarray(psum.max(axis=axes), np.float64), 1.0)
+        m, s = scale_to_mult_shift(255.0 / amax)
+        F = w.shape[-1]
+        m = jnp.broadcast_to(jnp.asarray(m, jnp.int32), (F,))
+        s = jnp.broadcast_to(jnp.asarray(s, jnp.int32), (F,))
+        pairs.append((m, s))
+        # Propagate through the exact fixed-point datapath the fused
+        # forward will run, so downstream layers calibrate on what they
+        # will actually see.
+        x = requant_mult_shift(psum, m, s).astype(jnp.uint8)
+        if lp.pool:
+            x = max_pool2x2(x)
+    return pairs

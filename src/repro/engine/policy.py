@@ -1,0 +1,145 @@
+"""Execution policy: *how* to run the TrIM kernels, decided in one place.
+
+Before this module existed every kernel decision (substrate, ``emulate_hw``,
+tile sizes, VMEM budget) travelled as ad-hoc kwargs through six layers of
+the stack (``kernels/ops`` -> ``nn/blocks`` -> ``nn/conv`` -> ``nn/models``
+-> ``launch/*`` -> CLI flags).  ``ExecutionPolicy`` is the frozen, hashable
+replacement: one value object that says how to execute, carried once and
+compiled into per-layer :class:`repro.engine.plan.ConvLayerPlan` schedules.
+
+The kernel dispatch rule ("TPU -> compiled Pallas, CPU -> oracle, force ->
+interpret") lives here, in :meth:`ExecutionPolicy.resolved_substrate`, and
+nowhere else.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+
+from repro.kernels.trim_conv2d import VMEM_BUDGET_BYTES
+
+#: User-facing substrate choices ("auto" resolves per backend at plan time).
+SUBSTRATES = ("auto", "pallas", "oracle", "interpret")
+
+#: Concrete substrates a resolved policy / layer plan can carry.
+RESOLVED_SUBSTRATES = ("pallas", "oracle", "interpret")
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@dataclass(frozen=True)
+class ExecutionPolicy:
+    """Frozen, hashable description of *how* to run the TrIM kernels.
+
+    ``substrate``
+        "auto" (compiled Pallas on TPU, jnp oracle elsewhere — the
+        production default), "pallas" (the Pallas kernels everywhere:
+        compiled on TPU, interpret mode off-TPU — what the legacy
+        ``force_pallas=True`` meant), "oracle" (the pure-jnp reference on
+        every backend), or "interpret" (Pallas interpret mode even on TPU).
+    ``emulate_hw``
+        Replay the FPGA's strided-layer schedule (stride-1 sweep +
+        downstream decimation + unfused epilogue, paper §V) instead of the
+        stride-aware fused kernel — Table I/II fidelity mode.
+    ``tile_h`` / ``tile_w`` / ``block_c`` / ``block_f``
+        Kernel schedule overrides.  ``tile_w=None`` lets ``pick_tile_w``
+        auto-size the output-width tile from ``vmem_budget``; ``block_*``
+        are upper bounds, capped per layer (and per conv group) at plan
+        time.
+    ``vmem_budget``
+        Byte budget for the width-tile auto-pick (DESIGN.md §4).
+
+    Policies are plain frozen dataclasses: hashable (usable as ``jax.jit``
+    static arguments and ``lru_cache`` keys) and comparable by value.
+    """
+
+    substrate: str = "auto"
+    emulate_hw: bool = False
+    tile_h: int = 8
+    tile_w: Optional[int] = None
+    block_c: int = 128
+    block_f: int = 128
+    vmem_budget: int = VMEM_BUDGET_BYTES
+
+    def __post_init__(self) -> None:
+        if self.substrate not in SUBSTRATES:
+            raise ValueError(f"substrate {self.substrate!r} not in {SUBSTRATES}")
+
+    def resolved_substrate(self) -> str:
+        """THE kernel dispatch rule — the only copy in the tree.
+
+        auto -> compiled Pallas on TPU, jnp oracle elsewhere;
+        pallas -> compiled on TPU, interpret mode off-TPU;
+        oracle / interpret -> exactly that, on every backend.
+        """
+        if self.substrate == "auto":
+            return "pallas" if on_tpu() else "oracle"
+        if self.substrate == "pallas" and not on_tpu():
+            return "interpret"
+        return self.substrate
+
+    def resolve(self) -> "ExecutionPolicy":
+        """Pin the substrate to a concrete choice for the current backend."""
+        return dataclasses.replace(self, substrate=self.resolved_substrate())
+
+    def with_overrides(self, **kw) -> "ExecutionPolicy":
+        return dataclasses.replace(self, **kw)
+
+    @classmethod
+    def from_args(cls, args) -> "ExecutionPolicy":
+        """Build a policy from parsed CLI args (``launch.cli``).
+
+        Reads ``args.substrate`` (the ``--substrate`` flag; the deprecated
+        ``--force-pallas`` alias stores "pallas" into the same dest) and
+        ``args.emulate_hw`` — missing attributes fall back to the defaults,
+        so any ``argparse.Namespace`` works.
+        """
+        return cls(
+            substrate=getattr(args, "substrate", None) or "auto",
+            emulate_hw=bool(getattr(args, "emulate_hw", False)),
+        )
+
+
+def policy_from_legacy(
+    policy: Optional[ExecutionPolicy],
+    *,
+    emulate_hw: Optional[bool] = None,
+    force_pallas: Optional[bool] = None,
+    caller: str = "",
+    **schedule: object,
+) -> ExecutionPolicy:
+    """Deprecation shim: fold the legacy per-call kwargs into a policy.
+
+    ``emulate_hw`` / ``force_pallas`` passed as non-None emit a
+    ``DeprecationWarning`` and override the corresponding policy fields
+    (``force_pallas=True`` maps to ``substrate="pallas"``).  ``schedule``
+    kwargs (``tile_h``/``tile_w``/``block_c``/``block_f``) are silent
+    per-call schedule overrides — non-None values replace the policy's.
+    """
+    pol = policy if policy is not None else ExecutionPolicy()
+    legacy = {"emulate_hw": emulate_hw, "force_pallas": force_pallas}
+    named = [k for k, v in legacy.items() if v is not None]
+    if named:
+        warnings.warn(
+            f"{caller or 'trim kernel call'}: the {', '.join(named)} "
+            "kwarg(s) are deprecated; pass "
+            "policy=repro.engine.ExecutionPolicy(...) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    if emulate_hw is not None:
+        pol = dataclasses.replace(pol, emulate_hw=bool(emulate_hw))
+    if force_pallas is not None:
+        sub = "pallas" if force_pallas else "auto"
+        pol = dataclasses.replace(pol, substrate=sub)
+    overrides = {k: v for k, v in schedule.items() if v is not None}
+    if overrides:
+        pol = dataclasses.replace(pol, **overrides)
+    return pol

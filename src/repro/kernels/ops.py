@@ -1,26 +1,25 @@
-"""Public jit'd wrappers around the Pallas kernels, with CPU fallback.
+"""Public wrappers around the Pallas kernels, planned via ``repro.engine``.
 
-On TPU these call the compiled Pallas kernels; on CPU they default to the
-pure-jnp oracles (``ref.py``) for speed, or run the Pallas kernels in
-interpret mode when ``force_pallas=True`` (that is what the kernel tests do
-to validate the kernel bodies themselves).
+``trim_conv2d`` keeps its historical signature but is now a thin shim: it
+builds a single-layer :class:`~repro.engine.plan.ConvLayerPlan` from the
+call shapes and an :class:`~repro.engine.policy.ExecutionPolicy`, then runs
+it through :func:`repro.engine.execute.run_conv2d` — the one dispatch site
+that decides pallas vs oracle vs interpret (the rule itself lives in
+``ExecutionPolicy.resolved_substrate``).  ``trim_conv1d`` / ``trim_matmul``
+accept the same policy.
 
-The conv path is stride-aware and width-tiled end to end: the kernel
-computes only the strided H_O x W_O outputs, splits W_O into VMEM-sized
-column tiles (``tile_w``; auto-picked by default) and can fuse the layer
-epilogue (bias + ReLU + power-of-two or arbitrary-scale multiplier+shift
-requantization) into its final-C_in flush.  ``emulate_hw=True``
-opts back into the hardware's behaviour for strided layers (§V, AlexNet
-CL1: full stride-1 sweep, downstream decimation) so model/benchmark
-comparisons against Tables I-II stay honest — on every substrate, including
-the CPU oracle.
+Legacy kwargs (``force_pallas``, ``emulate_hw``) keep working but emit
+``DeprecationWarning`` — pass ``policy=ExecutionPolicy(...)`` instead:
 
-The float conv path is differentiable on every substrate: the Pallas arm
-carries a custom VJP (``trim_conv2d_vjp.py`` — dilated-cotangent forward
-for dL/dx, per-tap reduction kernel for dL/dw, DESIGN.md §6), so
-``jax.grad`` through ``trim_conv2d`` hits Pallas in both directions; the
-CPU-oracle arm differentiates through ``lax.conv`` as before.  The
-integer/requant datapath and ``emulate_hw`` stay forward-only.
+- ``ExecutionPolicy()``                      TPU -> compiled Pallas, else oracle
+- ``ExecutionPolicy(substrate="pallas")``    Pallas everywhere (interpret
+                                             mode off-TPU; old force_pallas)
+- ``ExecutionPolicy(emulate_hw=True)``       FPGA decimation replay (§V)
+
+The float conv path stays differentiable on every substrate: the Pallas
+arm carries the custom VJP (``trim_conv2d_vjp.py``, DESIGN.md §6), the
+oracle arm differentiates through ``lax.conv``.  The integer/requant
+datapath and ``emulate_hw`` stay forward-only.
 """
 from __future__ import annotations
 
@@ -30,60 +29,30 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.engine.execute import run_conv2d
+from repro.engine.plan import plan_conv_layer
+from repro.engine.policy import ExecutionPolicy, policy_from_legacy
 from repro.kernels import ref
-from repro.kernels.requant import requant_mult_shift
 from repro.kernels.trim_conv1d import trim_conv1d_pallas
-from repro.kernels.trim_conv2d import trim_conv2d_pallas
-from repro.kernels.trim_conv2d_vjp import make_trim_conv2d_vjp
 from repro.kernels.trim_matmul import trim_matmul_pallas
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _epilogue_jnp(out: jax.Array, bias: Optional[jax.Array], relu: bool,
-                  requant_shift: Optional[int],
-                  requant: Optional[Tuple[jax.Array, jax.Array]] = None,
-                  ) -> jax.Array:
-    """Unfused epilogue (CPU oracle + emulate_hw decimation paths).
-
-    Bit-identical to the fused kernel flush: the power-of-two path shifts
-    without rounding (the engine's output stage) and the multiplier+shift
-    path reuses ``kernels.requant.requant_mult_shift``."""
-    if bias is not None:
-        out = out + bias.astype(out.dtype)
-    if relu:
-        out = jnp.maximum(out, 0)
-    if requant_shift is not None:
-        out = jnp.clip(jnp.right_shift(out, requant_shift),
-                       0, 255).astype(jnp.uint8)
-    if requant is not None:
-        out = requant_mult_shift(out, requant[0],
-                                 requant[1]).astype(jnp.uint8)
-    return out
-
-
-@functools.partial(jax.jit, static_argnames=("stride", "padding",
-                                             "force_pallas", "tile_h",
-                                             "tile_w", "block_c", "block_f",
-                                             "groups", "relu",
-                                             "requant_shift", "emulate_hw"))
 def trim_conv2d(x: jax.Array, w: jax.Array,
                 bias: Optional[jax.Array] = None,
                 requant: Optional[Tuple[jax.Array, jax.Array]] = None, *,
-                stride: int = 1,
-                padding: Optional[int] = None, force_pallas: bool = False,
-                tile_h: int = 8, tile_w: Optional[int] = None,
-                block_c: int = 128, block_f: int = 128,
+                stride: int = 1, padding: Optional[int] = None,
                 groups: int = 1, relu: bool = False,
                 requant_shift: Optional[int] = None,
-                emulate_hw: bool = False) -> jax.Array:
+                policy: Optional[ExecutionPolicy] = None,
+                tile_h: Optional[int] = None, tile_w: Optional[int] = None,
+                block_c: Optional[int] = None,
+                block_f: Optional[int] = None,
+                force_pallas: Optional[bool] = None,
+                emulate_hw: Optional[bool] = None) -> jax.Array:
     """TrIM conv2d. x (N,H,W,C), w (K,K,C/groups,F) -> (N,H_O,W_O,F).
 
     groups > 1: grouped conv — each group maps onto its own set of TrIM
-    cores (the hardware schedules groups as independent filter sets), here
-    one kernel call per group.
+    cores (the hardware schedules groups as independent filter sets).
 
     bias (F,) / relu / requant_shift / requant: layer epilogue, fused into
     the kernel flush on the Pallas path.  requant_shift (integer path only)
@@ -91,103 +60,73 @@ def trim_conv2d(x: jax.Array, w: jax.Array,
     (scalars or per-channel (F,) int32 arrays) the arbitrary-scale
     fixed-point requantization (``kernels/requant.py``) — both return uint8.
 
-    tile_w: output-width tile for the Pallas path (None: auto-picked from
-    the VMEM budget; wider-than-VGG maps tile instead of falling off the
-    fast path — DESIGN.md §4).
-
-    emulate_hw: replay the FPGA's strided-layer schedule — full stride-1
-    sweep, decimate, *then* the epilogue (3 extra HBM round-trips and
-    stride^2 wasted MACs, kept for Table I/II fidelity)."""
+    ``policy`` selects the substrate, ``emulate_hw`` replay, and kernel
+    schedule in one hashable value (see ``repro.engine``); per-call
+    ``tile_h``/``tile_w``/``block_c``/``block_f`` override its schedule
+    fields.  ``force_pallas`` / ``emulate_hw`` kwargs are deprecated shims
+    onto the policy.
+    """
     if requant_shift is not None or requant is not None:
         assert jnp.issubdtype(x.dtype, jnp.integer), \
             "requantization needs the integer path"
         assert requant_shift is None or requant is None, \
             "requant_shift and requant are exclusive"
-    decimate = emulate_hw and stride > 1
-    use_pallas = _on_tpu() or force_pallas
-    if not use_pallas:
-        if decimate:
-            out = ref.conv2d_ref(x, w, stride=1, padding=padding,
-                                 groups=groups)[:, ::stride, ::stride, :]
-        else:
-            out = ref.conv2d_ref(x, w, stride=stride, padding=padding,
-                                 groups=groups)
-        return _epilogue_jnp(out, bias, relu, requant_shift, requant)
-
-    def one(xg, wg, bg, rq, bc, bf):
-        if decimate:
-            # emulate_hw stays forward-only on the Pallas path (DESIGN.md
-            # §6): the FPGA-faithful decimation schedule is an inference/
-            # benchmark artifact, not a training datapath.
-            o = trim_conv2d_pallas(xg, wg, padding=padding, tile_h=tile_h,
-                                   tile_w=tile_w, block_c=bc, block_f=bf,
-                                   interpret=not _on_tpu())
-            return o[:, ::stride, ::stride, :]
-        if jnp.issubdtype(xg.dtype, jnp.floating):
-            # Float path: the custom-VJP-wrapped fused kernel, so jax.grad
-            # runs the Pallas input-grad/weight-grad pair instead of
-            # falling off to the oracle (DESIGN.md §6).
-            f = make_trim_conv2d_vjp(stride=stride, padding=padding,
-                                     relu=relu, has_bias=bg is not None,
-                                     tile_h=tile_h, tile_w=tile_w,
-                                     block_c=bc, block_f=bf,
-                                     interpret=not _on_tpu())
-            return f(xg, wg, bg) if bg is not None else f(xg, wg)
-        return trim_conv2d_pallas(xg, wg, stride=stride, padding=padding,
-                                  bias=bg, relu=relu,
-                                  requant_shift=requant_shift,
-                                  requant=rq,
-                                  tile_h=tile_h, tile_w=tile_w,
-                                  block_c=bc, block_f=bf,
-                                  interpret=not _on_tpu())
-
-    if groups == 1:
-        out = one(x, w, bias, requant, block_c, block_f)
-    else:
-        cg = x.shape[-1] // groups
-        fg = w.shape[-1] // groups
-
-        def rq_slice(g):
-            # Per-group requant slices (scalars broadcast to (F,) first so
-            # per-channel and per-tensor calibrations both land per group).
-            if requant is None:
-                return None
-            m, s = requant
-            F = fg * groups
-            m = jnp.broadcast_to(jnp.asarray(m, jnp.int32), (F,))
-            s = jnp.broadcast_to(jnp.asarray(s, jnp.int32), (F,))
-            return (m[g * fg:(g + 1) * fg], s[g * fg:(g + 1) * fg])
-
-        outs = [one(x[..., g * cg:(g + 1) * cg],
-                    w[..., g * fg:(g + 1) * fg],
-                    None if bias is None else bias[g * fg:(g + 1) * fg],
-                    rq_slice(g),
-                    min(block_c, cg), min(block_f, fg))
-                for g in range(groups)]
-        out = jnp.concatenate(outs, axis=-1)
-    if decimate:
-        out = _epilogue_jnp(out, bias, relu, requant_shift, requant)
-    return out
+    pol = policy_from_legacy(policy, emulate_hw=emulate_hw,
+                             force_pallas=force_pallas,
+                             caller="trim_conv2d", tile_h=tile_h,
+                             tile_w=tile_w, block_c=block_c,
+                             block_f=block_f)
+    rq_kind = ("shift" if requant_shift is not None
+               else "mult_shift" if requant is not None else None)
+    out_sz = 1 if rq_kind else (4 if jnp.issubdtype(x.dtype, jnp.integer)
+                                else x.dtype.itemsize)
+    plan = plan_conv_layer(
+        (int(x.shape[1]), int(x.shape[2])), int(x.shape[3]),
+        int(w.shape[0]), int(w.shape[3]),
+        stride=stride, padding=padding, groups=groups, relu=relu,
+        has_bias=bias is not None, requant_kind=rq_kind,
+        in_sz=x.dtype.itemsize, w_sz=w.dtype.itemsize, out_sz=out_sz,
+        policy=pol)
+    return run_conv2d(plan, x, w, bias, requant,
+                      requant_shift=requant_shift)
 
 
-@functools.partial(jax.jit, static_argnames=("force_pallas", "tile_l",
+@functools.partial(jax.jit, static_argnames=("substrate", "tile_l",
                                              "block_d"))
-def trim_conv1d(x: jax.Array, w: jax.Array, *, force_pallas: bool = False,
-                tile_l: int = 512, block_d: int = 128) -> jax.Array:
+def _conv1d_run(x, w, substrate: str, tile_l: int, block_d: int):
+    if substrate == "oracle":
+        return ref.conv1d_causal_ref(x, w)
+    return trim_conv1d_pallas(x, w, tile_l=tile_l, block_d=block_d,
+                              interpret=substrate == "interpret")
+
+
+def trim_conv1d(x: jax.Array, w: jax.Array, *,
+                policy: Optional[ExecutionPolicy] = None,
+                tile_l: int = 512, block_d: int = 128,
+                force_pallas: Optional[bool] = None) -> jax.Array:
     """Causal depthwise conv. x (B,L,D), w (K,D) -> (B,L,D)."""
-    if _on_tpu() or force_pallas:
-        return trim_conv1d_pallas(x, w, tile_l=tile_l, block_d=block_d,
-                                  interpret=not _on_tpu())
-    return ref.conv1d_causal_ref(x, w)
+    pol = policy_from_legacy(policy, force_pallas=force_pallas,
+                             caller="trim_conv1d")
+    return _conv1d_run(x, w, pol.resolved_substrate(), tile_l, block_d)
 
 
-@functools.partial(jax.jit, static_argnames=("force_pallas", "block_m",
+@functools.partial(jax.jit, static_argnames=("substrate", "block_m",
                                              "block_n", "block_k"))
-def trim_matmul(a: jax.Array, b: jax.Array, *, force_pallas: bool = False,
+def _matmul_run(a, b, substrate: str, block_m: int, block_n: int,
+                block_k: int):
+    if substrate == "oracle":
+        return ref.matmul_ref(a, b)
+    return trim_matmul_pallas(a, b, block_m=block_m, block_n=block_n,
+                              block_k=block_k,
+                              interpret=substrate == "interpret")
+
+
+def trim_matmul(a: jax.Array, b: jax.Array, *,
+                policy: Optional[ExecutionPolicy] = None,
                 block_m: int = 256, block_n: int = 256, block_k: int = 512,
-                ) -> jax.Array:
+                force_pallas: Optional[bool] = None) -> jax.Array:
     """Weight-stationary blocked matmul (the K=1 TrIM case)."""
-    if _on_tpu() or force_pallas:
-        return trim_matmul_pallas(a, b, block_m=block_m, block_n=block_n,
-                                  block_k=block_k, interpret=not _on_tpu())
-    return ref.matmul_ref(a, b)
+    pol = policy_from_legacy(policy, force_pallas=force_pallas,
+                             caller="trim_matmul")
+    return _matmul_run(a, b, pol.resolved_substrate(), block_m, block_n,
+                       block_k)

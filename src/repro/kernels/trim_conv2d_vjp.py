@@ -221,7 +221,8 @@ def trim_conv2d_wgrad_pallas(x: jax.Array, g_out: jax.Array, *, K: int,
 @functools.lru_cache(maxsize=None)
 def make_trim_conv2d_vjp(*, stride: int, padding: Optional[int], relu: bool,
                          has_bias: bool, tile_h: int, tile_w: Optional[int],
-                         block_c: int, block_f: int, interpret: bool):
+                         block_c: int, block_f: int, interpret: bool,
+                         vmem_budget: int = VMEM_BUDGET_BYTES):
     """Build the ``jax.custom_vjp``-wrapped fused TrIM conv for one static
     configuration (cached so repeated traces reuse one primitive).
 
@@ -231,7 +232,8 @@ def make_trim_conv2d_vjp(*, stride: int, padding: Optional[int], relu: bool,
     primals (dx: x.dtype, dw: w.dtype, dbias: bias.dtype).
     """
     kw = dict(stride=stride, padding=padding, tile_h=tile_h, tile_w=tile_w,
-              block_c=block_c, block_f=block_f, interpret=interpret)
+              block_c=block_c, block_f=block_f, vmem_budget=vmem_budget,
+              interpret=interpret)
 
     def fwd_call(x, w, bias):
         return trim_conv2d_pallas(x, w, bias=bias, relu=relu, **kw)

@@ -1,0 +1,91 @@
+"""Shared CLI surface for the CNN launchers (dryrun_cnn / train).
+
+One argparse *parent* carries the execution flags both launchers used to
+re-declare (arch selection, ``--substrate`` / the deprecated
+``--force-pallas`` alias, ``--emulate-hw``, ``--int8``), mapped onto a
+single :meth:`repro.engine.ExecutionPolicy.from_args`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import warnings
+from typing import Optional, Sequence
+
+from repro.engine import SUBSTRATES, ExecutionPolicy
+
+
+class _DeprecatedSubstrateAlias(argparse.Action):
+    """Store a substrate constant while warning that the flag is legacy —
+    the CLI counterpart of ``policy_from_legacy``'s kwarg shims."""
+
+    def __init__(self, option_strings, dest, const=None, **kw):
+        super().__init__(option_strings, dest, nargs=0, const=const, **kw)
+
+    def __call__(self, parser, namespace, values, option_string=None):
+        warnings.warn(
+            f"{option_string} is deprecated; use --substrate {self.const}",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        setattr(namespace, self.dest, self.const)
+
+
+def execution_parent(
+    arch_choices: Optional[Sequence[str]] = None,
+    arch_default: Optional[str] = None,
+    arch_required: bool = False,
+) -> argparse.ArgumentParser:
+    """Parent parser with the shared CNN execution flags.
+
+    ``--substrate`` picks the kernel substrate (auto / pallas / oracle /
+    interpret — resolved by ``ExecutionPolicy.resolved_substrate``, the one
+    dispatch rule); ``--force-pallas`` is kept as a deprecated alias that
+    stores "pallas" into the same destination.  ``--emulate-hw`` selects
+    the FPGA-faithful strided-layer replay (paper §V) and ``--int8`` asks
+    the launcher to also exercise the fused int8 inference datapath.
+    """
+    p = argparse.ArgumentParser(add_help=False)
+    if arch_required:
+        p.add_argument("--arch", required=True, help="architecture id")
+    else:
+        p.add_argument(
+            "--arch",
+            default=arch_default,
+            choices=sorted(arch_choices) if arch_choices else None,
+            help="architecture id",
+        )
+    p.add_argument(
+        "--substrate",
+        choices=list(SUBSTRATES),
+        default="auto",
+        help="kernel substrate: auto (TPU->compiled Pallas, CPU->oracle), "
+        "pallas (Pallas everywhere; interpret mode off-TPU), oracle, or "
+        "interpret",
+    )
+    p.add_argument(
+        "--force-pallas",
+        dest="substrate",
+        action=_DeprecatedSubstrateAlias,
+        const="pallas",
+        help="deprecated alias for --substrate pallas (warns)",
+    )
+    p.add_argument(
+        "--emulate-hw",
+        action="store_true",
+        help="FPGA-faithful strided layers: stride-1 sweep + decimation + "
+        "unfused epilogue (paper §V) instead of the stride-aware fused "
+        "kernel",
+    )
+    p.add_argument(
+        "--int8",
+        action="store_true",
+        help="also run/compile the int8 inference datapath with the fused "
+        "arbitrary-scale requant epilogue",
+    )
+    return p
+
+
+def policy_from_args(args: argparse.Namespace) -> ExecutionPolicy:
+    """One place mapping parsed launcher args -> ExecutionPolicy."""
+    return ExecutionPolicy.from_args(args)

@@ -9,9 +9,12 @@ pod-scale data-parallel training step through the TrIM conv path.
 
   PYTHONPATH=src python -m repro.launch.dryrun_cnn --arch vgg16
 
-``--int8`` additionally compiles the integer inference datapath with the
-arbitrary-scale fused requant epilogue (DESIGN.md §4) and emits a second
-roofline record.
+Execution flags (``--substrate`` / ``--emulate-hw`` / ``--int8``) come from
+the shared launcher parent (``launch.cli``) and map onto one
+``ExecutionPolicy``; the resolved per-layer plan (substrate, width tile,
+epilogue kind) is recorded in the emitted JSON.  ``--int8`` additionally
+compiles the integer inference datapath with the arbitrary-scale fused
+requant epilogue (DESIGN.md §4) and emits a second roofline record.
 """
 import argparse
 import json
@@ -23,6 +26,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import CNN_REGISTRY
 from repro.distributed.sharding import activate_mesh
+from repro.engine import plan_model
+from repro.launch.cli import execution_parent, policy_from_args
 from repro.launch.dryrun import scaled_mesh
 from repro.launch.hlo_stats import (collective_stats, cost_dict,
                                     hbm_bytes_estimate,
@@ -33,7 +38,7 @@ from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.core.trim.model import layer_ops
 
 
-def _int8_record(cfg, args, mesh, dp):
+def _int8_record(cfg, args, mesh, dp, policy):
     """Compile the int8 inference forward (fused multiplier+shift requant
     in every non-last layer) and derive its roofline.  Requant constants
     are placeholder calibrations — the dry-run only studies the compiled
@@ -48,7 +53,7 @@ def _int8_record(cfg, args, mesh, dp):
                                 jnp.uint8)
 
     def infer(qp, u8):
-        return cnn_forward_int8(qp, u8, cfg, requant=requant)
+        return cnn_forward_int8(qp, u8, cfg, requant=requant, policy=policy)
 
     rep = jax.tree.map(lambda _: NamedSharding(mesh, P()), qshapes)
     ish = NamedSharding(mesh, P(dp))
@@ -69,6 +74,7 @@ def _int8_record(cfg, args, mesh, dp):
         "kind": "int8_infer", "chips": mesh.size,
         "multi_pod": args.multi_pod,
         "mesh": {ax: int(mesh.shape[ax]) for ax in mesh.axis_names},
+        "plan": list(plan_model(cfg, policy).int8.describe()),
         "compile_s": round(time.time() - t0, 1),
         "memory": hbm_bytes_estimate(compiled.memory_analysis()),
         "cost": {"flops": flops, "bytes accessed": byts},
@@ -87,20 +93,14 @@ def _int8_record(cfg, args, mesh, dp):
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="vgg16", choices=sorted(CNN_REGISTRY))
+    ap = argparse.ArgumentParser(parents=[execution_parent(
+        arch_choices=CNN_REGISTRY, arch_default="vgg16")])
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--emulate-hw", action="store_true",
-                    help="FPGA-faithful strided layers: stride-1 sweep + "
-                         "decimation + unfused epilogue (§V) instead of the "
-                         "stride-aware fused kernel")
-    ap.add_argument("--int8", action="store_true",
-                    help="also compile the int8 inference datapath with "
-                         "the fused arbitrary-scale requant epilogue")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
+    policy = policy_from_args(args)
     cfg = CNN_REGISTRY[args.arch]
     mesh = scaled_mesh(args.multi_pod)
     chips = mesh.size
@@ -108,7 +108,7 @@ def main() -> None:
     def train_step(state, batch):
         params, opt = state
         (loss, mets), g = jax.value_and_grad(
-            lambda p: cnn_loss(p, batch, cfg, emulate_hw=args.emulate_hw),
+            lambda p: cnn_loss(p, batch, cfg, policy=policy),
             has_aux=True)(params)
         params, opt, _ = adamw_update(g, opt, params, 1e-3, AdamWConfig())
         return (params, opt), loss
@@ -143,6 +143,7 @@ def main() -> None:
         "arch": args.arch, "shape": f"train_{H}x{W}_b{args.batch}",
         "kind": "train", "chips": chips, "emulate_hw": args.emulate_hw,
         "mesh": {ax: int(mesh.shape[ax]) for ax in mesh.axis_names},
+        "plan": list(plan_model(cfg, policy).describe()),
         "compile_s": round(time.time() - t0, 1),
         "memory": hbm_bytes_estimate(compiled.memory_analysis()),
         "cost": {"flops": flops, "bytes accessed": byts},
@@ -175,7 +176,7 @@ def main() -> None:
           f"{r['useful_flops_ratio']:.2f}")
 
     if args.int8:
-        irec = _int8_record(cfg, args, mesh, dp)
+        irec = _int8_record(cfg, args, mesh, dp, policy)
         itag = (f"{args.arch}__cnn_int8__"
                 f"{'multi' if args.multi_pod else 'single'}")
         with open(os.path.join(args.out, itag + ".json"), "w") as f:

@@ -12,17 +12,19 @@ TrIM conv path in BOTH directions: the fused forward Pallas kernel and its
 custom VJP (input-grad / weight-grad kernel pair, DESIGN.md §6).
 
   PYTHONPATH=src python -m repro.launch.train --arch vgg16 --smoke \
-      --steps 3 --batch 4 --force-pallas
+      --steps 3 --batch 4 --substrate pallas
 
-``--force-pallas`` runs the Pallas kernels off-TPU in interpret mode —
-CI's train-smoke lane uses it to prove the backward path on CPU runners;
-the launcher exits non-zero unless the final loss AND grad_norm are
-finite, so backward-path regressions fail PRs.
+``--substrate pallas`` (or the deprecated ``--force-pallas`` alias) runs
+the Pallas kernels off-TPU in interpret mode — CI's train-smoke lane uses
+it to prove the backward path on CPU runners; the launcher exits non-zero
+unless the loss AND grad_norm of every step are finite, so backward-path
+regressions fail PRs.  ``--int8`` additionally quantizes the trained conv
+stack and runs the fused-requant integer datapath once through the same
+execution plan.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -34,13 +36,31 @@ from repro.distributed import (StepConfig, TrainLoopConfig, activate_mesh,
                                make_train_state, make_train_step, state_pspec,
                                train_loop)
 from repro.distributed.steps import _to_shardings, batch_pspec
+from repro.launch.cli import execution_parent, policy_from_args
 from repro.launch.mesh import make_host_mesh
 from repro.nn.models import build_model
 
 
+def _int8_check(model, params, batch) -> None:
+    """Quantize + calibrate + run the fused int8 inference datapath once
+    (plan entry points), printing the output stats."""
+    qp, _ = model.quantize(params)
+    imgs = np.asarray(batch["images"])
+    lo, hi = float(imgs.min()), float(imgs.max())
+    u8 = jnp.asarray(np.clip((imgs - lo) / max(hi - lo, 1e-6) * 255,
+                             0, 255).astype(np.uint8))
+    pairs = model.calibrate_requant(qp, u8)
+    feat = model.forward_int8(qp, u8, requant=pairs)
+    finite = bool(np.isfinite(np.asarray(feat, np.float64)).all())
+    print(f"[train] int8 datapath: output {feat.shape} dtype {feat.dtype} "
+          f"finite={finite} (fused per-channel requant)")
+    if not finite:
+        raise SystemExit("[train] FAIL: non-finite int8 feature map")
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap = argparse.ArgumentParser(parents=[execution_parent(
+        arch_required=True)])
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke config")
     ap.add_argument("--steps", type=int, default=100)
@@ -51,19 +71,14 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--compress-grads", action="store_true")
-    ap.add_argument("--force-pallas", action="store_true",
-                    help="CNN archs: run the TrIM Pallas kernels (forward "
-                         "+ custom-VJP backward) even off-TPU, in "
-                         "interpret mode (DESIGN.md §6)")
     ap.add_argument("--tp", type=int, default=1,
                     help="model-axis size of the host mesh")
     args = ap.parse_args()
 
+    policy = policy_from_args(args)
     is_cnn = args.arch in CNN_REGISTRY
     if is_cnn:
         cfg = CNN_SMOKES[args.arch] if args.smoke else CNN_REGISTRY[args.arch]
-        if args.force_pallas:
-            cfg = dataclasses.replace(cfg, force_pallas=True)
         H, W = cfg.input_hw
         c_in = cfg.layers[0].M
         ds = SyntheticImageDataset(hw=cfg.input_hw, channels=c_in,
@@ -82,7 +97,8 @@ def main() -> None:
                                            jnp.int32)}
 
     mesh = make_host_mesh(model=args.tp)
-    model = build_model(cfg, tp=int(mesh.shape["model"]))
+    model = build_model(cfg, tp=int(mesh.shape["model"]),
+                        policy=policy if is_cnn else None)
     scfg = StepConfig(peak_lr=args.lr, warmup_steps=max(args.steps // 20, 5),
                       total_steps=args.steps, accum=args.accum,
                       compress_grads=args.compress_grads)
@@ -119,6 +135,13 @@ def main() -> None:
     if bad:
         raise SystemExit(f"[train] FAIL: non-finite loss or grad_norm at "
                          f"steps {bad} — backward path broken")
+    if args.int8:
+        if not is_cnn:
+            print("[train] --int8 ignored: LM arch has no int8 conv path")
+        else:
+            b = ds.batch_at(0)
+            _int8_check(model, out["state"]["params"],
+                        {"images": jnp.asarray(b["images"])})
 
 
 if __name__ == "__main__":

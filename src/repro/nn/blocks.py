@@ -26,6 +26,9 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+#: 2x2/stride-2 max pool (moved to repro.engine.execute; alias kept here
+#: for the CNN callers that historically imported it from nn.blocks).
+from repro.engine.execute import max_pool2x2  # noqa: F401
 from repro.nn.attention import (AttnLayout, KVCache, attention,
                                 init_attention, init_kv_cache, make_cross_kv)
 from repro.nn.layers import (Params, init_layernorm, init_mlp, init_rmsnorm,
@@ -304,50 +307,31 @@ def run_stack(params: Params, x: jax.Array, spec: StackSpec, *,
 
 @dataclass(frozen=True)
 class ConvBlockSpec:
-    """One TrIM conv layer: conv -> fused bias/ReLU[/requant] -> [pool].
+    """One TrIM conv layer's *architecture*: conv -> fused bias/ReLU ->
+    [pool].
 
-    ``emulate_hw`` replays the FPGA's strided-layer schedule (stride-1 sweep
-    + downstream decimation + unfused epilogue, §V) instead of the
-    stride-aware fused kernel — see ``ops.trim_conv2d``.
-
-    ``requant`` is a static per-tensor (mult, shift) pair for the
-    arbitrary-scale fixed-point requantization (``kernels/requant.py``);
-    per-channel calibrations ride in the params dict instead (a
-    ``"requant"`` entry of (F,) int32 arrays, which takes precedence).
-    ``tile_w`` overrides the kernel's VMEM-budget width-tile auto-pick.
-
-    ``force_pallas`` runs the Pallas kernels (forward AND the custom-VJP
-    backward pair, DESIGN.md §6) even off-TPU, in interpret mode — the
-    gradient-parity tests and CI's train-smoke lane use it to prove the
-    TrIM backward path on CPU runners.
+    Execution choices (substrate, ``emulate_hw`` decimation replay, tiling,
+    requant fusion) no longer live here — they are compiled separately from
+    an ``ExecutionPolicy`` into a ``ConvLayerPlan`` (``repro.engine``,
+    DESIGN.md §3).
     """
     stride: int = 1
     padding: Optional[int] = None
     groups: int = 1
     relu: bool = True
     pool: bool = False               # 2x2/stride-2 max pool after the conv
-    requant_shift: Optional[int] = None
-    requant: Optional[Tuple[int, int]] = None
-    tile_w: Optional[int] = None
-    emulate_hw: bool = False
-    force_pallas: bool = False
 
 
-def max_pool2x2(x: jax.Array) -> jax.Array:
-    """2x2/stride-2 max pool via reshape+max (VALID). Equivalent to
-    reduce_window but robustly reverse-differentiable under nested jit."""
-    B, H, W, C = x.shape
-    x = x[:, : H // 2 * 2, : W // 2 * 2]
-    x = x.reshape(B, H // 2, 2, W // 2, 2, C)
-    return x.max(axis=(2, 4))
-
-
-def conv_block(p: Params, x: jax.Array, spec: ConvBlockSpec) -> jax.Array:
+def conv_block(p: Params, x: jax.Array, spec: ConvBlockSpec,
+               policy: Optional["ExecutionPolicy"] = None) -> jax.Array:
     """Run one conv block. p: {"kernel": (K,K,C/groups,F) [, "bias": (F,)]}.
 
-    The bias/ReLU/requant epilogue executes inside the Pallas kernel's flush
-    step (fused — no int32/f32 psum round-trip through HBM) unless
-    ``spec.emulate_hw`` asks for the hardware-faithful decimation schedule.
+    Delegates to ``ops.trim_conv2d`` (which plans the call — dtype-aware
+    tile sizing — and runs it through the engine's one dispatch site)
+    under ``policy`` (default: ``ExecutionPolicy()`` — compiled Pallas on
+    TPU, oracle elsewhere), then shards and pools.  A ``"requant"`` entry
+    in ``p`` ((F,) int32 (mult, shift) arrays) fuses the calibrated
+    per-channel requantization into the kernel flush.
     """
     from repro.distributed.sharding import shard
     from repro.kernels.ops import trim_conv2d
@@ -355,12 +339,9 @@ def conv_block(p: Params, x: jax.Array, spec: ConvBlockSpec) -> jax.Array:
     w = p["kernel"]
     if jnp.issubdtype(x.dtype, jnp.floating):
         w = w.astype(x.dtype)
-    requant = p.get("requant", spec.requant)
-    x = trim_conv2d(x, w, p.get("bias"), requant, stride=spec.stride,
-                    padding=spec.padding, groups=spec.groups, relu=spec.relu,
-                    requant_shift=spec.requant_shift, tile_w=spec.tile_w,
-                    emulate_hw=spec.emulate_hw,
-                    force_pallas=spec.force_pallas)
+    x = trim_conv2d(x, w, p.get("bias"), p.get("requant"),
+                    stride=spec.stride, padding=spec.padding,
+                    groups=spec.groups, relu=spec.relu, policy=policy)
     x = shard(x, "batch", "img_h", "img_w", "cout")
     if spec.pool:
         x = max_pool2x2(x)

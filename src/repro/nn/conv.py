@@ -1,51 +1,52 @@
 """CNN path — the paper's own workload (VGG-16 / AlexNet) built on the TrIM
-conv kernels.
+conv kernels, executed through ``repro.engine`` plans.
 
-Float mode (training + inference): NHWC convs through ``nn.blocks.conv_block``
-(Pallas TrIM kernel on TPU / interpret validation, lax.conv oracle on CPU)
-with the bias+ReLU epilogue fused into the kernel flush, max-pool, dense
-classifier.
+``CNNConfig`` is pure architecture (layers, pools, classifier head).  *How*
+the network runs — substrate, ``emulate_hw`` decimation replay, tiling,
+requant fusion — is an :class:`repro.engine.ExecutionPolicy`, compiled once
+per (config, policy) into a :class:`repro.engine.ModelPlan` whose per-layer
+:class:`repro.engine.ConvLayerPlan` schedules drive the one kernel dispatch
+site (DESIGN.md §3).
 
-Integer mode (the paper's inference datapath): uint8 activations x int8
-weights -> int32 psums, per-layer requantization — numerically identical to
-the bit-faithful engine in ``repro.core.trim.engine`` (tests assert this),
-but running through the TPU-native kernel.  With calibrated
+The public functions here (``cnn_forward``, ``cnn_loss``,
+``cnn_forward_int8``, ``calibrate_requant*``) keep their historical
+signatures as thin shims over the plan entry points; the legacy
+``emulate_hw=`` / ``force_pallas=`` kwargs still work but emit
+``DeprecationWarning`` — pass ``policy=ExecutionPolicy(...)`` instead.
+
+Float mode (training + inference): NHWC convs with the bias+ReLU epilogue
+fused into the kernel flush, max-pool, dense classifier.  Integer mode (the
+paper's inference datapath): uint8 activations x int8 weights -> int32
+psums, per-layer requantization — numerically identical to the bit-faithful
+engine in ``repro.core.trim.engine`` (tests assert this); calibrated
 ``requant_shifts`` (power-of-two) or ``requant`` (arbitrary-scale
-multiplier+shift pairs from ``calibrate_requant``, per-channel capable) the
-ReLU+requant epilogue also fuses into the kernel, so int32 psums never
-round-trip through HBM (DESIGN.md §2, §4).
-
-``CNNConfig.emulate_hw`` / the ``emulate_hw=`` overrides select the
-FPGA-faithful strided-layer schedule (stride-1 sweep + downstream
-decimation, §V) for honest Table I/II comparisons.
+multiplier+shift, per-channel capable) fuse the whole epilogue into the
+kernel so int32 psums never round-trip through HBM (DESIGN.md §2, §4).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.trim.model import (ALEXNET_LAYERS, VGG16_LAYERS,
                                    ConvLayerSpec)
-from repro.kernels.ops import trim_conv2d
-from repro.nn.blocks import ConvBlockSpec, conv_block, max_pool2x2
+from repro.engine import ExecutionPolicy, plan_model, policy_from_legacy
+from repro.nn.blocks import ConvBlockSpec, max_pool2x2  # noqa: F401
 from repro.nn.layers import Params, _normal
 
 
 @dataclass(frozen=True)
 class CNNConfig:
+    """Pure architecture: what to run (execution policy rides separately)."""
     name: str
     layers: Tuple[ConvLayerSpec, ...]
     pool_after: Tuple[int, ...]          # indices (into layers) with 2x2 pool
     classifier: Tuple[int, ...]          # hidden dims of the FC head
     n_classes: int = 1000
     input_hw: Tuple[int, int] = (224, 224)
-    emulate_hw: bool = False             # FPGA-faithful strided-layer path
-    force_pallas: bool = False           # Pallas fwd + VJP even off-TPU
 
 
 VGG16_CNN = CNNConfig(
@@ -55,10 +56,6 @@ VGG16_CNN = CNNConfig(
 ALEXNET_CNN = CNNConfig(
     "alexnet", ALEXNET_LAYERS, pool_after=(0, 1, 4),
     classifier=(4096, 4096), input_hw=(227, 227))
-
-
-#: 2x2/stride-2 max pool (moved to nn.blocks; alias kept for callers)
-_pool = max_pool2x2
 
 
 def init_cnn(key, cfg: CNNConfig, dtype=jnp.float32) -> Params:
@@ -89,59 +86,51 @@ def init_cnn(key, cfg: CNNConfig, dtype=jnp.float32) -> Params:
 
 def conv_block_specs(cfg: CNNConfig, c_in: Optional[int] = None,
                      ) -> Tuple[ConvBlockSpec, ...]:
-    """Per-layer ConvBlockSpecs (fused bias/ReLU epilogue + pool schedule).
+    """Per-layer architectural ConvBlockSpecs (stride/groups/pool schedule).
 
     ``c_in`` is the actual input channel count of the first layer's input
-    (grouped AlexNet two-tower layers have running C = groups * layer.M)."""
+    (grouped AlexNet two-tower layers have running C = groups * layer.M).
+    Execution choices live in the ``ConvLayerPlan``s of ``plan_model``."""
     specs = []
     c = cfg.layers[0].M if c_in is None else c_in
     for i, l in enumerate(cfg.layers):
         specs.append(ConvBlockSpec(
             stride=l.stride, padding=l.padding, groups=c // l.M,
-            relu=True, pool=i in cfg.pool_after,
-            emulate_hw=cfg.emulate_hw, force_pallas=cfg.force_pallas))
+            relu=True, pool=i in cfg.pool_after))
         c = l.N
     return tuple(specs)
 
 
+def _plan(cfg: CNNConfig, policy: Optional[ExecutionPolicy],
+          emulate_hw: Optional[bool], force_pallas: Optional[bool],
+          caller: str, c_in: Optional[int] = None):
+    pol = policy_from_legacy(policy, emulate_hw=emulate_hw,
+                             force_pallas=force_pallas, caller=caller)
+    return plan_model(cfg, pol, c_in=c_in)
+
+
 def cnn_forward(params: Params, images: jax.Array, cfg: CNNConfig,
                 emulate_hw: Optional[bool] = None,
-                force_pallas: Optional[bool] = None) -> jax.Array:
+                force_pallas: Optional[bool] = None,
+                policy: Optional[ExecutionPolicy] = None) -> jax.Array:
     """images (B, H, W, C) float -> logits (B, n_classes).
 
-    Each conv layer runs as one fused conv_block (conv + bias + ReLU inside
-    the kernel flush); ``emulate_hw`` (default: cfg.emulate_hw) opts into
-    the FPGA's decimation schedule for strided layers.  ``force_pallas``
-    (default: cfg.force_pallas) runs the Pallas kernels — forward and the
-    custom-VJP backward pair — even off-TPU, so ``jax.grad`` of this
-    forward exercises the TrIM kernel in both directions (DESIGN.md §6)."""
-    x = images
-    hw = cfg.emulate_hw if emulate_hw is None else emulate_hw
-    fp = cfg.force_pallas if force_pallas is None else force_pallas
-    if hw != cfg.emulate_hw or fp != cfg.force_pallas:
-        cfg = dataclasses.replace(cfg, emulate_hw=hw, force_pallas=fp)
-    specs = conv_block_specs(cfg, c_in=x.shape[-1])
-    for i, spec in enumerate(specs):
-        x = conv_block(params["conv"][i], x, spec)
-    x = x.reshape(x.shape[0], -1)
-    for j, fc in enumerate(params["fc"]):
-        x = x @ fc["kernel"].astype(x.dtype) + fc["bias"].astype(x.dtype)
-        if j < len(params["fc"]) - 1:
-            x = jax.nn.relu(x)
-    return x
+    Each conv layer runs as one planned fused block (conv + bias + ReLU
+    inside the kernel flush).  ``policy`` selects the substrate /
+    ``emulate_hw`` replay; the ``emulate_hw=`` / ``force_pallas=`` kwargs
+    are deprecated shims onto it."""
+    plan = _plan(cfg, policy, emulate_hw, force_pallas, "cnn_forward",
+                 c_in=int(images.shape[-1]))
+    return plan.forward(params, images)
 
 
-def cnn_loss(params: Params, batch: Dict[str, jax.Array], cfg: CNNConfig,
+def cnn_loss(params: Params, batch, cfg: CNNConfig,
              emulate_hw: Optional[bool] = None,
              force_pallas: Optional[bool] = None,
-             ) -> Tuple[jax.Array, Dict[str, Any]]:
-    logits = cnn_forward(params, batch["images"], cfg, emulate_hw=emulate_hw,
-                         force_pallas=force_pallas)
-    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-    ll = jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
-    ce = -ll.mean()
-    acc = (logits.argmax(-1) == batch["labels"]).mean()
-    return ce, {"ce": ce, "acc": acc}
+             policy: Optional[ExecutionPolicy] = None):
+    plan = _plan(cfg, policy, emulate_hw, force_pallas, "cnn_loss",
+                 c_in=int(batch["images"].shape[-1]))
+    return plan.loss(params, batch)
 
 
 # ---------------------------------------------------------------------------
@@ -164,129 +153,45 @@ def quantize_cnn(params: Params, cfg: CNNConfig,
     return qp, scales
 
 
-def _int8_forward(qparams: Params, images_u8: jax.Array, cfg: CNNConfig,
-                  requant_shifts: Optional[Sequence[int]] = None,
-                  requant: Optional[Sequence[Tuple[jax.Array, jax.Array]]]
-                  = None,
-                  ) -> Tuple[jax.Array, List[jax.Array]]:
-    """Shared int8 datapath: returns (final int32 psums, dynamic shifts).
-
-    ``requant_shifts`` fuses calibrated power-of-two shifts into the kernel;
-    ``requant`` fuses calibrated arbitrary-scale (mult, shift) pairs
-    (per-tensor scalars or per-channel (F,) arrays) instead.  The shifts
-    list collects the per-layer power-of-two requant shifts actually used
-    on the dynamic (uncalibrated) path — traced scalars, so calibration
-    must run this eagerly to concretize them."""
-    assert requant_shifts is None or requant is None
-    x = images_u8
-    shifts: List[jax.Array] = []
-    for i, l in enumerate(cfg.layers):
-        w = qparams["conv"][i]["kernel"]
-        groups = x.shape[-1] // w.shape[-2]  # AlexNet two-tower layers: 2
-        last = i == len(cfg.layers) - 1
-        if requant is not None and not last:
-            # Calibrated arbitrary scale: conv + ReLU + multiplier+shift
-            # requant in one kernel pass (DESIGN.md §4).
-            x = trim_conv2d(x, w, None, tuple(requant[i]), stride=l.stride,
-                            padding=l.padding, groups=groups, relu=True,
-                            emulate_hw=cfg.emulate_hw,
-                            force_pallas=cfg.force_pallas)
-        elif requant_shifts is not None and not last:
-            # Calibrated shift: conv + ReLU + requant in one kernel pass.
-            x = trim_conv2d(x, w, stride=l.stride, padding=l.padding,
-                            groups=groups, relu=True,
-                            requant_shift=int(requant_shifts[i]),
-                            emulate_hw=cfg.emulate_hw,
-                            force_pallas=cfg.force_pallas)
-        else:
-            psum = trim_conv2d(x, w, stride=l.stride, padding=l.padding,
-                               groups=groups, relu=True,
-                               emulate_hw=cfg.emulate_hw,
-                               force_pallas=cfg.force_pallas)
-            if last:
-                return psum, shifts
-            # power-of-two requantize back to uint8 for the next layer
-            shift = jnp.maximum(
-                jnp.ceil(jnp.log2(jnp.maximum(
-                    psum.max().astype(jnp.float32), 1.0) / 255.0)), 0
-            ).astype(jnp.int32)
-            shifts.append(shift)
-            x = jnp.clip(psum >> shift, 0, 255).astype(jnp.uint8)
-        if i in cfg.pool_after:
-            x = _pool(x)
-    return x, shifts
-
-
 def cnn_forward_int8(qparams: Params, images_u8: jax.Array, cfg: CNNConfig,
                      act_scales: Optional[Sequence[float]] = None,
                      requant_shifts: Optional[Sequence[int]] = None,
                      requant: Optional[Sequence[Tuple[jax.Array, jax.Array]]]
                      = None,
-                     ) -> jax.Array:
-    """uint8 NHWC images through the integer TrIM datapath.
-
-    Each layer: uint8 x int8 -> int32 psums (exact), ReLU in int32 (fused
-    into the kernel flush), then requantize to uint8 for the next layer.
-    When ``requant_shifts`` supplies calibrated per-layer power-of-two
-    shifts (what the paper's engine output stage does), or ``requant``
-    supplies calibrated per-layer (mult, shift) fixed-point pairs
-    (arbitrary scales, per-channel capable — ``calibrate_requant``), the
-    whole epilogue fuses into the conv kernel and the int32 psums never
-    reach HBM; otherwise the shift is derived from the running psum
-    maximum (data-dependent, so it runs post-kernel).
-    Returns the final int32 feature map (pre-classifier).
-    """
-    return _int8_forward(qparams, images_u8, cfg, requant_shifts,
-                         requant)[0]
+                     emulate_hw: Optional[bool] = None,
+                     force_pallas: Optional[bool] = None,
+                     policy: Optional[ExecutionPolicy] = None) -> jax.Array:
+    """uint8 NHWC images through the planned integer TrIM datapath
+    (``repro.engine.execute.forward_int8``); returns the final int32
+    feature map (pre-classifier)."""
+    plan = _plan(cfg, policy, emulate_hw, force_pallas, "cnn_forward_int8",
+                 c_in=int(images_u8.shape[-1]))
+    return plan.forward_int8(qparams, images_u8,
+                             requant_shifts=requant_shifts, requant=requant)
 
 
 def calibrate_requant_shifts(qparams: Params, sample_u8: jax.Array,
-                             cfg: CNNConfig) -> List[int]:
-    """Derive static per-layer power-of-two requant shifts from a sample
-    batch (the engine's offline output-stage calibration).  The returned
-    shifts make ``cnn_forward_int8(..., requant_shifts=...)`` fully fused.
-    Runs the dynamic datapath eagerly (not under jit) to concretize the
-    per-layer shifts."""
-    return [int(s) for s in _int8_forward(qparams, sample_u8, cfg)[1]]
+                             cfg: CNNConfig,
+                             emulate_hw: Optional[bool] = None,
+                             force_pallas: Optional[bool] = None,
+                             policy: Optional[ExecutionPolicy] = None,
+                             ) -> List[int]:
+    """Static per-layer power-of-two requant shifts from a sample batch
+    (the engine's offline output-stage calibration)."""
+    plan = _plan(cfg, policy, emulate_hw, force_pallas,
+                 "calibrate_requant_shifts", c_in=int(sample_u8.shape[-1]))
+    return plan.calibrate_requant_shifts(qparams, sample_u8)
 
 
 def calibrate_requant(qparams: Params, sample_u8: jax.Array, cfg: CNNConfig,
                       per_channel: bool = True,
+                      emulate_hw: Optional[bool] = None,
+                      force_pallas: Optional[bool] = None,
+                      policy: Optional[ExecutionPolicy] = None,
                       ) -> List[Tuple[jax.Array, jax.Array]]:
-    """Arbitrary-scale calibration: per-layer (mult, shift) pairs.
-
-    Generalizes ``calibrate_requant_shifts`` from power-of-two scales to
-    15-bit-mantissa fixed-point scales (DESIGN.md §4): each non-last layer
-    maps its observed post-ReLU psum range [0, amax] onto [0, 255] with
-    ``scale = 255 / amax``, encoded as ``m * 2**-s`` via
-    ``kernels.requant.scale_to_mult_shift``.  ``per_channel=True`` (the
-    default) calibrates one scale per output channel — the headroom win
-    arbitrary scales exist for.  Runs eagerly; the returned (F,) int32
-    array pairs make ``cnn_forward_int8(..., requant=...)`` fully fused.
-    """
-    from repro.kernels.requant import (requant_mult_shift,
-                                       scale_to_mult_shift)
-    x = sample_u8
-    pairs: List[Tuple[jax.Array, jax.Array]] = []
-    for i, l in enumerate(cfg.layers[:-1]):
-        w = qparams["conv"][i]["kernel"]
-        groups = x.shape[-1] // w.shape[-2]
-        psum = trim_conv2d(x, w, stride=l.stride, padding=l.padding,
-                           groups=groups, relu=True,
-                           emulate_hw=cfg.emulate_hw,
-                           force_pallas=cfg.force_pallas)
-        axes = (0, 1, 2) if per_channel else None
-        amax = np.maximum(np.asarray(psum.max(axis=axes),
-                                     np.float64), 1.0)
-        m, s = scale_to_mult_shift(255.0 / amax)
-        F = w.shape[-1]
-        m = jnp.broadcast_to(jnp.asarray(m, jnp.int32), (F,))
-        s = jnp.broadcast_to(jnp.asarray(s, jnp.int32), (F,))
-        pairs.append((m, s))
-        # Propagate through the exact fixed-point datapath the fused
-        # forward will run, so downstream layers calibrate on what they
-        # will actually see.
-        x = requant_mult_shift(psum, m, s).astype(jnp.uint8)
-        if i in cfg.pool_after:
-            x = _pool(x)
-    return pairs
+    """Arbitrary-scale calibration: per-layer (mult, shift) pairs
+    (per-channel capable — see ``repro.engine.execute.calibrate_requant``)."""
+    plan = _plan(cfg, policy, emulate_hw, force_pallas, "calibrate_requant",
+                 c_in=int(sample_u8.shape[-1]))
+    return plan.calibrate_requant(qparams, sample_u8,
+                                  per_channel=per_channel)

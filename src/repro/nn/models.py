@@ -313,72 +313,77 @@ class EncDecLM:
 class ConvNet:
     """The paper's CNN workloads (VGG-16 / AlexNet) on the TrIM conv path.
 
-    ``emulate_hw`` selects the FPGA-faithful decimation schedule for strided
-    layers (stride-1 sweep + downstream epilogue) instead of the stride-aware
-    fused kernel — see ``kernels.ops.trim_conv2d`` and DESIGN.md §2.
-
-    ``force_pallas`` runs the Pallas kernels even off-TPU (interpret mode).
-    With the custom VJP (DESIGN.md §6) that covers *both* directions:
-    ``jax.grad`` of ``loss``/``forward`` runs the TrIM input-grad and
-    weight-grad kernels instead of the lax.conv oracle — what the
-    gradient-parity tests and CI's train-smoke lane assert.
+    ``policy`` (an ``repro.engine.ExecutionPolicy``) decides *how* the
+    network runs — substrate (compiled Pallas / oracle / interpret), the
+    FPGA-faithful ``emulate_hw`` decimation replay, tiling, VMEM budget.
+    The (cfg, policy) pair is compiled once into a ``ModelPlan``
+    (``repro.engine.plan_model``, cached) and every entry point consumes
+    the plan; with ``ExecutionPolicy(substrate="pallas")`` the custom VJP
+    (DESIGN.md §6) runs the TrIM input-grad and weight-grad kernels even
+    off-TPU — what the gradient-parity tests and CI's train-smoke lane
+    assert.
     """
 
     cfg: "CNNConfig"
-    emulate_hw: Optional[bool] = None    # None: follow cfg.emulate_hw
-    force_pallas: Optional[bool] = None  # None: follow cfg.force_pallas
+    policy: "ExecutionPolicy" = None  # None: ExecutionPolicy() defaults
 
-    def _cfg(self) -> "CNNConfig":
-        import dataclasses as _dc
-        cfg = self.cfg
-        if self.emulate_hw is not None and self.emulate_hw != cfg.emulate_hw:
-            cfg = _dc.replace(cfg, emulate_hw=self.emulate_hw)
-        if (self.force_pallas is not None
-                and self.force_pallas != cfg.force_pallas):
-            cfg = _dc.replace(cfg, force_pallas=self.force_pallas)
-        return cfg
+    def _plan(self, c_in: Optional[int] = None):
+        from repro.engine import ExecutionPolicy, plan_model
+        pol = self.policy if self.policy is not None else ExecutionPolicy()
+        return plan_model(self.cfg, pol, c_in=c_in)
+
+    @property
+    def plan(self):
+        return self._plan()
 
     def init(self, key) -> Params:
-        from repro.nn.conv import init_cnn
-        return init_cnn(key, self.cfg)
+        return self.plan.init(key)
 
     def forward(self, params: Params, images: jax.Array) -> jax.Array:
-        from repro.nn.conv import cnn_forward
-        return cnn_forward(params, images, self._cfg())
+        # c_in from the actual input: grouped first layers (two-tower
+        # inputs with C = groups * layer.M) plan their group count from it.
+        return self._plan(int(images.shape[-1])).forward(params, images)
 
     def loss(self, params: Params, batch: Dict[str, jax.Array]):
-        from repro.nn.conv import cnn_loss
-        return cnn_loss(params, batch, self._cfg())
+        plan = self._plan(int(batch["images"].shape[-1]))
+        return plan.loss(params, batch)
 
     def quantize(self, params: Params):
-        from repro.nn.conv import quantize_cnn
-        return quantize_cnn(params, self.cfg)
+        return self.plan.quantize(params)
 
     def forward_int8(self, qparams: Params, images_u8: jax.Array,
                      requant_shifts=None, requant=None) -> jax.Array:
-        from repro.nn.conv import cnn_forward_int8
-        return cnn_forward_int8(qparams, images_u8, self._cfg(),
-                                requant_shifts=requant_shifts,
-                                requant=requant)
+        plan = self._plan(int(images_u8.shape[-1]))
+        return plan.forward_int8(qparams, images_u8,
+                                 requant_shifts=requant_shifts,
+                                 requant=requant)
 
     def calibrate(self, qparams: Params, sample_u8: jax.Array):
-        from repro.nn.conv import calibrate_requant_shifts
-        return calibrate_requant_shifts(qparams, sample_u8, self._cfg())
+        plan = self._plan(int(sample_u8.shape[-1]))
+        return plan.calibrate_requant_shifts(qparams, sample_u8)
 
     def calibrate_requant(self, qparams: Params, sample_u8: jax.Array,
                           per_channel: bool = True):
-        """Arbitrary-scale (mult, shift) calibration — see nn.conv."""
-        from repro.nn.conv import calibrate_requant
-        return calibrate_requant(qparams, sample_u8, self._cfg(),
-                                 per_channel=per_channel)
+        """Arbitrary-scale (mult, shift) calibration — see repro.engine."""
+        plan = self._plan(int(sample_u8.shape[-1]))
+        return plan.calibrate_requant(qparams, sample_u8,
+                                      per_channel=per_channel)
 
 
 def build_model(cfg, tp: int = 1, emulate_hw: Optional[bool] = None,
-                force_pallas: Optional[bool] = None):
+                force_pallas: Optional[bool] = None, policy=None):
+    """Build the model for ``cfg``.  For CNN configs, ``policy`` (an
+    ``ExecutionPolicy``) selects the execution substrate; the legacy
+    ``emulate_hw=`` / ``force_pallas=`` kwargs are deprecated shims onto
+    it (``DeprecationWarning``)."""
     from repro.nn.conv import CNNConfig
     if isinstance(cfg, CNNConfig):
-        return ConvNet(cfg, emulate_hw=emulate_hw,
-                       force_pallas=force_pallas)
+        from repro.engine import policy_from_legacy
+        if emulate_hw is not None or force_pallas is not None:
+            policy = policy_from_legacy(policy, emulate_hw=emulate_hw,
+                                        force_pallas=force_pallas,
+                                        caller="build_model")
+        return ConvNet(cfg, policy=policy)
     if cfg.family == "encdec":
         return EncDecLM(cfg, tp)
     return CausalLM(cfg, tp)

@@ -5,19 +5,22 @@ weight-grad per-tap reduction kernel, interpret mode) must match the
 lax.conv oracle path for stride 1/2/4, K=3/5/11, grouped conv, partial
 W-tiles, and fp32/bf16 inputs — plus the model-level acceptance criterion:
 grads of the full ConvNet loss agree to 1e-4 on CPU."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.trim.model import ConvLayerSpec
+from repro.engine import ExecutionPolicy
 from repro.kernels import ref
 from repro.kernels.ops import trim_conv2d
 from repro.kernels.trim_conv2d_vjp import (trim_conv2d_input_grad,
                                            trim_conv2d_wgrad_pallas)
 from repro.nn.conv import CNNConfig, cnn_loss, init_cnn
+
+#: Pallas everywhere (interpret off-TPU) vs the default oracle-on-CPU.
+PALLAS = ExecutionPolicy(substrate="pallas")
+ORACLE = ExecutionPolicy()
 
 
 def _assert_tree_close(a, b, rtol=1e-4, atol=1e-4):
@@ -84,9 +87,9 @@ OPS_CASES = [
 ]
 
 
-def _ops_grads(x, w, b, cot, force, **kw):
+def _ops_grads(x, w, b, cot, policy, **kw):
     def f(x, w, b):
-        out = trim_conv2d(x, w, b, relu=True, force_pallas=force,
+        out = trim_conv2d(x, w, b, relu=True, policy=policy,
                           block_c=4, block_f=4, **kw)
         return (out.astype(jnp.float32) * cot).sum()
     return jax.grad(f, argnums=(0, 1, 2))(x, w, b)
@@ -108,8 +111,8 @@ def test_ops_grad_parity_fp32(case):
         lambda x, w, b: trim_conv2d(x, w, b, relu=True, **kw), x, w, b)
     cot = jax.random.normal(jax.random.fold_in(key, 3), out_sd.shape,
                             jnp.float32)
-    g_pal = _ops_grads(x, w, b, cot, True, **kw)
-    g_ref = _ops_grads(x, w, b, cot, False, **kw)
+    g_pal = _ops_grads(x, w, b, cot, PALLAS, **kw)
+    g_ref = _ops_grads(x, w, b, cot, ORACLE, **kw)
     _assert_tree_close(g_pal, g_ref)
 
 
@@ -124,15 +127,15 @@ def test_ops_grad_parity_bf16():
     cot = jax.random.normal(jax.random.fold_in(key, 3), (2, 5, 6, 8),
                             jnp.float32)
 
-    def f(x, w, b, force):
-        out = trim_conv2d(x, w, b, stride=2, relu=True, force_pallas=force,
+    def f(x, w, b, policy):
+        out = trim_conv2d(x, w, b, stride=2, relu=True, policy=policy,
                           block_c=4, block_f=4)
         return (out.astype(jnp.float32) * cot).sum()
 
-    g_pal = jax.grad(lambda *a: f(*a, True), (0, 1, 2))(x, w, b)
+    g_pal = jax.grad(lambda *a: f(*a, PALLAS), (0, 1, 2))(x, w, b)
     for a in g_pal[:2]:
         assert a.dtype == jnp.bfloat16          # cotangents follow primals
-    g_ref = jax.grad(lambda *a: f(*a, False), (0, 1, 2))(x, w, b)
+    g_ref = jax.grad(lambda *a: f(*a, ORACLE), (0, 1, 2))(x, w, b)
     scale = max(float(jnp.abs(g.astype(jnp.float32)).max())
                 for g in jax.tree.leaves(g_ref))
     _assert_tree_close(g_pal, g_ref, rtol=0.1, atol=0.05 * scale)
@@ -146,8 +149,9 @@ def test_emulate_hw_stays_forward_capable():
     x = jax.random.normal(key, (1, 9, 9, 4), jnp.float32)
     w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 4, 8),
                           jnp.float32)
-    g = jax.grad(lambda x: trim_conv2d(x, w, stride=2,
-                                       emulate_hw=True).sum())(x)
+    g = jax.grad(lambda x: trim_conv2d(
+        x, w, stride=2,
+        policy=ExecutionPolicy(emulate_hw=True)).sum())(x)
     assert np.isfinite(np.asarray(g)).all()
 
 
@@ -175,8 +179,8 @@ def _cnn_grad_parity(cfg, hw, c_in, n_classes, seed=0):
              "labels": jax.random.randint(jax.random.fold_in(key, 1), (2,),
                                           0, n_classes, jnp.int32)}
     g_ref = jax.grad(lambda p: cnn_loss(p, batch, cfg)[0])(params)
-    cfg_p = dataclasses.replace(cfg, force_pallas=True)
-    g_pal = jax.grad(lambda p: cnn_loss(p, batch, cfg_p)[0])(params)
+    g_pal = jax.grad(
+        lambda p: cnn_loss(p, batch, cfg, policy=PALLAS)[0])(params)
     _assert_tree_close(g_pal, g_ref)
 
 

@@ -1,0 +1,240 @@
+"""Execution-policy / layer-plan API (repro.engine, DESIGN.md §3).
+
+Covers: the single dispatch rule, plan determinism + hashability (lru and
+``jax.jit`` static-arg cache hits on rebuilt plans), the cached VJP handle,
+the degenerate single-W-block schedule on the paper's full-size shapes, the
+deprecation shims (warning AND numerical identity with the plan path), and
+the shared launcher CLI -> policy mapping.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CNN_REGISTRY, CNN_SMOKES
+from repro.engine import (ExecutionPolicy, plan_conv_layer, plan_model,
+                          run_conv2d)
+from repro.kernels.ops import trim_conv2d
+from repro.kernels.trim_conv2d_vjp import make_trim_conv2d_vjp
+from repro.nn.conv import cnn_forward, cnn_forward_int8, init_cnn, \
+    quantize_cnn
+from repro.nn.models import ConvNet, build_model
+
+PALLAS = ExecutionPolicy(substrate="pallas")
+
+
+# ---------------------------------------------------------------------------
+# policy: the one dispatch rule
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_rule_off_tpu():
+    """CPU backend: auto -> oracle, pallas -> interpret, explicit choices
+    pass through.  (This suite runs on CPU; on TPU auto/pallas resolve to
+    compiled pallas instead.)"""
+    assert jax.default_backend() != "tpu"
+    assert ExecutionPolicy().resolved_substrate() == "oracle"
+    assert PALLAS.resolved_substrate() == "interpret"
+    assert ExecutionPolicy(substrate="oracle").resolved_substrate() == \
+        "oracle"
+    assert ExecutionPolicy(substrate="interpret").resolved_substrate() == \
+        "interpret"
+    with pytest.raises(ValueError):
+        ExecutionPolicy(substrate="fpga")
+
+
+def test_policy_hashable_and_resolving():
+    p = ExecutionPolicy(substrate="pallas", emulate_hw=True, tile_w=16)
+    assert hash(p) == hash(ExecutionPolicy(substrate="pallas",
+                                           emulate_hw=True, tile_w=16))
+    r = p.resolve()
+    assert r.substrate in ("pallas", "interpret")
+    assert r.emulate_hw and r.tile_w == 16
+
+
+# ---------------------------------------------------------------------------
+# plans: determinism, hashability, cache hits
+# ---------------------------------------------------------------------------
+
+
+def test_plan_model_deterministic_and_cached():
+    """Same cfg + policy -> the SAME ModelPlan object (lru hit), even when
+    the config is a rebuilt equal value; plans hash and compare by value."""
+    cfg = CNN_SMOKES["vgg16"]
+    p1 = plan_model(cfg, ExecutionPolicy())
+    p2 = plan_model(dataclasses.replace(cfg), ExecutionPolicy())
+    assert p1 is p2
+    assert hash(p1) == hash(p2) and p1 == p2
+    assert len(p1.layers) == len(cfg.layers)
+    # a different policy is a different plan
+    p3 = plan_model(cfg, PALLAS)
+    assert p3 is not p1 and p3.layers[0].substrate == "interpret"
+
+
+def test_vjp_handle_lru_hit():
+    """Equal layer plans share one cached custom-VJP handle (the
+    make_trim_conv2d_vjp lru cache)."""
+    kw = dict(stride=1, padding=1, relu=True, has_bias=True, policy=PALLAS)
+    a = plan_conv_layer((12, 12), 4, 3, 8, **kw)
+    b = plan_conv_layer((12, 12), 4, 3, 8, **kw)
+    assert a is b
+    assert a.vjp() is b.vjp()
+    info = make_trim_conv2d_vjp.cache_info()
+    a.vjp()
+    assert make_trim_conv2d_vjp.cache_info().hits == info.hits + 1
+
+
+def test_plan_jit_closure_no_retrace():
+    """A rebuilt (equal) plan passed as a jit static argument must hit the
+    trace cache — the round-trip the old kwargs-threading could not do."""
+    cfg = CNN_SMOKES["vgg16"]
+    traces = []
+
+    @functools.partial(jax.jit, static_argnames=("plan",))
+    def fwd(plan, params, images):
+        traces.append(1)
+        from repro.engine import execute
+        return execute.forward(plan, params, images)
+
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    img = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    o1 = fwd(plan_model(cfg, ExecutionPolicy()), params, img)
+    # rebuild cfg AND policy from scratch: equal values, fresh objects
+    cfg2 = dataclasses.replace(cfg)
+    o2 = fwd(plan_model(cfg2, ExecutionPolicy()), params, img)
+    assert len(traces) == 1
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_paper_shapes_keep_single_wblock_schedule():
+    """VGG-16 and AlexNet full-size plans keep the degenerate single-W-block
+    schedule (n_wt == 1, tile covers W_O) — the paper shapes never tile."""
+    for name in ("vgg16", "alexnet"):
+        plan = plan_model(CNN_REGISTRY[name], ExecutionPolicy())
+        for lp in plan.layers:
+            assert lp.geom.n_wt == 1, (name, lp)
+            assert lp.tile_w == lp.geom.W_O
+
+
+def test_int8_plan_describes_integer_datapath():
+    """ModelPlan.int8 is the lane forward_int8 actually runs: bias-free,
+    fused requant on every non-last layer, raw psums out of the last."""
+    plan = plan_model(CNN_SMOKES["vgg16"], ExecutionPolicy())
+    int8 = plan.int8
+    assert int8 is plan.int8                      # lru-cached sibling
+    assert all(not lp.has_bias for lp in int8.layers)
+    assert [lp.epilogue for lp in int8.layers] == \
+        ["relu+requant"] * (len(int8.layers) - 1) + ["relu"]
+    assert [lp.epilogue for lp in plan.layers] == \
+        ["bias+relu"] * len(plan.layers)
+
+
+def test_emulate_hw_plan_uses_stride1_geometry():
+    lp = plan_conv_layer((23, 23), 3, 11, 8, stride=4, padding=0,
+                         relu=True, has_bias=True,
+                         policy=ExecutionPolicy(emulate_hw=True))
+    assert lp.decimate and lp.geom.S == 1
+    assert lp.epilogue.startswith("decimate->")
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: warning + numerical identity with the plan path
+# ---------------------------------------------------------------------------
+
+
+def test_trim_conv2d_legacy_kwargs_warn_and_match():
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (1, 10, 10, 4))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 4, 8))
+    b = jax.random.normal(jax.random.fold_in(key, 2), (8,))
+    new = trim_conv2d(x, w, b, relu=True, policy=PALLAS)
+    with pytest.warns(DeprecationWarning, match="force_pallas"):
+        old = trim_conv2d(x, w, b, relu=True, force_pallas=True)
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+    hw_new = trim_conv2d(x, w, b, stride=2, relu=True,
+                         policy=ExecutionPolicy(emulate_hw=True))
+    with pytest.warns(DeprecationWarning, match="emulate_hw"):
+        hw_old = trim_conv2d(x, w, b, stride=2, relu=True, emulate_hw=True)
+    np.testing.assert_array_equal(np.asarray(hw_old), np.asarray(hw_new))
+
+
+def test_cnn_forward_legacy_kwargs_warn_and_match():
+    cfg = CNN_SMOKES["vgg16"]
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    img = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    new = cnn_forward(params, img, cfg, policy=PALLAS)
+    with pytest.warns(DeprecationWarning, match="force_pallas"):
+        old = cnn_forward(params, img, cfg, force_pallas=True)
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_cnn_forward_int8_legacy_kwargs_warn_and_match():
+    """int8 path: bit-identical between the shim and the plan path."""
+    cfg = CNN_SMOKES["vgg16"]
+    params = init_cnn(jax.random.PRNGKey(2), cfg)
+    qp, _ = quantize_cnn(params, cfg)
+    u8 = jax.random.randint(jax.random.PRNGKey(3), (1, 16, 16, 3), 0, 255,
+                            jnp.uint8)
+    new = cnn_forward_int8(qp, u8, cfg, policy=PALLAS)
+    with pytest.warns(DeprecationWarning, match="force_pallas"):
+        old = cnn_forward_int8(qp, u8, cfg, force_pallas=True)
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_build_model_legacy_kwargs_warn_and_match():
+    cfg = CNN_SMOKES["vgg16"]
+    with pytest.warns(DeprecationWarning, match="force_pallas"):
+        legacy = build_model(cfg, force_pallas=True)
+    modern = build_model(cfg, policy=PALLAS)
+    assert isinstance(legacy, ConvNet) and isinstance(modern, ConvNet)
+    assert legacy.plan is modern.plan       # same resolved ModelPlan
+    params = modern.init(jax.random.PRNGKey(0))
+    img = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    np.testing.assert_array_equal(
+        np.asarray(legacy.forward(params, img)),
+        np.asarray(modern.forward(params, img)))
+
+
+# ---------------------------------------------------------------------------
+# the dispatch seam itself
+# ---------------------------------------------------------------------------
+
+
+def test_run_conv2d_substrate_agreement():
+    """All three substrates agree through THE dispatch site directly."""
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (1, 9, 9, 4))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 4, 8))
+    outs = []
+    for sub in ("oracle", "interpret"):
+        lp = plan_conv_layer((9, 9), 4, 3, 8, relu=True,
+                             policy=ExecutionPolicy(substrate=sub))
+        outs.append(np.asarray(run_conv2d(lp, x, w)))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# shared launcher CLI -> policy
+# ---------------------------------------------------------------------------
+
+
+def test_cli_parent_maps_to_policy():
+    import argparse
+    from repro.launch.cli import execution_parent, policy_from_args
+    ap = argparse.ArgumentParser(parents=[execution_parent(
+        arch_choices=("vgg16", "alexnet"), arch_default="vgg16")])
+    args = ap.parse_args([])
+    assert policy_from_args(args) == ExecutionPolicy()
+    args = ap.parse_args(["--substrate", "interpret", "--emulate-hw"])
+    assert policy_from_args(args) == ExecutionPolicy(
+        substrate="interpret", emulate_hw=True)
+    # the deprecated alias stores "pallas" into the same dest, and warns
+    with pytest.warns(DeprecationWarning, match="force-pallas"):
+        args = ap.parse_args(["--force-pallas", "--int8"])
+    assert policy_from_args(args).substrate == "pallas"
+    assert args.int8
+    args = ap.parse_args(["--arch", "alexnet"])
+    assert args.arch == "alexnet"

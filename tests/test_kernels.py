@@ -6,11 +6,17 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.engine import ExecutionPolicy
 from repro.kernels import ref
 from repro.kernels.ops import trim_conv2d
 from repro.kernels.trim_conv1d import trim_conv1d_pallas
 from repro.kernels.trim_conv2d import trim_conv2d_pallas
 from repro.kernels.trim_matmul import trim_matmul_pallas
+
+#: Pallas everywhere (interpret mode on CPU) — the old force-pallas mode.
+PALLAS = ExecutionPolicy(substrate="pallas")
+#: Same, with the FPGA-faithful strided-layer decimation replay (§V).
+PALLAS_HW = ExecutionPolicy(substrate="pallas", emulate_hw=True)
 
 
 # ---------------------------------------------------------------------------
@@ -71,7 +77,7 @@ def test_conv2d_stride_decimation():
     key = jax.random.PRNGKey(1)
     x = jax.random.normal(key, (1, 16, 16, 4))
     w = jax.random.normal(key, (3, 3, 4, 8))
-    out = trim_conv2d(x, w, stride=2, force_pallas=True)
+    out = trim_conv2d(x, w, stride=2, policy=PALLAS)
     want = ref.conv2d_ref(x, w, stride=2)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
@@ -123,12 +129,13 @@ def test_matmul_int8_exact():
 
 
 def test_ops_cpu_fallback_matches_pallas():
-    """ops.* dispatches to the oracle on CPU; force_pallas must agree."""
+    """ops.* dispatches to the oracle on CPU; the pallas policy must
+    agree."""
     key = jax.random.PRNGKey(4)
     x = jax.random.normal(key, (1, 10, 10, 4))
     w = jax.random.normal(key, (3, 3, 4, 8))
     a = trim_conv2d(x, w)
-    b = trim_conv2d(x, w, force_pallas=True)
+    b = trim_conv2d(x, w, policy=PALLAS)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
                                atol=2e-5)
 
@@ -200,7 +207,7 @@ def test_conv2d_grouped():
     x = jax.random.normal(key, (1, 10, 10, 8))
     w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 4, 6))
     a = trim_conv2d(x, w, groups=2)
-    b = trim_conv2d(x, w, groups=2, force_pallas=True)
+    b = trim_conv2d(x, w, groups=2, policy=PALLAS)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
                                atol=2e-5)
 
@@ -288,9 +295,8 @@ def test_conv2d_emulate_hw_matches_fused():
     x = jax.random.normal(key, (1, 16, 16, 4))
     w = jax.random.normal(key, (3, 3, 4, 8))
     b = jax.random.normal(jax.random.fold_in(key, 1), (8,))
-    hw = trim_conv2d(x, w, b, stride=2, relu=True, force_pallas=True,
-                     emulate_hw=True)
-    fused = trim_conv2d(x, w, b, stride=2, relu=True, force_pallas=True)
+    hw = trim_conv2d(x, w, b, stride=2, relu=True, policy=PALLAS_HW)
+    fused = trim_conv2d(x, w, b, stride=2, relu=True, policy=PALLAS)
     want = jnp.maximum(ref.conv2d_ref(x, w, stride=2) + b, 0)
     np.testing.assert_allclose(np.asarray(hw), np.asarray(want), rtol=2e-5,
                                atol=2e-5)
@@ -322,7 +328,7 @@ def test_conv2d_grouped_fused_bias():
     w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 4, 6))
     b = jax.random.normal(jax.random.fold_in(key, 2), (6,))
     a = trim_conv2d(x, w, b, groups=2, relu=True)
-    p = trim_conv2d(x, w, b, groups=2, relu=True, force_pallas=True)
+    p = trim_conv2d(x, w, b, groups=2, relu=True, policy=PALLAS)
     np.testing.assert_allclose(np.asarray(a), np.asarray(p), rtol=2e-5,
                                atol=2e-5)
 
@@ -370,8 +376,7 @@ def test_conv2d_halo_taller_than_block():
     # stride-1 sweep with the default tile_h
     x3 = jax.random.normal(key, (1, 23, 23, 3))
     w3 = jax.random.normal(jax.random.fold_in(key, 3), (11, 11, 3, 4))
-    hw = trim_conv2d(x3, w3, stride=4, padding=0, force_pallas=True,
-                     emulate_hw=True)
+    hw = trim_conv2d(x3, w3, stride=4, padding=0, policy=PALLAS_HW)
     np.testing.assert_allclose(
         np.asarray(hw), np.asarray(ref.conv2d_ref(x3, w3, stride=4,
                                                   padding=0)),

@@ -112,6 +112,8 @@ def test_int8_cnn_path_matches_engine():
     eng_out, _ = TrimEngine().run_layer(x, w)
     x_nhwc = jnp.asarray(x.transpose(1, 2, 0))[None]
     w_hwio = jnp.asarray(w.transpose(2, 3, 1, 0))
-    kern_out = trim_conv2d(x_nhwc, w_hwio, force_pallas=True)
+    from repro.engine import ExecutionPolicy
+    kern_out = trim_conv2d(x_nhwc, w_hwio,
+                           policy=ExecutionPolicy(substrate="pallas"))
     np.testing.assert_array_equal(
         np.asarray(kern_out[0]).transpose(2, 0, 1), eng_out)

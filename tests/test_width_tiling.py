@@ -6,12 +6,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.engine import ExecutionPolicy
 from repro.kernels import ref
 from repro.kernels.ops import trim_conv2d
 from repro.kernels.requant import (requant_mult_shift, requant_ref_int64,
                                    scale_to_mult_shift)
 from repro.kernels.trim_conv2d import (VMEM_BUDGET_BYTES, pick_tile_w,
                                        trim_conv2d_pallas)
+
+#: Pallas everywhere (interpret mode on CPU) — the old force-pallas mode.
+PALLAS = ExecutionPolicy(substrate="pallas")
 
 
 # ---------------------------------------------------------------------------
@@ -118,12 +122,12 @@ def test_pick_tile_w_paper_shapes_single_block():
 
 def test_ops_tile_w_dispatch_parity():
     """tile_w threads through the public ops dispatcher (CPU oracle vs
-    force_pallas width-tiled kernel agree)."""
+    pallas-policy width-tiled kernel agree)."""
     key = jax.random.PRNGKey(4)
     x = jax.random.normal(key, (1, 8, 26, 4))
     w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 4, 8))
     a = trim_conv2d(x, w, tile_w=8)
-    b = trim_conv2d(x, w, tile_w=8, force_pallas=True)
+    b = trim_conv2d(x, w, tile_w=8, policy=PALLAS)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
                                atol=2e-5)
 
@@ -199,7 +203,7 @@ def test_ops_requant_cpu_pallas_bitwise():
                            -127, 127, jnp.int8)
     rq = (jnp.full((8,), 21000, jnp.int32), jnp.full((8,), 19, jnp.int32))
     a = trim_conv2d(x, w, None, rq, relu=True)
-    b = trim_conv2d(x, w, None, rq, relu=True, force_pallas=True)
+    b = trim_conv2d(x, w, None, rq, relu=True, policy=PALLAS)
     assert a.dtype == b.dtype == jnp.uint8
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
@@ -216,7 +220,7 @@ def test_ops_requant_grouped():
     s = jnp.asarray(rng.integers(14, 22, 6).astype(np.int32))
     a = trim_conv2d(x, w, None, (m, s), groups=2, relu=True)
     b = trim_conv2d(x, w, None, (m, s), groups=2, relu=True,
-                    force_pallas=True)
+                    policy=PALLAS)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
