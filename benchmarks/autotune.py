@@ -1,0 +1,324 @@
+"""Autotune driver: tune the VGG-16 / AlexNet / wide512 layer set, persist
+the winning plans, and report tuned-vs-default.
+
+  PYTHONPATH=src python -m benchmarks.autotune             # full layer set
+  PYTHONPATH=src python -m benchmarks.autotune --smoke --check   # CI lane
+
+Tunes, through ``repro.engine.autotune`` (DESIGN.md §7):
+
+- the ``kernels_fused`` float kernel shapes (``FUSED_SHAPES`` — the same
+  table ``benchmarks.run`` times, so the ``tuned`` bench variants run off
+  exactly the plans tuned here);
+- their int8 counterparts (``INT8_SHAPES`` — the integer inference lane,
+  where the exact chunked-f32 substrate routinely wins on CPU);
+- the full VGG-16 / AlexNet float model walks plus the smoke-config int8
+  walks (full-size int8 oracle measurements take minutes on CPU; pass
+  ``--full-int8`` to include them).
+
+Winners land in the JSON plan cache (``tuned_plans/`` or
+``$REPRO_TUNED_PLANS_DIR``), loaded transparently by ``plan_conv_layer``
+under ``--tuning cached/auto``.  A tuned-vs-default report is printed as
+CSV (``autotune,<name>,us_default,us_tuned,ratio,substrate``) and written
+to ``experiments/autotune/report.json``.
+
+``--check`` re-reads the cache as a fresh process would (caches reset) and
+verifies the round-trip: every tuned layer's ``tuning="cached"`` plan must
+carry the persisted winner without re-measurement, and its output must be
+bit-identical to the default plan's.  Exits non-zero on any violation —
+this is CI's ``autotune-smoke`` gate.
+
+This driver supersedes ``benchmarks.hillclimb`` for the TrIM conv cells:
+hillclimb's conv variants call back into :func:`tune_cell` here.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+#: (name, x NHWC, w KKCF, stride, pad) — the kernels_fused float shapes.
+#: ``benchmarks.run`` imports this table so bench records and tuned plans
+#: stay keyed to the same geometry.
+FUSED_SHAPES: Tuple = (
+    ("alexnet_cl1", (1, 227, 227, 3), (11, 11, 3, 96), 4, 0),
+    ("alexnet_cl2", (1, 27, 27, 48), (5, 5, 48, 256), 1, 2),
+    ("vgg16_cl8", (1, 28, 28, 256), (3, 3, 256, 512), 1, 1),
+    ("wide512_s1", (1, 96, 512, 64), (3, 3, 64, 64), 1, 1),
+    ("wide512_s2", (1, 96, 1024, 64), (3, 3, 64, 64), 2, 1),
+)
+
+#: Integer-lane kernel shapes (uint8 x int8 -> int32, fused requant): the
+#: wide512 int8 record is the headline — XLA's CPU integer conv lowers to
+#: a scalar loop, and the tuner promotes these layers onto the exact
+#: chunked-f32 substrate for an order-of-magnitude win.
+INT8_SHAPES: Tuple = (
+    ("alexnet_cl2_int8", (1, 27, 27, 48), (5, 5, 48, 256), 1, 2),
+    ("vgg16_cl8_int8", (1, 28, 28, 256), (3, 3, 256, 512), 1, 1),
+    ("wide512_int8", (1, 32, 512, 64), (3, 3, 64, 64), 1, 1),
+)
+
+#: The --smoke search: one small int8 layer, two candidates (oracle vs
+#: f32exact) — a complete tune->persist->reload round-trip in seconds.
+SMOKE_SHAPES: Tuple = (
+    ("smoke_int8", (1, 16, 128, 32), (3, 3, 32, 32), 1, 1),
+)
+
+
+def _spec_kw(xs, ws, stride, pad, int8: bool) -> Dict:
+    """tune_conv_layer kwargs for one shape-table row."""
+    return dict(
+        stride=stride,
+        padding=pad,
+        relu=True,
+        has_bias=not int8,
+        requant_kind="mult_shift" if int8 else None,
+        in_sz=1 if int8 else 4,
+        w_sz=1 if int8 else 4,
+        out_sz=1 if int8 else 4,
+    )
+
+
+def _tune_shape(name, xs, ws, stride, pad, *, int8, reps, force):
+    from repro.engine import tune_conv_layer
+
+    res = tune_conv_layer(
+        (xs[1], xs[2]),
+        xs[3],
+        ws[0],
+        ws[3],
+        policy=_policy(),
+        reps=reps,
+        force=force,
+        **_spec_kw(xs, ws, stride, pad, int8),
+    )
+    return name, res
+
+
+def _policy():
+    from repro.engine import ExecutionPolicy
+
+    return ExecutionPolicy()
+
+
+def tune_cell(
+    cell: str, *, reps: int = 3, force: bool = False
+) -> List[Tuple[str, object]]:
+    """Tune one named cell; returns [(name, TuneResult), ...].
+
+    Cells: "vgg16" / "alexnet" (full-size float model walk + the smoke
+    int8 walk + the cell's kernel-table shapes; alexnet — the paper's
+    Table II integer workload — additionally tunes its full-size int8
+    walk, cheap enough on CPU; vgg16's needs --full-int8), "wide512" (the
+    wide-feature-map kernel shapes, float + int8), "smoke" (the tiny CI
+    search).  ``benchmarks.hillclimb`` drives its TrIM conv variants
+    through this entry point.
+    """
+    from repro.configs import CNN_REGISTRY, CNN_SMOKES
+    from repro.engine import tune_model
+
+    results: List[Tuple[str, object]] = []
+    if cell in ("vgg16", "alexnet"):
+        results += tune_model(
+            CNN_REGISTRY[cell], _policy(), datapath="float", reps=reps,
+            force=force,
+        )
+        results += tune_model(
+            CNN_SMOKES[cell], _policy(), datapath="int8", reps=reps,
+            force=force,
+        )
+        if cell == "alexnet":
+            results += tune_model(
+                CNN_REGISTRY[cell], _policy(), datapath="int8", reps=reps,
+                force=force,
+            )
+        rows = [r for r in FUSED_SHAPES + INT8_SHAPES if r[0].startswith(cell)]
+    elif cell == "wide512":
+        rows = [r for r in FUSED_SHAPES + INT8_SHAPES
+                if r[0].startswith("wide512")]
+    elif cell == "smoke":
+        rows = list(SMOKE_SHAPES)
+    else:
+        raise ValueError(f"unknown cell {cell!r}")
+    for name, xs, ws, stride, pad in rows:
+        results.append(
+            _tune_shape(name, xs, ws, stride, pad, int8=name.endswith("int8"),
+                        reps=reps, force=force)
+        )
+    return results
+
+
+def report_row(name: str, res) -> Dict:
+    return {
+        "name": name,
+        "key": res.key,
+        "us_default": round(res.us_default, 1),
+        "us_tuned": round(res.us, 1),
+        "ratio": round(res.speedup, 3),
+        "schedule": dict(res.schedule),
+        "cached": res.cached,
+        "candidates": len(res.candidates),
+    }
+
+
+def check_roundtrip(rows: List[Dict]) -> List[str]:
+    """Verify the persisted cache round-trips as a fresh process sees it.
+
+    For every tuned row: reset the in-process caches, re-plan under
+    ``tuning="cached"`` with measurement disabled (a pure cache hit must
+    not re-measure), check the plan carries the persisted schedule, and
+    check its output is bit-identical to the default plan's.
+    """
+    import numpy as np
+
+    from repro.engine import ExecutionPolicy, plan_conv_layer
+    from repro.engine import autotune
+
+    failures = []
+    autotune.reset_cache()
+    measured = []
+    real_measure = autotune._measure_plan
+
+    def counting_measure(*a, **kw):
+        measured.append(a)
+        return real_measure(*a, **kw)
+
+    autotune._measure_plan = counting_measure
+    try:
+        for row in rows:
+            kw = row["_kw"]
+            args = row["_args"]
+            cached_plan = plan_conv_layer(
+                *args, policy=ExecutionPolicy(tuning="cached"), **kw
+            )
+            default_plan = plan_conv_layer(
+                *args, policy=ExecutionPolicy(), **kw
+            )
+            if not cached_plan.tuned:
+                failures.append(f"{row['name']}: cached plan not tuned")
+                continue
+            sched = row["schedule"]
+            got = {
+                "substrate": cached_plan.substrate,
+                "tile_h": cached_plan.tile_h,
+                "tile_w": cached_plan.tile_w_arg,
+                "block_c": cached_plan.block_c,
+                "block_f": cached_plan.block_f,
+            }
+            if got != sched:
+                failures.append(
+                    f"{row['name']}: schedule mismatch {got} != {sched}"
+                )
+            in_sz = kw["in_sz"]
+            _, out_tuned = real_measure(cached_plan, in_sz=in_sz, warmup=0,
+                                        reps=1)
+            _, out_default = real_measure(default_plan, in_sz=in_sz,
+                                          warmup=0, reps=1)
+            if out_tuned.dtype != out_default.dtype or not np.array_equal(
+                out_tuned, out_default
+            ):
+                failures.append(f"{row['name']}: tuned output not "
+                                "bit-identical to default")
+        if measured:
+            failures.append(
+                f"cache hit re-measured {len(measured)} plan(s) — lookups "
+                "must be pure"
+            )
+    finally:
+        autotune._measure_plan = real_measure
+    return failures
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "cells",
+        nargs="*",
+        default=[],
+        help="cells to tune (vgg16 alexnet wide512); default: all",
+    )
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI search: one small int8 layer")
+    ap.add_argument("--full-int8", action="store_true",
+                    help="also tune the full-size int8 model walks (slow "
+                    "on CPU: the default integer oracle takes minutes)")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timed reps per candidate (median)")
+    ap.add_argument("--force", action="store_true",
+                    help="re-measure layers already in the cache")
+    ap.add_argument("--check", action="store_true",
+                    help="verify the cache round-trip (CI gate); exits "
+                    "non-zero on failure")
+    ap.add_argument("--report", default="experiments/autotune/report.json")
+    args = ap.parse_args(argv)
+
+    from repro.engine import autotune
+
+    cells = ["smoke"] if args.smoke else (
+        list(args.cells) or ["vgg16", "alexnet", "wide512"]
+    )
+    results: List[Tuple[str, object]] = []
+    for cell in cells:
+        print(f"[autotune] tuning cell {cell} ...", flush=True)
+        results += tune_cell(cell, reps=args.reps, force=args.force)
+    if args.full_int8:
+        from repro.configs import CNN_REGISTRY
+        from repro.engine import tune_model
+
+        for arch in ("vgg16", "alexnet"):
+            results += tune_model(
+                CNN_REGISTRY[arch], _policy(), datapath="int8",
+                reps=args.reps, force=args.force,
+            )
+
+    rows = []
+    print("section,name,us_default,us_tuned,ratio,substrate,cached")
+    for name, res in results:
+        row = report_row(name, res)
+        # stash the re-plan arguments for --check (not serialized)
+        if name in {r[0] for r in
+                    FUSED_SHAPES + INT8_SHAPES + SMOKE_SHAPES}:
+            shape = next(r for r in FUSED_SHAPES + INT8_SHAPES + SMOKE_SHAPES
+                         if r[0] == name)
+            _, xs, ws, stride, pad = shape
+            row["_args"] = ((xs[1], xs[2]), xs[3], ws[0], ws[3])
+            row["_kw"] = _spec_kw(xs, ws, stride, pad,
+                                  name.endswith("int8"))
+        rows.append(row)
+        print(
+            f"autotune,{name},{row['us_default']:.0f},{row['us_tuned']:.0f},"
+            f"{row['ratio']:.2f},{row['schedule']['substrate']},"
+            f"{row['cached']}"
+        )
+
+    failures = []
+    if args.check:
+        failures = check_roundtrip([r for r in rows if "_args" in r])
+        for f in failures:
+            print(f"[autotune] CHECK FAIL: {f}", file=sys.stderr)
+        if not failures:
+            print("[autotune] cache round-trip check: PASS")
+
+    import jax
+
+    report = {
+        "cache": autotune.cache_path(),
+        "backend": jax.default_backend(),
+        "device_kind": autotune.device_kind(),
+        "records": [
+            {k: v for k, v in r.items() if not k.startswith("_")}
+            for r in rows
+        ],
+    }
+    os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
+    with open(args.report, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"[autotune] wrote {args.report}; plan cache at "
+          f"{autotune.cache_path()}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,11 +20,16 @@ schedule changes (a different tile pick, a substrate switch) are
 attributable at the gate.
 
 Metric direction is automatic: ``us_*`` metrics are lower-is-better
-wall-clock timings, ``speedup`` is higher-is-better.  Absolute ``us_*``
-comparisons are only meaningful against a baseline from the same runner
-class — refresh BENCH_baseline.json when the fleet (or a TPU runner)
-changes; ``--metric speedup`` compares the fused arm against the
-decimate arm measured in the *same* run, so it is machine-neutral.
+wall-clock timings, ``speedup`` / ``tuned_speedup`` are higher-is-better.
+Absolute ``us_*`` comparisons are only meaningful against a baseline from
+the same runner class — every record (and the artifact header) carries a
+``backend`` + ``device_kind`` stamp, and when baseline and candidate
+device kinds differ the absolute ``us_*`` gates are SKIPPED with a
+visible warning (a dev-machine or TPU baseline must not fail a CPU CI
+runner on wall-clock alone).  The machine-neutral ratio gates
+(``--metric speedup`` — fused vs decimate arm measured in the *same* run
+— and ``tuned_speedup``) always apply.  Refresh BENCH_baseline.json when
+the fleet (or a TPU runner) changes.
 
 Exit codes: 0 ok, 1 regression, 2 usage/input error.
 """
@@ -43,9 +48,51 @@ def load_records(path):
     return {r["name"]: r for r in data.get("records", [])}
 
 
+def device_kind_of(path):
+    """The artifact's device kind: the header stamp, else the first
+    stamped record, else None (pre-stamp artifacts)."""
+    with open(path) as f:
+        data = json.load(f)
+    kind = (data.get("device") or {}).get("device_kind")
+    if kind:
+        return kind
+    for r in data.get("records", []):
+        if r.get("device_kind"):
+            return r["device_kind"]
+    return None
+
+
+def check_floor(current, metric, floor):
+    """Absolute-floor gate: fail any record whose ``metric`` value sits
+    below ``floor``.  Used for ratios that are >= 1 by construction (the
+    tuned-vs-default ratio — DESIGN.md §7): a relative-to-baseline check
+    would red-flag machine-dependent swings of a 50x win, while the floor
+    only fires when the lane actually collapses (tuned slower than the
+    default it replaced).  Records without the metric are skipped with a
+    warning, like compare()."""
+    failures = []
+    lines = []
+    for name in sorted(current):
+        if metric not in current[name]:
+            lines.append(
+                f"SKIPPED   {name}: record has no metric '{metric}' "
+                "(warning)"
+            )
+            continue
+        val = float(current[name][metric])
+        status = "OK"
+        if val < floor:
+            status = "REGRESSED"
+            failures.append(name)
+        lines.append(
+            f"{status:<10}{name}: {metric} {val:.2f} (floor {floor:.2f})"
+        )
+    return failures, lines
+
+
 def compare(baseline, current, metric, threshold):
     """Return (failures, lines) comparing current vs baseline records."""
-    lower_is_better = metric != "speedup"
+    lower_is_better = not metric.endswith("speedup")
     failures = []
     lines = []
     for name in sorted(set(baseline) | set(current)):
@@ -97,7 +144,31 @@ def main(argv=None):
     ap.add_argument("--metric", default="us_fused")
     default_thresh = float(os.environ.get("BENCH_GATE_THRESHOLD", "1.3"))
     ap.add_argument("--threshold", type=float, default=default_thresh)
+    ap.add_argument(
+        "--floor",
+        type=float,
+        default=None,
+        help="absolute gate instead of baseline-relative: fail records "
+        "whose metric value is below this floor (for by-construction "
+        ">= 1 ratios like tuned_speedup)",
+    )
     args = ap.parse_args(argv)
+    if args.floor is not None:
+        if not os.path.exists(args.current):
+            print(f"bench-gate: missing {args.current}", file=sys.stderr)
+            return 2
+        current = load_records(args.current)
+        if not current:
+            print("bench-gate: empty record set", file=sys.stderr)
+            return 2
+        failures, lines = check_floor(current, args.metric, args.floor)
+        for line in lines:
+            print(f"bench-gate: {line}")
+        if failures:
+            print(f"bench-gate: FAIL — below floor: {', '.join(failures)}")
+            return 1
+        print("bench-gate: PASS")
+        return 0
     for path in (args.baseline, args.current):
         if not os.path.exists(path):
             print(f"bench-gate: missing {path}", file=sys.stderr)
@@ -107,6 +178,18 @@ def main(argv=None):
     if not baseline or not current:
         print("bench-gate: empty record set", file=sys.stderr)
         return 2
+    if args.metric.startswith("us_"):
+        bk = device_kind_of(args.baseline)
+        ck = device_kind_of(args.current)
+        if bk and ck and bk != ck:
+            print(
+                "bench-gate: WARNING — baseline device kind "
+                f"{bk!r} != current {ck!r}; absolute {args.metric!r} "
+                "timings do not compare across device kinds, SKIPPING "
+                "this gate (the machine-neutral ratio gates still apply)"
+            )
+            print("bench-gate: PASS (skipped: device-kind mismatch)")
+            return 0
     failures, lines = compare(baseline, current, args.metric, args.threshold)
     for line in lines:
         print(f"bench-gate: {line}")

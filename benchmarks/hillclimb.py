@@ -4,11 +4,24 @@ if os.environ.get("REPRO_DRYRUN_DEVICES"):
     os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
                                + os.environ["REPRO_DRYRUN_DEVICES"])
 
-"""§Perf hillclimb driver: runs named optimization variants of the three
-chosen cells through the dry-run pipeline and records the roofline deltas.
+"""§Perf hillclimb driver: runs named optimization variants of the chosen
+cells and records the deltas.
 
   PYTHONPATH=src python -m benchmarks.hillclimb            # all variants
-  PYTHONPATH=src python -m benchmarks.hillclimb mamba2     # one cell
+  PYTHONPATH=src python -m benchmarks.hillclimb mamba2     # one LM cell
+  PYTHONPATH=src python -m benchmarks.hillclimb vgg16_conv # one conv cell
+
+Two variant families:
+
+- LM cells (the transformer/Mamba dry-run variants below) go through the
+  dry-run pipeline and record roofline deltas.
+- TrIM conv cells (``vgg16_conv`` / ``alexnet_conv`` / ``wide512_conv``)
+  are driven through the per-layer plan autotuner
+  (``benchmarks.autotune.tune_cell`` — the search/measure/persist engine
+  lives there, DESIGN.md §7): each cell tunes its layer set and records
+  the measured default-vs-tuned schedule deltas per layer.  Hillclimbing
+  conv schedules by hand predates the autotuner; these variants now
+  report what the tuner found instead.
 
 The iteration log (hypothesis / napkin math / result) lives in
 EXPERIMENTS.md §Perf; this script produces the measured numbers it cites.
@@ -66,9 +79,47 @@ VARIANTS = [
 ]
 
 
+#: TrIM conv cells: tuned through benchmarks.autotune (vgg16/alexnet =
+#: full float model walk + smoke int8 walk + the cell's kernel-table
+#: shapes; wide512 = the wide-feature-map kernel shapes, float + int8).
+CNN_CELLS = {
+    "vgg16_conv": "vgg16",
+    "alexnet_conv": "alexnet",
+    "wide512_conv": "wide512",
+}
+
+
+def run_cnn_cell(key: str) -> None:
+    """One conv cell through the autotuner; record per-layer deltas
+    (rows share `benchmarks.autotune.report_row`'s schema, so these
+    artifacts stay consistent with autotune's report.json)."""
+    from benchmarks.autotune import report_row, tune_cell
+    tag = f"trim__{key}__autotune"
+    print(f"[perf] {tag} ...", flush=True)
+    try:
+        results = tune_cell(CNN_CELLS[key], reps=3)
+    except Exception as e:
+        print(f"[perf] FAIL {tag}: {e}")
+        import traceback
+        traceback.print_exc()
+        return
+    finally:
+        jax.clear_caches()
+    rows = [report_row(n, r) for n, r in results]
+    with open(os.path.join(OUT, tag + ".json"), "w") as f:
+        json.dump({"variant": key, "records": rows}, f, indent=1)
+    for row in rows:
+        print(f"[perf]   {row['name']}: default {row['us_default']:.0f}us"
+              f" -> tuned {row['us_tuned']:.0f}us"
+              f" ({row['ratio']:.2f}x, {row['schedule']['substrate']})",
+              flush=True)
+
+
 def main() -> None:
     os.makedirs(OUT, exist_ok=True)
     only = set(sys.argv[1:])
+    for key in sorted(only & set(CNN_CELLS) if only else set(CNN_CELLS)):
+        run_cnn_cell(key)
     for key, arch, cell, name, overrides, fsdp, *rest in VARIANTS:
         accum = rest[0] if rest else 1
         if only and key not in only:

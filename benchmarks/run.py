@@ -52,6 +52,27 @@ def _timeit(fn, n=3) -> float:
     return (time.perf_counter() - t0) / n * 1e6  # us
 
 
+def _timeit_pair(fa, fb, n=3):
+    """Drift-robust A/B timing over two thunks: alternate the arms and
+    aggregate with THE shared pair statistic
+    (``repro.engine.autotune.aggregate_pair`` — median of per-round
+    ratios + per-arm mins; see its docstring for the rationale).
+    Returns (us_a, us_b, ratio_a_over_b)."""
+    from repro.engine.autotune import aggregate_pair
+    fa()  # warmup / compile
+    fb()
+    ta, tb = [], []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fa()
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fb()
+        tb.append(time.perf_counter() - t0)
+    us_b, us_a, ratio = aggregate_pair(tb, ta)  # ratio = a over b
+    return us_a * 1e6, us_b * 1e6, ratio
+
+
 def bench_table1() -> None:
     print("section,name,gops_model,gops_paper,pe_util_model,pe_util_paper,"
           "offchip_M_model,offchip_M_paper,onchip_M_model,onchip_M_paper")
@@ -169,7 +190,8 @@ def bench_kernels() -> None:
 
 def bench_kernels_fused() -> None:
     """Fused-strided TrIM conv vs decimate-then-activate (§V schedule),
-    plus the training direction (``conv2d_grads``).
+    plus the training direction (``conv2d_grads``) and the autotuned
+    plans (``tuned`` variants).
 
     Both arms run through the public ``ops.trim_conv2d`` dispatcher, so on
     TPU this times the Pallas kernels and on CPU the jnp oracle with
@@ -181,38 +203,55 @@ def bench_kernels_fused() -> None:
     — on TPU that is the custom-VJP input-grad/weight-grad Pallas pair
     (DESIGN.md §6), on CPU the oracle's autodiff; they carry a ``us_grads``
     metric (gated separately by ``benchmarks.compare --metric us_grads``).
+
+    Every float shape also runs under ``tuning="cached"`` (the persisted
+    autotuner winners — ``benchmarks.autotune``, DESIGN.md §7) and records
+    ``us_tuned`` + ``tuned_speedup`` (= us_fused / us_tuned, the
+    tuned-vs-default ratio: >= 1.0, the tuner never ships a slower plan).
+    When the tuned plan *equals* the default plan (the winner was the
+    default — ``ConvLayerPlan.tuned`` is metadata, so equal schedules are
+    value-equal and share one jit executable) the ratio is recorded as
+    exactly 1.0 without a second timing: sampling the same executable
+    twice measures machine noise, not the schedule.  Plans that actually
+    differ are measured with drift-robust interleaved timing
+    (``_timeit_pair``).
+    The ``*_int8`` records track the integer inference lane the same way
+    (metrics ``us_default``/``us_tuned``/``tuned_speedup`` only, so the
+    slow integer-oracle default never enters the absolute ``us_fused``
+    gate).  All records carry ``backend`` + ``device_kind`` stamps —
+    ``benchmarks.compare`` skips absolute us gates across device kinds.
     Writes BENCH_kernels.json for the perf trajectory.
     """
     import jax
     import jax.numpy as jnp
+    from benchmarks.autotune import FUSED_SHAPES, INT8_SHAPES
     from repro.engine import ExecutionPolicy, plan_conv_layer
     from repro.kernels.ops import trim_conv2d
 
     emu_policy = ExecutionPolicy(emulate_hw=True)
+    tuned_policy = ExecutionPolicy(tuning="cached")
 
-    def plan_record(xs, ws, stride, pad):
-        """The resolved schedule for the fused arm (auto policy) — recorded
-        so bench-gate regressions are attributable to schedule changes."""
-        plan = plan_conv_layer(
+    def resolve_plan(xs, ws, stride, pad, policy=None, int8=False):
+        """The resolved plan for one arm — its describe() is recorded so
+        bench-gate regressions are attributable to schedule changes."""
+        return plan_conv_layer(
             (xs[1], xs[2]), xs[3], ws[0], ws[3], stride=stride, padding=pad,
-            relu=True, has_bias=True, policy=ExecutionPolicy())
-        return plan.describe()
+            relu=True, has_bias=not int8,
+            requant_kind="mult_shift" if int8 else None,
+            in_sz=1 if int8 else 4, w_sz=1 if int8 else 4,
+            out_sz=1 if int8 else 4,
+            policy=policy or ExecutionPolicy())
 
-    shapes = [
-        # name, x shape (NHWC), w shape (KKCF), stride, pad
-        ("alexnet_cl1", (1, 227, 227, 3), (11, 11, 3, 96), 4, 0),
-        ("alexnet_cl2", (1, 27, 27, 48), (5, 5, 48, 256), 1, 2),
-        ("vgg16_cl8", (1, 28, 28, 256), (3, 3, 256, 512), 1, 1),
-        # wide feature maps (detection/segmentation-style backbones):
-        # W_O > the VGG/AlexNet range, exercising the width-tiled kernel
-        # on TPU (DESIGN.md §4); the CPU arm times the oracle as usual.
-        ("wide512_s1", (1, 96, 512, 64), (3, 3, 64, 64), 1, 1),
-        ("wide512_s2", (1, 96, 1024, 64), (3, 3, 64, 64), 2, 1),
-    ]
+    def plan_record(xs, ws, stride, pad, policy=None, int8=False):
+        return resolve_plan(xs, ws, stride, pad, policy, int8).describe()
+
     backend = jax.default_backend()
+    device_kind = jax.devices()[0].device_kind
+    stamp = {"backend": backend, "device_kind": device_kind}
     records: List[Dict] = []
-    print("section,name,us_fused,us_decimate,speedup,substrate")
-    for name, xs, ws, stride, pad in shapes:
+    print("section,name,us_fused,us_decimate,speedup,us_tuned,"
+          "tuned_speedup,backend")
+    for name, xs, ws, stride, pad in FUSED_SHAPES:
         key = jax.random.PRNGKey(0)
         x = jax.random.normal(key, xs, jnp.float32)
         w = jax.random.normal(jax.random.fold_in(key, 1), ws, jnp.float32)
@@ -223,6 +262,11 @@ def bench_kernels_fused() -> None:
             return jax.block_until_ready(trim_conv2d(
                 x, w, b, stride=stride, padding=pad, relu=True))
 
+        def tuned():
+            return jax.block_until_ready(trim_conv2d(
+                x, w, b, stride=stride, padding=pad, relu=True,
+                policy=tuned_policy))
+
         epilogue = jax.jit(lambda o: jnp.maximum(o + b, 0))
 
         def decimate():
@@ -232,16 +276,68 @@ def bench_kernels_fused() -> None:
 
         us_f = _timeit(fused, n=3)
         us_d = _timeit(decimate, n=3)
+        if resolve_plan(xs, ws, stride, pad) == \
+                resolve_plan(xs, ws, stride, pad, tuned_policy):
+            # winner == default: same plan, same jit executable — the
+            # ratio is 1.0 by construction, not worth a noisy re-timing
+            us_t, tuned_speedup = us_f, 1.0
+        else:
+            # a real schedule change: measure the arms interleaved
+            _, us_t, tuned_speedup = _timeit_pair(fused, tuned, n=5)
         speedup = us_d / us_f if us_f else float("inf")
         print(f"kernels_fused,{name},{us_f:.0f},{us_d:.0f},"
-              f"{speedup:.2f},{backend}")
+              f"{speedup:.2f},{us_t:.0f},{tuned_speedup:.2f},{backend}")
         records.append({"name": name, "x": list(xs), "w": list(ws),
                         "stride": stride, "padding": pad,
                         "us_fused": round(us_f, 1),
                         "us_decimate": round(us_d, 1),
                         "speedup": round(speedup, 2),
-                        "substrate": backend,
-                        "plan": plan_record(xs, ws, stride, pad)})
+                        "us_tuned": round(us_t, 1),
+                        "tuned_speedup": round(tuned_speedup, 2),
+                        **stamp,
+                        "plan": plan_record(xs, ws, stride, pad),
+                        "plan_tuned": plan_record(xs, ws, stride, pad,
+                                                  tuned_policy)})
+
+    # Integer inference lane: default plan vs the autotuned one (on CPU
+    # the tuner promotes these onto the exact chunked-f32 substrate —
+    # DESIGN.md §7; the default integer oracle is a scalar loop).
+    print("section,name,us_default,us_tuned,tuned_speedup,backend")
+    for name, xs, ws, stride, pad in INT8_SHAPES:
+        key = jax.random.PRNGKey(0)
+        x = jax.random.randint(key, xs, 0, 255, jnp.uint8)
+        w = jax.random.randint(jax.random.fold_in(key, 1), ws, -127, 127,
+                               jnp.int8)
+        rq = (jnp.full((ws[-1],), 16384, jnp.int32),
+              jnp.full((ws[-1],), 20, jnp.int32))
+
+        def int8_default():
+            return jax.block_until_ready(trim_conv2d(
+                x, w, None, rq, stride=stride, padding=pad, relu=True))
+
+        def int8_tuned():
+            return jax.block_until_ready(trim_conv2d(
+                x, w, None, rq, stride=stride, padding=pad, relu=True,
+                policy=tuned_policy))
+
+        if resolve_plan(xs, ws, stride, pad, int8=True) == \
+                resolve_plan(xs, ws, stride, pad, tuned_policy, int8=True):
+            us_def = _timeit(int8_default, n=2)
+            us_t, tuned_speedup = us_def, 1.0
+        else:
+            us_def, us_t, tuned_speedup = _timeit_pair(
+                int8_default, int8_tuned, n=2)
+        print(f"kernels_fused,{name},{us_def:.0f},{us_t:.0f},"
+              f"{tuned_speedup:.2f},{backend}")
+        records.append({"name": name, "x": list(xs), "w": list(ws),
+                        "stride": stride, "padding": pad,
+                        "us_default": round(us_def, 1),
+                        "us_tuned": round(us_t, 1),
+                        "tuned_speedup": round(tuned_speedup, 2),
+                        **stamp,
+                        "plan": plan_record(xs, ws, stride, pad, int8=True),
+                        "plan_tuned": plan_record(xs, ws, stride, pad,
+                                                  tuned_policy, int8=True)})
 
     # Training direction: value+grad through the same dispatcher.
     grad_shapes = [
@@ -270,14 +366,14 @@ def bench_kernels_fused() -> None:
         records.append({"name": name, "x": list(xs), "w": list(ws),
                         "stride": stride, "padding": pad,
                         "us_grads": round(us_g, 1),
-                        "substrate": backend,
+                        **stamp,
                         "plan": plan_record(xs, ws, stride, pad)})
     out_dir = os.environ.get("REPRO_BENCH_DIR", ".")
     os.makedirs(out_dir, exist_ok=True)
     out_path = os.path.join(out_dir, "BENCH_kernels.json")
     with open(out_path, "w") as f:
-        json.dump({"section": "kernels_fused", "records": records}, f,
-                  indent=1)
+        json.dump({"section": "kernels_fused", "device": stamp,
+                   "records": records}, f, indent=1)
     print(f"kernels_fused,WROTE,{out_path},,,")
 
 

@@ -7,6 +7,7 @@
 from repro.engine.policy import (
     RESOLVED_SUBSTRATES,
     SUBSTRATES,
+    TUNING_MODES,
     ExecutionPolicy,
     policy_from_legacy,
 )
@@ -17,16 +18,25 @@ from repro.engine.plan import (
     plan_model,
 )
 from repro.engine.execute import run_conv2d, run_conv_layer
+from repro.engine.autotune import (
+    TuneResult,
+    tune_conv_layer,
+    tune_model,
+)
 
 __all__ = [
     "RESOLVED_SUBSTRATES",
     "SUBSTRATES",
+    "TUNING_MODES",
     "ConvLayerPlan",
     "ExecutionPolicy",
     "ModelPlan",
+    "TuneResult",
     "plan_conv_layer",
     "plan_model",
     "policy_from_legacy",
     "run_conv2d",
     "run_conv_layer",
+    "tune_conv_layer",
+    "tune_model",
 ]

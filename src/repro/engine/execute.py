@@ -116,17 +116,18 @@ def run_conv2d(
     / ``requant_shift`` / ``requant`` are the runtime epilogue inputs —
     per-channel requant calibrations are traced (F,) int32 array pairs.
     """
-    if plan.substrate == "oracle":
+    if plan.substrate in ("oracle", "f32exact"):
+        # f32exact: integer convs run exactly on the fast f32 conv path
+        # (channel-chunked, bit-identical — ref.conv2d_exact_f32); float
+        # inputs degrade to the plain oracle inside the helper.
+        oracle = plan.substrate == "oracle"
+        conv = ref.conv2d_ref if oracle else ref.conv2d_exact_f32
         s = plan.stride
         if plan.decimate:
-            full = ref.conv2d_ref(
-                x, w, stride=1, padding=plan.padding, groups=plan.groups
-            )
+            full = conv(x, w, stride=1, padding=plan.padding, groups=plan.groups)
             out = full[:, ::s, ::s, :]
         else:
-            out = ref.conv2d_ref(
-                x, w, stride=s, padding=plan.padding, groups=plan.groups
-            )
+            out = conv(x, w, stride=s, padding=plan.padding, groups=plan.groups)
         return apply_epilogue(out, bias, plan.relu, requant_shift, requant)
 
     if plan.groups == 1:

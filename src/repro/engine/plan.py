@@ -24,7 +24,7 @@ trace cache.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
 from repro.engine.policy import ExecutionPolicy
@@ -69,6 +69,12 @@ class ConvLayerPlan:
     vmem_budget: int
     epilogue: str
     geom: Conv2DGeom
+    #: True when this schedule came from the autotuner's plan cache
+    #: (``repro.engine.autotune``, DESIGN.md §7) rather than the policy
+    #: defaults.  Metadata, not schedule: ``compare=False`` keeps a tuned
+    #: plan whose winning schedule IS the default equal (and hash-equal)
+    #: to the default plan, so ``jax.jit`` reuses one executable for both.
+    tuned: bool = field(default=False, compare=False)
 
     @property
     def decimate(self) -> bool:
@@ -99,12 +105,15 @@ class ConvLayerPlan:
 
     def describe(self) -> Dict[str, object]:
         """Compact schedule record (benchmark artifacts, dry-run JSON)."""
-        return {
+        d = {
             "substrate": self.substrate,
             "tile_w": self.tile_w,
             "n_wt": self.geom.n_wt,
             "epilogue": self.epilogue,
         }
+        if self.tuned:
+            d["tuned"] = True
+        return d
 
 
 @functools.lru_cache(maxsize=None)
@@ -135,8 +144,44 @@ def plan_conv_layer(
     runtime arguments (per-channel calibrations are traced arrays).
     ``in_sz``/``w_sz``/``out_sz`` are element byte sizes for the VMEM
     width-tile auto-pick (pass the real itemsizes for non-f32 datapaths).
+
+    When ``policy.tuning`` is "cached" or "auto" the persisted autotuner
+    winner for this layer's cache key is applied transparently on top of
+    the policy (substrate + tile/block schedule — DESIGN.md §7); a cache
+    miss under "cached" falls back to the default plan, under "auto" it
+    tunes once (measures the candidate schedules) and persists the winner.
+    Tuning composes with ``substrate="auto"`` only: an explicitly pinned
+    substrate (``--substrate oracle/interpret/...``) is a stronger request
+    than the cache — the persisted winner was measured against the auto
+    default, so it is NOT applied over a pin (the plan resolves as if
+    tuning were off).  Tuning happens here, at plan time — plan eagerly
+    (outside ``jit``) when tuning is on.
     """
     pol = policy.resolve()
+    tuned = False
+    if pol.tuning != "off" and policy.substrate == "auto":
+        from repro.engine import autotune  # deferred: autotune imports us
+
+        schedule = autotune.tuned_schedule(
+            x_hw,
+            c_in,
+            k,
+            c_out,
+            stride=stride,
+            padding=padding,
+            groups=groups,
+            relu=relu,
+            has_bias=has_bias,
+            requant_kind=requant_kind,
+            in_sz=in_sz,
+            w_sz=w_sz,
+            out_sz=out_sz,
+            policy=pol,
+        )
+        pol = pol.with_overrides(tuning="off")
+        if schedule is not None:
+            pol = pol.with_overrides(**schedule)
+            tuned = True
     cg = c_in // groups
     fg = c_out // groups
     block_c = min(pol.block_c, cg)
@@ -190,6 +235,7 @@ def plan_conv_layer(
         vmem_budget=pol.vmem_budget,
         epilogue=epilogue,
         geom=geom,
+        tuned=tuned,
     )
 
 
@@ -265,26 +311,46 @@ def plan_model(
     policy: ExecutionPolicy = ExecutionPolicy(),
     c_in: Optional[int] = None,
     datapath: str = "float",
+    layer_substrates: Optional[Tuple[Optional[str], ...]] = None,
 ) -> ModelPlan:
     """Compile a ``CNNConfig`` into a :class:`ModelPlan` (cached).
 
     Walks ``cfg.layers`` tracking the running channel count ``c`` (grouped
     AlexNet two-tower layers have ``groups = c // layer.M``), resolving one
-    :class:`ConvLayerPlan` per layer under the resolved policy.  ``c_in``
+    :class:`ConvLayerPlan` per layer under the policy.  ``c_in``
     overrides the first layer's input channel count (defaults to
     ``cfg.layers[0].M``).  ``datapath`` is "float" (biased conv + fused
     bias/ReLU, f32 byte sizes) or "int8" (the paper's integer inference
     lane: bias-free, fused mult+shift requant on every non-last layer,
     uint8/int8 byte sizes — the last layer emits raw int32 psums).
+
+    ``layer_substrates`` pins per-layer substrates (a tuple with one entry
+    per conv layer; ``None`` entries keep the policy's choice), so a
+    ModelPlan can be heterogeneous — small layers on the XLA oracle, wide
+    layers on Pallas, integer layers on f32exact.  Plans resolved under
+    ``policy.tuning != "off"`` become heterogeneous the same way, from the
+    autotuner's per-layer cache instead of an explicit tuple (a pinned
+    layer beats the cache, like a pinned ``--substrate`` does).
+
+    The policy is passed to the per-layer planner *unresolved*: each
+    ``plan_conv_layer`` call resolves it, and tuning only composes with
+    ``substrate="auto"`` — resolving here would erase that marker.
     """
     if datapath not in ("float", "int8"):
         raise ValueError(f"datapath {datapath!r} not in ('float', 'int8')")
+    if layer_substrates is not None and len(layer_substrates) != len(cfg.layers):
+        raise ValueError(
+            f"layer_substrates has {len(layer_substrates)} entries for "
+            f"{len(cfg.layers)} conv layers"
+        )
     int8 = datapath == "int8"
-    pol = policy.resolve()
     plans = []
     c = cfg.layers[0].M if c_in is None else int(c_in)
     last_i = len(cfg.layers) - 1
     for i, l in enumerate(cfg.layers):
+        lpol = policy
+        if layer_substrates is not None and layer_substrates[i] is not None:
+            lpol = policy.with_overrides(substrate=layer_substrates[i])
         plans.append(
             plan_conv_layer(
                 (l.H_I, l.W_I),
@@ -301,8 +367,8 @@ def plan_model(
                 in_sz=1 if int8 else 4,
                 w_sz=1 if int8 else 4,
                 out_sz=(4 if i == last_i else 1) if int8 else 4,
-                policy=pol,
+                policy=lpol,
             )
         )
         c = l.N
-    return ModelPlan(cfg=cfg, policy=pol, layers=tuple(plans))
+    return ModelPlan(cfg=cfg, policy=policy, layers=tuple(plans))

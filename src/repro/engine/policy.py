@@ -24,10 +24,15 @@ import jax
 from repro.kernels.trim_conv2d import VMEM_BUDGET_BYTES
 
 #: User-facing substrate choices ("auto" resolves per backend at plan time).
-SUBSTRATES = ("auto", "pallas", "oracle", "interpret")
+SUBSTRATES = ("auto", "pallas", "oracle", "interpret", "f32exact")
 
 #: Concrete substrates a resolved policy / layer plan can carry.
-RESOLVED_SUBSTRATES = ("pallas", "oracle", "interpret")
+RESOLVED_SUBSTRATES = ("pallas", "oracle", "interpret", "f32exact")
+
+#: Plan-tuning modes: "off" plans from the policy defaults, "cached" applies
+#: persisted autotuner winners (miss -> default plan), "auto" tunes on miss
+#: and persists the winner (``repro.engine.autotune``, DESIGN.md §7).
+TUNING_MODES = ("off", "cached", "auto")
 
 
 def on_tpu() -> bool:
@@ -43,7 +48,12 @@ class ExecutionPolicy:
         production default), "pallas" (the Pallas kernels everywhere:
         compiled on TPU, interpret mode off-TPU — what the legacy
         ``force_pallas=True`` meant), "oracle" (the pure-jnp reference on
-        every backend), or "interpret" (Pallas interpret mode even on TPU).
+        every backend), "interpret" (Pallas interpret mode even on TPU), or
+        "f32exact" (integer convs evaluated exactly on the fast f32 conv
+        path via channel chunking — ``kernels.ref.conv2d_exact_f32``;
+        floats fall back to the oracle).  "auto" never resolves to
+        "f32exact": the autotuner promotes layers onto it only after
+        measuring a win (DESIGN.md §7).
     ``emulate_hw``
         Replay the FPGA's strided-layer schedule (stride-1 sweep +
         downstream decimation + unfused epilogue, paper §V) instead of the
@@ -55,6 +65,18 @@ class ExecutionPolicy:
         time.
     ``vmem_budget``
         Byte budget for the width-tile auto-pick (DESIGN.md §4).
+    ``tuning``
+        Per-layer plan tuning mode (the ``--tuning {off,cached,auto}`` CLI
+        flag).  "off" resolves every layer from the policy defaults above;
+        "cached" makes ``plan_conv_layer`` transparently apply the
+        persisted autotuner winner for the layer's cache key (geometry,
+        dtype byte sizes, epilogue, backend + device kind — see
+        ``repro.engine.autotune``), falling back to the default plan on a
+        miss; "auto" additionally tunes on a miss (measures the candidate
+        schedules once) and persists the winner under ``tuned_plans/``.
+        Tuning composes with ``substrate="auto"`` only: an explicitly
+        pinned substrate is a stronger request than the cache, so pinned
+        policies plan as if tuning were off.
 
     Policies are plain frozen dataclasses: hashable (usable as ``jax.jit``
     static arguments and ``lru_cache`` keys) and comparable by value.
@@ -67,10 +89,13 @@ class ExecutionPolicy:
     block_c: int = 128
     block_f: int = 128
     vmem_budget: int = VMEM_BUDGET_BYTES
+    tuning: str = "off"
 
     def __post_init__(self) -> None:
         if self.substrate not in SUBSTRATES:
             raise ValueError(f"substrate {self.substrate!r} not in {SUBSTRATES}")
+        if self.tuning not in TUNING_MODES:
+            raise ValueError(f"tuning {self.tuning!r} not in {TUNING_MODES}")
 
     def resolved_substrate(self) -> str:
         """THE kernel dispatch rule — the only copy in the tree.
@@ -97,13 +122,16 @@ class ExecutionPolicy:
         """Build a policy from parsed CLI args (``launch.cli``).
 
         Reads ``args.substrate`` (the ``--substrate`` flag; the deprecated
-        ``--force-pallas`` alias stores "pallas" into the same dest) and
-        ``args.emulate_hw`` — missing attributes fall back to the defaults,
-        so any ``argparse.Namespace`` works.
+        ``--force-pallas`` alias stores "pallas" into the same dest),
+        ``args.emulate_hw``, and ``args.tuning`` (the ``--tuning
+        {off,cached,auto}`` flag mapping onto :attr:`tuning`) — missing
+        attributes fall back to the defaults, so any
+        ``argparse.Namespace`` works.
         """
         return cls(
             substrate=getattr(args, "substrate", None) or "auto",
             emulate_hw=bool(getattr(args, "emulate_hw", False)),
+            tuning=getattr(args, "tuning", None) or "off",
         )
 
 

@@ -42,6 +42,60 @@ def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1,
         preferred_element_type=acc_dtype)
 
 
+def conv2d_exact_f32(x: jax.Array, w: jax.Array, stride: int = 1,
+                     padding: Optional[int] = None,
+                     groups: int = 1) -> jax.Array:
+    """Integer conv oracle evaluated on the f32 conv path — exactly.
+
+    XLA's CPU integer convolution lowers to a scalar loop (two orders of
+    magnitude slower than the Eigen f32 path the float conv takes).  For
+    8-bit operands the same int32 result can be computed ON the fast f32
+    path by splitting the channel contraction into chunks whose worst-case
+    partial sums stay below 2**24: every intermediate value is then an
+    integer that f32 represents exactly, each chunk rounds back to int32
+    losslessly, and the int32 chunk sums recover the full contraction
+    (integer addition is associative).  Bit-identical to ``conv2d_ref`` for
+    8-bit inputs under the TrIM no-int32-overflow contract; float inputs
+    and wider integer types (no exactness budget) delegate to
+    ``conv2d_ref`` unchanged.
+
+    This is the ``substrate="f32exact"`` arm of the execution engine — a
+    per-layer schedule choice the autotuner (DESIGN.md §7) can measure
+    against the plain oracle and the Pallas kernel.
+    """
+    if not (jnp.issubdtype(x.dtype, jnp.integer)
+            and jnp.issubdtype(w.dtype, jnp.integer)):
+        return conv2d_ref(x, w, stride=stride, padding=padding,
+                          groups=groups)
+    bound = (max(abs(int(jnp.iinfo(x.dtype).min)), int(jnp.iinfo(x.dtype).max))
+             * max(abs(int(jnp.iinfo(w.dtype).min)), int(jnp.iinfo(w.dtype).max)))
+    K = w.shape[0]
+    chunk_c = ((1 << 24) // bound) // (K * K) if bound else 0
+    if chunk_c < 1:
+        return conv2d_ref(x, w, stride=stride, padding=padding,
+                          groups=groups)
+    if groups > 1:
+        cg = x.shape[-1] // groups
+        fg = w.shape[-1] // groups
+        return jnp.concatenate(
+            [conv2d_exact_f32(x[..., g * cg:(g + 1) * cg],
+                              w[..., g * fg:(g + 1) * fg],
+                              stride=stride, padding=padding)
+             for g in range(groups)], axis=-1)
+    p = K // 2 if padding is None else padding
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    C = x.shape[-1]
+    out = None
+    for c0 in range(0, C, chunk_c):
+        o = lax.conv_general_dilated(
+            xf[..., c0:c0 + chunk_c], wf[:, :, c0:c0 + chunk_c, :],
+            window_strides=(stride, stride), padding=[(p, p), (p, p)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(jnp.int32)
+        out = o if out is None else out + o
+    return out
+
+
 def conv1d_causal_ref(x: jax.Array, w: jax.Array,
                       acc_dtype: jnp.dtype = jnp.float32) -> jax.Array:
     """Causal depthwise conv oracle (the Mamba short-conv).

@@ -2,8 +2,8 @@
 
 One argparse *parent* carries the execution flags both launchers used to
 re-declare (arch selection, ``--substrate`` / the deprecated
-``--force-pallas`` alias, ``--emulate-hw``, ``--int8``), mapped onto a
-single :meth:`repro.engine.ExecutionPolicy.from_args`.
+``--force-pallas`` alias, ``--emulate-hw``, ``--int8``, ``--tuning``),
+mapped onto a single :meth:`repro.engine.ExecutionPolicy.from_args`.
 """
 
 from __future__ import annotations
@@ -12,7 +12,7 @@ import argparse
 import warnings
 from typing import Optional, Sequence
 
-from repro.engine import SUBSTRATES, ExecutionPolicy
+from repro.engine import SUBSTRATES, TUNING_MODES, ExecutionPolicy
 
 
 class _DeprecatedSubstrateAlias(argparse.Action):
@@ -44,6 +44,10 @@ def execution_parent(
     stores "pallas" into the same destination.  ``--emulate-hw`` selects
     the FPGA-faithful strided-layer replay (paper §V) and ``--int8`` asks
     the launcher to also exercise the fused int8 inference datapath.
+    ``--tuning {off,cached,auto}`` selects per-layer plan tuning
+    (``repro.engine.autotune``): "cached" applies persisted autotuner
+    winners from ``tuned_plans/``, "auto" tunes on a cache miss and
+    persists the winner.
     """
     p = argparse.ArgumentParser(add_help=False)
     if arch_required:
@@ -60,8 +64,9 @@ def execution_parent(
         choices=list(SUBSTRATES),
         default="auto",
         help="kernel substrate: auto (TPU->compiled Pallas, CPU->oracle), "
-        "pallas (Pallas everywhere; interpret mode off-TPU), oracle, or "
-        "interpret",
+        "pallas (Pallas everywhere; interpret mode off-TPU), oracle, "
+        "interpret, or f32exact (integer convs exactly on the f32 conv "
+        "path)",
     )
     p.add_argument(
         "--force-pallas",
@@ -82,6 +87,15 @@ def execution_parent(
         action="store_true",
         help="also run/compile the int8 inference datapath with the fused "
         "arbitrary-scale requant epilogue",
+    )
+    p.add_argument(
+        "--tuning",
+        choices=list(TUNING_MODES),
+        default="off",
+        help="per-layer plan tuning: off (policy defaults), cached (apply "
+        "persisted autotuner winners from tuned_plans/; miss -> default "
+        "plan), auto (tune on miss, then persist — see "
+        "benchmarks.autotune)",
     )
     return p
 

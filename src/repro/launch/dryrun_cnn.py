@@ -9,10 +9,12 @@ pod-scale data-parallel training step through the TrIM conv path.
 
   PYTHONPATH=src python -m repro.launch.dryrun_cnn --arch vgg16
 
-Execution flags (``--substrate`` / ``--emulate-hw`` / ``--int8``) come from
-the shared launcher parent (``launch.cli``) and map onto one
-``ExecutionPolicy``; the resolved per-layer plan (substrate, width tile,
-epilogue kind) is recorded in the emitted JSON.  ``--int8`` additionally
+Execution flags (``--substrate`` / ``--emulate-hw`` / ``--int8`` /
+``--tuning``) come from the shared launcher parent (``launch.cli``) and
+map onto one ``ExecutionPolicy``; the resolved per-layer plan (substrate,
+width tile, epilogue kind, tuned flag) is recorded in the emitted JSON —
+with ``--tuning cached`` each layer runs the autotuner's persisted winner
+(DESIGN.md §7).  ``--int8`` additionally
 compiles the integer inference datapath with the arbitrary-scale fused
 requant epilogue (DESIGN.md §4) and emits a second roofline record.
 """

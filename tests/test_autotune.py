@@ -1,0 +1,447 @@
+"""Per-layer plan autotuner + plan cache (repro.engine.autotune, §7).
+
+Covers: the exact chunked-f32 integer substrate, candidate enumeration
+(cost-model-pruned tile_w picks, the interpret guard), tune-on-miss
+persistence, pure cache hits (no re-measurement AND no jit retrace),
+cache-key sensitivity (dtype / geometry / device kind), corrupt- and
+stale-cache degradation, the never-slower winner rule, heterogeneous
+ModelPlans (tuned + explicit layer_substrates), model-level bit-identity
+of tuned vs default plans, and the --tuning CLI mapping.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CNN_SMOKES
+from repro.engine import (ExecutionPolicy, plan_conv_layer, plan_model,
+                          run_conv2d, tune_conv_layer, tune_model)
+from repro.engine import autotune
+from repro.kernels import ref
+
+INT8_KW = dict(stride=1, padding=1, groups=1, relu=True, has_bias=False,
+               requant_kind="mult_shift", in_sz=1, w_sz=1, out_sz=1)
+INT8_ARGS = ((12, 16), 8, 3, 8)
+
+
+@pytest.fixture
+def plan_cache(tmp_path, monkeypatch):
+    """Isolated plan-cache dir; engine caches reset around the test."""
+    monkeypatch.setenv("REPRO_TUNED_PLANS_DIR", str(tmp_path))
+    autotune.reset_cache()
+    yield tmp_path
+    autotune.reset_cache()
+
+
+def _fast_measure(monkeypatch, scripted=None, counter=None):
+    """Deterministic measurement: real outputs (identity gate stays
+    honest), scripted per-substrate timings, optional call counting."""
+    real = autotune._measure_plan
+
+    def fake(plan, *, in_sz, warmup=1, reps=5):
+        if counter is not None:
+            counter.append(plan.substrate)
+        us, out = real(plan, in_sz=in_sz, warmup=0, reps=1)
+        if scripted is not None:
+            us = scripted[plan.substrate]
+        return us, out
+
+    monkeypatch.setattr(autotune, "_measure_plan", fake)
+    return fake
+
+
+# ---------------------------------------------------------------------------
+# the f32exact substrate (the schedule move the tuner finds on CPU)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride,pad,groups", [(1, 1, 1), (2, 0, 1),
+                                               (1, 2, 2)])
+def test_conv2d_exact_f32_bitwise(stride, pad, groups):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.randint(key, (2, 13, 15, 8), 0, 255, jnp.uint8)
+    w = jax.random.randint(jax.random.fold_in(key, 1), (3, 3, 8 // groups, 8),
+                           -127, 127, jnp.int8)
+    got = ref.conv2d_exact_f32(x, w, stride=stride, padding=pad,
+                               groups=groups)
+    want = ref.conv2d_ref(x, w, stride=stride, padding=pad, groups=groups)
+    assert got.dtype == want.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conv2d_exact_f32_worst_case_magnitudes():
+    """Adversarial extremes: all-255 x, all +/-127 w — the exactness
+    argument must hold at the bound, not just for random data."""
+    x = jnp.full((1, 9, 9, 64), 255, jnp.uint8)
+    w = jnp.where((jnp.arange(3 * 3 * 64 * 8) % 2).reshape(3, 3, 64, 8) > 0,
+                  127, -127).astype(jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(ref.conv2d_exact_f32(x, w, padding=1)),
+        np.asarray(ref.conv2d_ref(x, w, padding=1)))
+
+
+def test_conv2d_exact_f32_float_delegates_to_oracle():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (1, 8, 8, 4))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 4, 4))
+    np.testing.assert_array_equal(
+        np.asarray(ref.conv2d_exact_f32(x, w)),
+        np.asarray(ref.conv2d_ref(x, w)))
+    # mixed int activations / float weights: no exactness budget either —
+    # must delegate, not crash on jnp.iinfo(float)
+    xi = jax.random.randint(key, (1, 8, 8, 4), 0, 255, jnp.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(ref.conv2d_exact_f32(xi, w)),
+        np.asarray(ref.conv2d_ref(xi, w)))
+
+
+def test_f32exact_substrate_through_dispatch():
+    """run_conv2d on an f32exact plan == oracle plan, bit-identically,
+    including the fused requant epilogue."""
+    key = jax.random.PRNGKey(2)
+    x = jax.random.randint(key, (1, 10, 10, 8), 0, 255, jnp.uint8)
+    w = jax.random.randint(jax.random.fold_in(key, 1), (3, 3, 8, 8),
+                           -127, 127, jnp.int8)
+    rq = (jnp.full((8,), 16384, jnp.int32), jnp.full((8,), 20, jnp.int32))
+    outs = {}
+    for sub in ("oracle", "f32exact"):
+        lp = plan_conv_layer((10, 10), 8, 3, 8, relu=True,
+                             requant_kind="mult_shift", in_sz=1, w_sz=1,
+                             out_sz=1,
+                             policy=ExecutionPolicy(substrate=sub))
+        outs[sub] = np.asarray(run_conv2d(lp, x, w, None, rq))
+    assert outs["oracle"].dtype == outs["f32exact"].dtype == np.uint8
+    np.testing.assert_array_equal(outs["oracle"], outs["f32exact"])
+
+
+# ---------------------------------------------------------------------------
+# candidate enumeration
+# ---------------------------------------------------------------------------
+
+
+def test_candidate_policies_int8_cpu():
+    """Off-TPU integer layers search oracle vs f32exact; float layers have
+    only the default; interpret is never searched."""
+    cands = autotune.candidate_policies((16, 64), 16, 3, 16, in_sz=1)
+    assert [c.substrate for c in cands] == ["oracle", "f32exact"]
+    assert all(c.tuning == "off" for c in cands)
+    fl = autotune.candidate_policies((16, 64), 16, 3, 16, in_sz=4)
+    assert [c.substrate for c in fl] == ["oracle"]
+    interp = autotune.candidate_policies(
+        (16, 64), 16, 3, 16, in_sz=1,
+        policy=ExecutionPolicy(substrate="interpret"))
+    assert [c.substrate for c in interp] == ["interpret"]
+
+
+def test_candidate_policies_pallas_sweep():
+    """With the Pallas kernel available the schedule knobs get a
+    one-factor-at-a-time sweep; tile_w picks are cost-model pruned."""
+    cands = autotune.candidate_policies(
+        (96, 512), 64, 3, 64, in_sz=4, include_pallas=True)
+    pallas = [c for c in cands if c.substrate == "pallas"]
+    assert pallas, "pallas candidates missing"
+    tws = {c.tile_w for c in pallas}
+    assert None in tws            # the auto-pick is always a candidate
+    ths = {c.tile_h for c in pallas}
+    assert len(ths) > 1           # tile_h swept
+    # distinct policies only
+    assert len(cands) == len(set(cands))
+
+
+def test_tile_w_candidates_budget_pruned():
+    """Shrinking the budget prunes the wide picks; survivors are 8-aligned
+    (or the full width) and satisfy the halo floor."""
+    kw = dict(stride=1, padding=1, groups=1, tile_h=8, block_c=64,
+              block_f=64, in_sz=4, w_sz=4, out_sz=4)
+    wide = autotune.tile_w_candidates((96, 512), 64, 3, 64,
+                                      vmem_budget=1 << 40, **kw)
+    assert wide[0] is None and 512 in wide
+    tight = autotune.tile_w_candidates((96, 512), 64, 3, 64,
+                                       vmem_budget=4 << 20, **kw)
+    assert 512 not in tight
+    for tw in tight:
+        if tw is not None:
+            assert tw % 8 == 0 or tw == 512
+            assert tw >= 2      # halo floor: ceil((K - S) / S) = 2
+    tiny = autotune.tile_w_candidates((96, 512), 64, 3, 64,
+                                      vmem_budget=1, **kw)
+    assert tiny == [None]       # nothing fits: leave it to pick_tile_w
+
+
+# ---------------------------------------------------------------------------
+# the plan cache: persist, hit, key sensitivity, degradation
+# ---------------------------------------------------------------------------
+
+
+def test_tune_on_miss_persists_and_applies(plan_cache, monkeypatch):
+    calls = []
+    _fast_measure(monkeypatch, counter=calls)
+    lp = plan_conv_layer(*INT8_ARGS, **INT8_KW,
+                         policy=ExecutionPolicy(tuning="auto"))
+    assert calls, "auto tuning must measure on a miss"
+    assert lp.tuned
+    assert os.path.exists(autotune.cache_path())
+    data = json.load(open(autotune.cache_path()))
+    assert data["version"] == autotune.PLAN_CACHE_VERSION
+    [(key, entry)] = list(data["plans"].items())
+    assert key == autotune.layer_key(*INT8_ARGS, emulate_hw=False,
+                                     **INT8_KW)
+    assert entry["schedule"]["substrate"] == lp.substrate
+
+
+def test_second_lookup_is_pure_cache_hit(plan_cache, monkeypatch):
+    calls = []
+    _fast_measure(monkeypatch, counter=calls)
+    plan_conv_layer(*INT8_ARGS, **INT8_KW,
+                    policy=ExecutionPolicy(tuning="auto"))
+    n_tune = len(calls)
+    assert n_tune >= 2
+    # simulate a fresh process: drop every in-memory cache, keep the file
+    autotune.reset_cache()
+    lp = plan_conv_layer(*INT8_ARGS, **INT8_KW,
+                         policy=ExecutionPolicy(tuning="auto"))
+    assert len(calls) == n_tune, "cache hit must not re-measure"
+    assert lp.tuned
+    # and a cached-mode lookup is identical
+    autotune.reset_cache()
+    lp2 = plan_conv_layer(*INT8_ARGS, **INT8_KW,
+                          policy=ExecutionPolicy(tuning="cached"))
+    assert lp2 == lp and len(calls) == n_tune
+
+
+def test_cache_hit_does_not_retrace(plan_cache, monkeypatch):
+    """Plans rebuilt from the persisted cache are value-equal, so a jit
+    closed over them as a static argument must hit the trace cache."""
+    _fast_measure(monkeypatch)
+    traces = []
+
+    def run(x, w, rq0, rq1, *, plan):
+        traces.append(1)
+        from repro.engine import execute
+        return execute.run_conv2d(plan, x, w, None, (rq0, rq1))
+
+    run2 = jax.jit(run, static_argnames=("plan",))
+    key = jax.random.PRNGKey(0)
+    x = jax.random.randint(key, (1, 12, 16, 8), 0, 255, jnp.uint8)
+    w = jax.random.randint(jax.random.fold_in(key, 1), (3, 3, 8, 8),
+                           -127, 127, jnp.int8)
+    rq = (jnp.full((8,), 16384, jnp.int32), jnp.full((8,), 20, jnp.int32))
+    p1 = plan_conv_layer(*INT8_ARGS, **INT8_KW,
+                         policy=ExecutionPolicy(tuning="auto"))
+    o1 = run2(x, w, *rq, plan=p1)
+    autotune.reset_cache()   # fresh process: plan rebuilt from the file
+    p2 = plan_conv_layer(*INT8_ARGS, **INT8_KW,
+                         policy=ExecutionPolicy(tuning="cached"))
+    assert p2 is not p1 and p2 == p1
+    o2 = run2(x, w, *rq, plan=p2)
+    assert len(traces) == 1, "equal tuned plans must not retrace"
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_cache_key_sensitivity(plan_cache):
+    base = autotune.layer_key(*INT8_ARGS, emulate_hw=False, **INT8_KW)
+    geom = autotune.layer_key((12, 17), *INT8_ARGS[1:], emulate_hw=False,
+                              **INT8_KW)
+    fdt = autotune.layer_key(*INT8_ARGS, emulate_hw=False,
+                             **{**INT8_KW, "in_sz": 4})
+    emu = autotune.layer_key(*INT8_ARGS, emulate_hw=True, **INT8_KW)
+    epi = autotune.layer_key(*INT8_ARGS, emulate_hw=False,
+                             **{**INT8_KW, "requant_kind": "shift"})
+    assert len({base, geom, fdt, emu, epi}) == 5
+
+
+def test_cache_file_per_device_kind(plan_cache, monkeypatch):
+    """A different device kind reads/writes a different cache file, so
+    winners never leak across hardware classes."""
+    p_cpu = autotune.cache_path()
+    monkeypatch.setattr(autotune, "device_kind", lambda: "TPU v4")
+    p_tpu = autotune.cache_path()
+    assert p_cpu != p_tpu and "TPU-v4" in p_tpu
+
+
+def test_corrupt_cache_degrades_with_warning(plan_cache):
+    path = autotune.cache_path()
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write("{not json")
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        lp = plan_conv_layer(*INT8_ARGS, **INT8_KW,
+                             policy=ExecutionPolicy(tuning="cached"))
+    default = plan_conv_layer(*INT8_ARGS, **INT8_KW,
+                              policy=ExecutionPolicy())
+    assert not lp.tuned
+    assert lp == default
+
+
+def test_stale_cache_version_degrades_with_warning(plan_cache):
+    path = autotune.cache_path()
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    key = autotune.layer_key(*INT8_ARGS, emulate_hw=False, **INT8_KW)
+    with open(path, "w") as f:
+        json.dump({"version": autotune.PLAN_CACHE_VERSION + 1,
+                   "plans": {key: {"schedule": {
+                       "substrate": "f32exact", "tile_h": 8,
+                       "tile_w": None, "block_c": 8, "block_f": 8}}}}, f)
+    with pytest.warns(RuntimeWarning, match="version"):
+        lp = plan_conv_layer(*INT8_ARGS, **INT8_KW,
+                             policy=ExecutionPolicy(tuning="cached"))
+    assert not lp.tuned
+
+
+def test_invalid_entry_degrades_with_warning(plan_cache):
+    path = autotune.cache_path()
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    key = autotune.layer_key(*INT8_ARGS, emulate_hw=False, **INT8_KW)
+    with open(path, "w") as f:
+        json.dump({"version": autotune.PLAN_CACHE_VERSION,
+                   "plans": {key: {"schedule": {"substrate": "fpga"}}}}, f)
+    with pytest.warns(RuntimeWarning, match="invalid"):
+        lp = plan_conv_layer(*INT8_ARGS, **INT8_KW,
+                             policy=ExecutionPolicy(tuning="cached"))
+    assert not lp.tuned
+
+
+def test_pinned_substrate_beats_cache(plan_cache, monkeypatch):
+    """An explicitly pinned substrate is a stronger request than the
+    cache: tuning only composes with substrate='auto', so a cached
+    f32exact winner must not hijack an --substrate oracle/interpret run
+    (the debug substrate especially)."""
+    _fast_measure(monkeypatch,
+                  scripted={"oracle": 100.0, "f32exact": 10.0})
+    plan_conv_layer(*INT8_ARGS, **INT8_KW,
+                    policy=ExecutionPolicy(tuning="auto"))
+    for pin in ("oracle", "interpret"):
+        lp = plan_conv_layer(
+            *INT8_ARGS, **INT8_KW,
+            policy=ExecutionPolicy(substrate=pin, tuning="cached"))
+        assert lp.substrate == pin and not lp.tuned
+    # auto still gets the winner
+    lp = plan_conv_layer(*INT8_ARGS, **INT8_KW,
+                         policy=ExecutionPolicy(tuning="cached"))
+    assert lp.substrate == "f32exact" and lp.tuned
+    # a layer_substrates pin through plan_model behaves the same
+    from repro.configs import CNN_SMOKES
+    cfg = CNN_SMOKES["vgg16"]
+    plan = plan_model(cfg, ExecutionPolicy(tuning="cached"),
+                      layer_substrates=("oracle", None, None))
+    assert plan.layers[0].substrate == "oracle" and not plan.layers[0].tuned
+
+
+def test_cached_miss_is_default_plan(plan_cache):
+    lp = plan_conv_layer(*INT8_ARGS, **INT8_KW,
+                         policy=ExecutionPolicy(tuning="cached"))
+    assert not lp.tuned and lp.substrate == \
+        ExecutionPolicy().resolved_substrate()
+
+
+# ---------------------------------------------------------------------------
+# winner selection
+# ---------------------------------------------------------------------------
+
+
+def test_winner_never_slower_than_default(plan_cache, monkeypatch):
+    """A candidate inside the MIN_GAIN margin loses to the default."""
+    _fast_measure(monkeypatch,
+                  scripted={"oracle": 100.0, "f32exact": 98.0})
+    res = tune_conv_layer(*INT8_ARGS, **INT8_KW)
+    assert res.schedule["substrate"] == "oracle"
+    assert res.us == res.us_default == 100.0
+
+
+def test_winner_beats_default_outside_margin(plan_cache, monkeypatch):
+    _fast_measure(monkeypatch,
+                  scripted={"oracle": 100.0, "f32exact": 10.0})
+    res = tune_conv_layer(*INT8_ARGS, **INT8_KW)
+    assert res.schedule["substrate"] == "f32exact"
+    assert res.speedup == pytest.approx(10.0)
+    # and the persisted entry round-trips through tune_conv_layer
+    res2 = tune_conv_layer(*INT8_ARGS, **INT8_KW)
+    assert res2.cached and res2.schedule == res.schedule
+
+
+# ---------------------------------------------------------------------------
+# model level: heterogeneous plans + bit-identity (acceptance)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_model_layer_substrates_override():
+    cfg = CNN_SMOKES["vgg16"]
+    plan = plan_model(cfg, ExecutionPolicy(),
+                      layer_substrates=("f32exact", None, "oracle"))
+    assert [lp.substrate for lp in plan.layers] == \
+        ["f32exact", ExecutionPolicy().resolved_substrate(), "oracle"]
+    with pytest.raises(ValueError, match="layer_substrates"):
+        plan_model(cfg, ExecutionPolicy(), layer_substrates=("oracle",))
+
+
+def test_tuned_model_plan_bit_identical_vgg16_smoke(plan_cache):
+    """Acceptance: a cached tuned ModelPlan is bit-identical in outputs to
+    the default plan's — float forward AND fused int8 forward — while the
+    int8 lane actually switches substrates per layer (real measurement)."""
+    cfg = CNN_SMOKES["vgg16"]
+    pol = ExecutionPolicy()
+    tune_model(cfg, pol, datapath="float", reps=2)
+    tune_model(cfg, pol, datapath="int8", reps=2)
+    autotune.reset_cache()
+
+    default = plan_model(cfg, pol)
+    tuned = plan_model(cfg, ExecutionPolicy(tuning="cached"))
+    assert all(lp.tuned for lp in tuned.layers)
+
+    key = jax.random.PRNGKey(0)
+    params = default.init(key)
+    img = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, 16, 3))
+    np.testing.assert_array_equal(
+        np.asarray(default.forward(params, img)),
+        np.asarray(tuned.forward(params, img)))
+
+    qp, _ = default.quantize(params)
+    u8 = jax.random.randint(jax.random.fold_in(key, 2), (1, 16, 16, 3),
+                            0, 255, jnp.uint8)
+    pairs = default.calibrate_requant(qp, u8)
+    feat_d = default.forward_int8(qp, u8, requant=pairs)
+    feat_t = tuned.forward_int8(qp, u8, requant=pairs)
+    assert feat_d.dtype == feat_t.dtype
+    np.testing.assert_array_equal(np.asarray(feat_d), np.asarray(feat_t))
+
+
+def test_tune_model_walk_matches_plan_model(plan_cache, monkeypatch):
+    """tune_model tunes exactly the layer set plan_model resolves: after an
+    int8 walk, every layer of the cached int8 sibling plan is tuned."""
+    _fast_measure(monkeypatch)
+    cfg = CNN_SMOKES["alexnet"]
+    results = tune_model(cfg, ExecutionPolicy(), datapath="int8", reps=1)
+    assert len(results) == len(cfg.layers)
+    autotune.reset_cache()
+    plan = plan_model(cfg, ExecutionPolicy(tuning="cached"))
+    assert all(lp.tuned for lp in plan.int8.layers)
+    assert not any(lp.tuned for lp in plan.layers)   # float keys untouched
+
+
+# ---------------------------------------------------------------------------
+# policy / CLI mapping
+# ---------------------------------------------------------------------------
+
+
+def test_policy_tuning_validation():
+    assert ExecutionPolicy().tuning == "off"
+    assert ExecutionPolicy(tuning="auto").resolve().tuning == "auto"
+    with pytest.raises(ValueError, match="tuning"):
+        ExecutionPolicy(tuning="always")
+
+
+def test_cli_tuning_maps_to_policy():
+    import argparse
+    from repro.launch.cli import execution_parent, policy_from_args
+    ap = argparse.ArgumentParser(parents=[execution_parent()])
+    for mode in ("off", "cached", "auto"):
+        args = ap.parse_args(["--tuning", mode])
+        assert policy_from_args(args) == ExecutionPolicy(tuning=mode)
+    assert policy_from_args(ap.parse_args([])).tuning == "off"
+    # from_args tolerates namespaces without the flag (any Namespace works)
+    assert ExecutionPolicy.from_args(argparse.Namespace()).tuning == "off"
+    args = ap.parse_args(["--substrate", "f32exact"])
+    assert policy_from_args(args).substrate == "f32exact"

@@ -231,6 +231,9 @@ def test_cli_parent_maps_to_policy():
     args = ap.parse_args(["--substrate", "interpret", "--emulate-hw"])
     assert policy_from_args(args) == ExecutionPolicy(
         substrate="interpret", emulate_hw=True)
+    # --tuning maps onto ExecutionPolicy.tuning like --substrate does
+    args = ap.parse_args(["--tuning", "cached"])
+    assert policy_from_args(args) == ExecutionPolicy(tuning="cached")
     # the deprecated alias stores "pallas" into the same dest, and warns
     with pytest.warns(DeprecationWarning, match="force-pallas"):
         args = ap.parse_args(["--force-pallas", "--int8"])
