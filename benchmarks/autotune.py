@@ -81,7 +81,7 @@ def _spec_kw(xs, ws, stride, pad, int8: bool) -> Dict:
     )
 
 
-def _tune_shape(name, xs, ws, stride, pad, *, int8, reps, force):
+def _tune_shape(name, xs, ws, stride, pad, *, int8, reps, force, batch=1):
     from repro.engine import tune_conv_layer
 
     res = tune_conv_layer(
@@ -92,9 +92,10 @@ def _tune_shape(name, xs, ws, stride, pad, *, int8, reps, force):
         policy=_policy(),
         reps=reps,
         force=force,
+        batch=batch,
         **_spec_kw(xs, ws, stride, pad, int8),
     )
-    return name, res
+    return (name if batch == 1 else f"{name}@n{batch}"), res
 
 
 def _policy():
@@ -104,7 +105,8 @@ def _policy():
 
 
 def tune_cell(
-    cell: str, *, reps: int = 3, force: bool = False
+    cell: str, *, reps: int = 3, force: bool = False,
+    batches: Tuple[int, ...] = (1,),
 ) -> List[Tuple[str, object]]:
     """Tune one named cell; returns [(name, TuneResult), ...].
 
@@ -113,8 +115,13 @@ def tune_cell(
     Table II integer workload — additionally tunes its full-size int8
     walk, cheap enough on CPU; vgg16's needs --full-int8), "wide512" (the
     wide-feature-map kernel shapes, float + int8), "smoke" (the tiny CI
-    search).  ``benchmarks.hillclimb`` drives its TrIM conv variants
-    through this entry point.
+    search).  ``batches`` sweeps the kernel-table shapes per batch size
+    (the serving buckets: tuned-plan cache keys carry the batch axis, and
+    a bucket's plan looks up the winner measured at its own N; names gain
+    an ``@n{N}`` suffix past N=1).  Model walks stay at N=1 — serving
+    buckets re-tune per layer through the same per-layer keys.
+    ``benchmarks.hillclimb`` drives its TrIM conv variants through this
+    entry point.
     """
     from repro.configs import CNN_REGISTRY, CNN_SMOKES
     from repro.engine import tune_model
@@ -143,10 +150,12 @@ def tune_cell(
     else:
         raise ValueError(f"unknown cell {cell!r}")
     for name, xs, ws, stride, pad in rows:
-        results.append(
-            _tune_shape(name, xs, ws, stride, pad, int8=name.endswith("int8"),
-                        reps=reps, force=force)
-        )
+        for batch in batches:
+            results.append(
+                _tune_shape(name, xs, ws, stride, pad,
+                            int8=name.endswith("int8"), reps=reps,
+                            force=force, batch=int(batch))
+            )
     return results
 
 
@@ -246,6 +255,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                     "on CPU: the default integer oracle takes minutes)")
     ap.add_argument("--reps", type=int, default=3,
                     help="timed reps per candidate (median)")
+    ap.add_argument("--batches", default="1",
+                    help="comma-separated batch sizes to sweep the "
+                    "kernel-table shapes at (serving buckets, e.g. 1,4,16 "
+                    "— each N gets its own cache key and winner)")
     ap.add_argument("--force", action="store_true",
                     help="re-measure layers already in the cache")
     ap.add_argument("--check", action="store_true",
@@ -259,10 +272,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     cells = ["smoke"] if args.smoke else (
         list(args.cells) or ["vgg16", "alexnet", "wide512"]
     )
+    batches = tuple(int(b) for b in args.batches.split(","))
     results: List[Tuple[str, object]] = []
     for cell in cells:
         print(f"[autotune] tuning cell {cell} ...", flush=True)
-        results += tune_cell(cell, reps=args.reps, force=args.force)
+        results += tune_cell(cell, reps=args.reps, force=args.force,
+                             batches=batches)
     if args.full_int8:
         from repro.configs import CNN_REGISTRY
         from repro.engine import tune_model
@@ -277,15 +292,19 @@ def main(argv: Optional[List[str]] = None) -> int:
     print("section,name,us_default,us_tuned,ratio,substrate,cached")
     for name, res in results:
         row = report_row(name, res)
-        # stash the re-plan arguments for --check (not serialized)
-        if name in {r[0] for r in
+        # stash the re-plan arguments for --check (not serialized); batch
+        # sweeps suffix names with @n{N}, so match on the base name
+        base, _, nsuf = name.partition("@n")
+        if base in {r[0] for r in
                     FUSED_SHAPES + INT8_SHAPES + SMOKE_SHAPES}:
             shape = next(r for r in FUSED_SHAPES + INT8_SHAPES + SMOKE_SHAPES
-                         if r[0] == name)
+                         if r[0] == base)
             _, xs, ws, stride, pad = shape
             row["_args"] = ((xs[1], xs[2]), xs[3], ws[0], ws[3])
-            row["_kw"] = _spec_kw(xs, ws, stride, pad,
-                                  name.endswith("int8"))
+            row["_kw"] = dict(
+                _spec_kw(xs, ws, stride, pad, base.endswith("int8")),
+                batch=int(nsuf) if nsuf else 1,
+            )
         rows.append(row)
         print(
             f"autotune,{name},{row['us_default']:.0f},{row['us_tuned']:.0f},"

@@ -19,14 +19,16 @@ record regresses, the plan diff between baseline and current is printed so
 schedule changes (a different tile pick, a substrate switch) are
 attributable at the gate.
 
-Metric direction is automatic: ``us_*`` metrics are lower-is-better
-wall-clock timings, ``speedup`` / ``tuned_speedup`` are higher-is-better.
-Absolute ``us_*`` comparisons are only meaningful against a baseline from
-the same runner class — every record (and the artifact header) carries a
-``backend`` + ``device_kind`` stamp, and when baseline and candidate
-device kinds differ the absolute ``us_*`` gates are SKIPPED with a
-visible warning (a dev-machine or TPU baseline must not fail a CPU CI
-runner on wall-clock alone).  The machine-neutral ratio gates
+Metric direction is automatic: ``us_*`` / ``*_ms`` metrics are
+lower-is-better wall-clock timings, ``speedup`` / ``tuned_speedup`` /
+``*per_s`` throughputs are higher-is-better.  Absolute wall-clock-derived
+comparisons (``us_*``, ``*_ms`` latencies, ``*per_s`` throughputs — the
+serving gate's ``images_per_s`` / ``p99_ms``) are only meaningful against
+a baseline from the same runner class — every record (and the artifact
+header) carries a ``backend`` + ``device_kind`` stamp, and when baseline
+and candidate device kinds differ those machine-scoped gates are SKIPPED
+with a visible warning (a dev-machine or TPU baseline must not fail a CPU
+CI runner on wall-clock alone).  The machine-neutral ratio gates
 (``--metric speedup`` — fused vs decimate arm measured in the *same* run
 — and ``tuned_speedup``) always apply.  Refresh BENCH_baseline.json when
 the fleet (or a TPU runner) changes.
@@ -62,6 +64,23 @@ def device_kind_of(path):
     return None
 
 
+def higher_is_better(metric):
+    """speedup ratios and ``*per_s`` throughputs go up; timings go down."""
+    return metric.endswith("speedup") or metric.endswith("per_s")
+
+
+def machine_scoped(metric):
+    """True for absolute wall-clock-derived metrics that only compare
+    within one (backend, device kind) class: ``us_*`` timings, ``*_ms``
+    latencies, ``*per_s`` throughputs.  Ratio metrics measured within a
+    single run (``speedup``, ``tuned_speedup``) are machine-neutral."""
+    return (
+        metric.startswith("us_")
+        or metric.endswith("_ms")
+        or metric.endswith("per_s")
+    )
+
+
 def check_floor(current, metric, floor):
     """Absolute-floor gate: fail any record whose ``metric`` value sits
     below ``floor``.  Used for ratios that are >= 1 by construction (the
@@ -92,7 +111,7 @@ def check_floor(current, metric, floor):
 
 def compare(baseline, current, metric, threshold):
     """Return (failures, lines) comparing current vs baseline records."""
-    lower_is_better = not metric.endswith("speedup")
+    lower_is_better = not higher_is_better(metric)
     failures = []
     lines = []
     for name in sorted(set(baseline) | set(current)):
@@ -178,14 +197,14 @@ def main(argv=None):
     if not baseline or not current:
         print("bench-gate: empty record set", file=sys.stderr)
         return 2
-    if args.metric.startswith("us_"):
+    if machine_scoped(args.metric):
         bk = device_kind_of(args.baseline)
         ck = device_kind_of(args.current)
         if bk and ck and bk != ck:
             print(
                 "bench-gate: WARNING — baseline device kind "
                 f"{bk!r} != current {ck!r}; absolute {args.metric!r} "
-                "timings do not compare across device kinds, SKIPPING "
+                "values do not compare across device kinds, SKIPPING "
                 "this gate (the machine-neutral ratio gates still apply)"
             )
             print("bench-gate: PASS (skipped: device-kind mismatch)")

@@ -17,6 +17,10 @@ EXPERIMENTS.md) can consume them directly. Sections:
   kernels_fused  Fused-strided conv vs the FPGA's decimate-then-activate
            schedule on the AlexNet/VGG layer shapes; writes
            BENCH_kernels.json (perf trajectory artifact).
+  serve    Closed-loop bucketed CNN serving throughput/latency per
+           (arch, datapath, bucket) off the shared serving core
+           (DESIGN.md §8); writes BENCH_serve.json (serving gate
+           artifact — ``benchmarks.compare --metric images_per_s``).
   roofline Dry-run roofline table (reads experiments/dryrun/*.json).
 """
 from __future__ import annotations
@@ -377,6 +381,84 @@ def bench_kernels_fused() -> None:
     print(f"kernels_fused,WROTE,{out_path},,,")
 
 
+def bench_serve() -> None:
+    """Closed-loop bucketed serving: images/sec + latency percentiles per
+    (arch, datapath, bucket) off the shared serving core (DESIGN.md §8).
+
+    Each record times ``ServeEngine.run_bucket`` on a full bucket (no pad
+    waste — this is the peak-throughput arm; the open-loop launcher
+    ``repro.launch.serve_cnn`` measures the queueing side).  The engine is
+    built exactly like the production CLI (``launch.serve_cnn
+    .build_engine``: ahead-of-time compiled bucket executables, calibrated
+    requant on the int8 lane) with ``tuning="cached"`` so batch-specific
+    persisted autotuner winners apply.  Records carry ``images_per_s``
+    (higher-is-better throughput gate) and ``p50_ms``/``p99_ms``
+    (lower-is-better latency gate) plus ``backend``/``device_kind`` stamps
+    and the bucket plan — ``benchmarks.compare`` skips these machine-scoped
+    gates across device kinds.  Reps via REPRO_SERVE_BENCH_REPS (default
+    15).  Writes BENCH_serve.json for the serving perf trajectory.
+    """
+    import jax
+    from repro.configs import CNN_SMOKES
+    from repro.data.pipeline import SyntheticRequestStream
+    from repro.engine import ExecutionPolicy
+    from repro.launch.serve_cnn import build_engine
+
+    reps = int(os.environ.get("REPRO_SERVE_BENCH_REPS", "15"))
+    buckets = (1, 4, 16)
+    policy = ExecutionPolicy(tuning="cached")
+    backend = jax.default_backend()
+    device_kind = jax.devices()[0].device_kind
+    stamp = {"backend": backend, "device_kind": device_kind}
+    records: List[Dict] = []
+    print("section,name,bucket,images_per_s,p50_ms,p99_ms,backend")
+    for arch in ("vgg16", "alexnet"):
+        cfg = CNN_SMOKES[arch]
+        for datapath in ("float", "int8"):
+            int8 = datapath == "int8"
+            engine = build_engine(cfg, policy, buckets, int8=int8)
+            stream = SyntheticRequestStream(
+                hw=cfg.input_hw, channels=cfg.layers[0].M,
+                n_classes=cfg.n_classes,
+                dtype="uint8" if int8 else "float32")
+            for b in buckets:
+                images = stream.sample_batch(b)
+                np.asarray(engine.run_bucket(b, images))  # warm
+                times = []
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    np.asarray(engine.run_bucket(b, images))
+                    times.append(time.perf_counter() - t0)
+                busy = sum(times)
+                img_per_s = b * reps / busy if busy else 0.0
+                p50 = float(np.percentile(times, 50)) * 1e3
+                p99 = float(np.percentile(times, 99)) * 1e3
+                name = f"serve_{arch}_{datapath}_n{b}"
+                print(f"serve,{name},{b},{img_per_s:.1f},"
+                      f"{p50:.2f},{p99:.2f},{backend}")
+                records.append({
+                    "name": name, "arch": cfg.name, "datapath": datapath,
+                    "bucket": b, "reps": reps,
+                    "images_per_s": round(img_per_s, 1),
+                    "p50_ms": round(p50, 3), "p99_ms": round(p99, 3),
+                    **stamp,
+                    "plan": list(engine.bucket_plan(b).describe()),
+                })
+            # no-retrace ledger: the closed loop must not have compiled
+            # anything beyond the one warmup executable per bucket
+            bad = {k: v for k, v in engine.compile_counts.items() if v != 1}
+            if bad:
+                raise RuntimeError(
+                    f"serve bench recompiled executables: {bad}")
+    out_dir = os.environ.get("REPRO_BENCH_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, "BENCH_serve.json")
+    with open(out_path, "w") as f:
+        json.dump({"section": "serve", "device": stamp,
+                   "records": records}, f, indent=1)
+    print(f"serve,WROTE,{out_path},,,,")
+
+
 def bench_roofline() -> None:
     files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
     print("section,arch,shape,mesh,compute_s,memory_s,collective_s,"
@@ -405,6 +487,7 @@ SECTIONS = {
     "engine": bench_engine,
     "kernels": bench_kernels,
     "kernels_fused": bench_kernels_fused,
+    "serve": bench_serve,
     "roofline": bench_roofline,
 }
 

@@ -117,6 +117,93 @@ class SyntheticImageDataset:
 
 
 @dataclass(frozen=True)
+class SyntheticRequestStream:
+    """Deterministic serving request stream with a configurable arrival
+    process (open-loop load for the serve launchers and benchmarks).
+
+    Iterating yields ``(t_arrival_s, image, label)`` with arrival times as
+    offsets from stream start; the serve loop sleeps to honor them, so
+    queueing delay is measured, not simulated.  Arrival processes:
+
+    - "poisson": exponential inter-arrivals at ``rate_hz`` (the classic
+      open-loop load model);
+    - "uniform": fixed ``1/rate_hz`` spacing;
+    - "bursts": cycles ``burst_sizes`` — each burst lands at one instant,
+      bursts ``gap_s`` apart.  Sized to the serving buckets (and with
+      ``gap_s`` past the flush deadline) this exercises every bucket at
+      least once, which is what the CI serve-smoke lane asserts.
+
+    Images come from :class:`SyntheticImageDataset` (request index = step
+    at batch 1), so everything is a pure function of (seed, request
+    index).  ``dtype="uint8"`` affine-maps the float images (≈[-2, 2])
+    onto [0, 255] for the integer serving lane.
+    """
+
+    hw: Tuple[int, int]
+    channels: int
+    n_classes: int = 10
+    n_requests: int = 64
+    rate_hz: float = 100.0
+    seed: int = 0
+    process: str = "poisson"
+    burst_sizes: Tuple[int, ...] = (1, 4, 16)
+    gap_s: float = 0.02
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.process not in ("poisson", "uniform", "bursts"):
+            raise ValueError(
+                f"process {self.process!r} not in ('poisson', 'uniform', 'bursts')"
+            )
+        if self.dtype not in ("float32", "uint8"):
+            raise ValueError(f"dtype {self.dtype!r} not in ('float32', 'uint8')")
+
+    def _images(self) -> SyntheticImageDataset:
+        return SyntheticImageDataset(
+            hw=self.hw, channels=self.channels, n_classes=self.n_classes,
+            global_batch=1, seed=self.seed)
+
+    def image_at(self, i: int) -> Tuple[np.ndarray, int]:
+        """Request ``i``'s (image, label) — pure in (seed, i)."""
+        b = self._images().batch_at(i)
+        img = b["images"][0]
+        if self.dtype == "uint8":
+            img = np.clip((img + 2.0) * 63.75, 0, 255).astype(np.uint8)
+        return img, int(b["labels"][0])
+
+    def sample_batch(self, n: int) -> np.ndarray:
+        """The stream's first ``n`` images as one (n, H, W, C) batch —
+        calibration samples drawn from the distribution being served."""
+        return np.stack([self.image_at(i)[0] for i in range(n)])
+
+    def arrival_times(self) -> np.ndarray:
+        n = self.n_requests
+        if self.process == "uniform":
+            return np.arange(n) / self.rate_hz
+        if self.process == "poisson":
+            u = (_philox(self.seed + 31, np.arange(n).astype(np.uint64))
+                 .astype(np.float64) + 1.0) / 2.0**32
+            t = np.cumsum(-np.log(u) / self.rate_hz)
+            return t - t[0]
+        times: list = []
+        t, i, k = 0.0, 0, 0
+        while i < n:
+            size = self.burst_sizes[k % len(self.burst_sizes)]
+            for _ in range(min(int(size), n - i)):
+                times.append(t)
+                i += 1
+            t += self.gap_s
+            k += 1
+        return np.asarray(times)
+
+    def __iter__(self) -> Iterator[Tuple[float, np.ndarray, int]]:
+        ts = self.arrival_times()
+        for i in range(self.n_requests):
+            img, label = self.image_at(i)
+            yield float(ts[i]), img, label
+
+
+@dataclass(frozen=True)
 class FileTokenDataset:
     """Memory-mapped flat token file (.npy int32/uint16): the production
     path. Examples are fixed-length windows; window k of batch step s is

@@ -17,7 +17,7 @@ from repro.engine.plan import (
     plan_conv_layer,
     plan_model,
 )
-from repro.engine.execute import run_conv2d, run_conv_layer
+from repro.engine.execute import executable_for, run_conv2d, run_conv_layer
 from repro.engine.autotune import (
     TuneResult,
     tune_conv_layer,
@@ -32,6 +32,7 @@ __all__ = [
     "ExecutionPolicy",
     "ModelPlan",
     "TuneResult",
+    "executable_for",
     "plan_conv_layer",
     "plan_model",
     "policy_from_legacy",

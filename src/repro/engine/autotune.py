@@ -54,7 +54,9 @@ from repro.kernels.trim_conv2d import _vmem_bytes
 #: Bump when plan semantics change (new schedule fields, kernel geometry
 #: changes, …): cache files with a different version are ignored with a
 #: warning, so stale winners never silently misconfigure new kernels.
-PLAN_CACHE_VERSION = 1
+#: v2: layer keys gained the batch axis ``n{N}`` — a schedule measured at
+#: N=1 is not a winner under a loaded server's batch buckets.
+PLAN_CACHE_VERSION = 2
 
 #: The policy fields a persisted schedule may override.
 SCHEDULE_FIELDS = ("substrate", "tile_h", "tile_w", "block_c", "block_f")
@@ -107,18 +109,24 @@ def layer_key(
     w_sz: int,
     out_sz: int,
     emulate_hw: bool,
+    batch: int = 1,
 ) -> str:
     """The layer's plan-cache key: geometry + dtype byte sizes + epilogue.
+
+    ``batch`` is the batch size the schedule was measured at — a serving
+    bucket runs N images per call, and the winning schedule can differ
+    from the N=1 winner (the serving core plans each bucket with its own
+    batch, so each bucket gets its own persisted winner).
 
     Backend, device kind, and code version live at the cache-file level
     (:func:`cache_path`, ``PLAN_CACHE_VERSION``) — together they complete
     the key the issue tracker calls (layer geometry, dtype, epilogue kind,
-    backend + device kind, code version).
+    batch, backend + device kind, code version).
     """
     pad = "same" if padding is None else str(padding)
     epi = f"{int(relu)}{int(has_bias)}.{requant_kind or 'none'}"
     return (
-        f"conv2d h{x_hw[0]}x{x_hw[1]} c{c_in} k{k} f{c_out} "
+        f"conv2d n{batch} h{x_hw[0]}x{x_hw[1]} c{c_in} k{k} f{c_out} "
         f"s{stride} p{pad} g{groups} ep{epi} "
         f"sz{in_sz}.{w_sz}.{out_sz} emu{int(emulate_hw)}"
     )
@@ -377,16 +385,19 @@ def _measure_plan(
     in_sz: int,
     warmup: int = 1,
     reps: int = 5,
+    batch: int = 1,
 ) -> Tuple[float, np.ndarray]:
     """Compile ``plan`` once via ``execute.run_conv2d``, then time it.
 
     Returns (median wall-clock in us over ``reps`` timed calls after
     ``warmup`` extra calls, output as a numpy array for the bit-identity
-    gate).  Inputs are synthesized from the plan: uint8 x / int8 w for the
-    integer lane (``in_sz == 1``), bf16/f32 otherwise.
+    gate).  Inputs are synthesized from the plan — ``batch`` images of
+    uint8 x / int8 w for the integer lane (``in_sz == 1``), bf16/f32
+    otherwise — so a schedule tuned for a serving bucket is measured at
+    that bucket's batch size.
     """
     key = jax.random.PRNGKey(0)
-    x_shape = (1, plan.x_hw[0], plan.x_hw[1], plan.c_in)
+    x_shape = (int(batch), plan.x_hw[0], plan.x_hw[1], plan.c_in)
     w_shape = (plan.k, plan.k, plan.c_in // plan.groups, plan.c_out)
     F = plan.c_out
     requant = None
@@ -446,15 +457,15 @@ def aggregate_pair(ta, tb):
     return float(np.min(ta)), float(np.min(tb)), ratio
 
 
-def _measure_pair(plan_a, plan_b, *, in_sz: int, reps: int = 5):
+def _measure_pair(plan_a, plan_b, *, in_sz: int, reps: int = 5, batch: int = 1):
     """Alternate single-rep measurements of two plans; aggregate with
     :func:`aggregate_pair`.  Returns (us_a, us_b, ratio_b_over_a)."""
-    _measure_plan(plan_a, in_sz=in_sz, warmup=0, reps=1)  # both warm
-    _measure_plan(plan_b, in_sz=in_sz, warmup=0, reps=1)
+    _measure_plan(plan_a, in_sz=in_sz, warmup=0, reps=1, batch=batch)  # warm
+    _measure_plan(plan_b, in_sz=in_sz, warmup=0, reps=1, batch=batch)
     ta, tb = [], []
     for _ in range(max(reps, 1)):
-        ta.append(_measure_plan(plan_a, in_sz=in_sz, warmup=0, reps=1)[0])
-        tb.append(_measure_plan(plan_b, in_sz=in_sz, warmup=0, reps=1)[0])
+        ta.append(_measure_plan(plan_a, in_sz=in_sz, warmup=0, reps=1, batch=batch)[0])
+        tb.append(_measure_plan(plan_b, in_sz=in_sz, warmup=0, reps=1, batch=batch)[0])
     return aggregate_pair(ta, tb)
 
 
@@ -519,6 +530,7 @@ def tune_conv_layer(
     w_sz: int = 4,
     out_sz: int = 4,
     policy: ExecutionPolicy = ExecutionPolicy(),
+    batch: int = 1,
     warmup: int = 1,
     reps: int = 5,
     allow_inexact: bool = False,
@@ -528,11 +540,13 @@ def tune_conv_layer(
     """Tune one conv layer: measure the candidates, pick + persist a winner.
 
     Unless ``force``, a persisted winner for this key is returned as-is
-    (``cached=True``, no re-measurement).  Candidates whose output is not
-    bit-identical to the default plan's are discarded unless
-    ``allow_inexact`` (then a float-tolerance ``allclose`` gate applies
-    instead); among survivors the fastest wins, but only if it beats the
-    default by more than ``MIN_GAIN`` — otherwise the default ships.
+    (``cached=True``, no re-measurement).  ``batch`` is part of the cache
+    key and sizes the synthesized measurement inputs (the serving buckets
+    tune per batch size).  Candidates whose output is not bit-identical to
+    the default plan's are discarded unless ``allow_inexact`` (then a
+    float-tolerance ``allclose`` gate applies instead); among survivors
+    the fastest wins, but only if it beats the default by more than
+    ``MIN_GAIN`` — otherwise the default ships.
     """
     kw = dict(
         stride=stride,
@@ -546,7 +560,7 @@ def tune_conv_layer(
         out_sz=out_sz,
     )
     key = layer_key(
-        x_hw, c_in, k, c_out, emulate_hw=policy.resolve().emulate_hw, **kw
+        x_hw, c_in, k, c_out, emulate_hw=policy.resolve().emulate_hw, batch=batch, **kw
     )
     if not force:
         entry = _load_plans(cache_path()).get(key)
@@ -583,13 +597,15 @@ def tune_conv_layer(
     plans = list(dict.fromkeys(build(p) for p in policies))
     default_plan = plans[0]
     us_default, ref_out = _measure_plan(
-        default_plan, in_sz=in_sz, warmup=warmup, reps=reps
+        default_plan, in_sz=in_sz, warmup=warmup, reps=reps, batch=batch
     )
     timings = [CandidateTiming(_schedule_of_plan(default_plan), us_default, True)]
     best_plan, best_us = default_plan, us_default
     for plan in plans[1:]:
         try:
-            us, out = _measure_plan(plan, in_sz=in_sz, warmup=warmup, reps=reps)
+            us, out = _measure_plan(
+                plan, in_sz=in_sz, warmup=warmup, reps=reps, batch=batch
+            )
         except Exception as e:
             # Candidates come from an *estimated* cost model; one whose
             # real footprint the compiler rejects (VMEM overflow, …) is
@@ -623,7 +639,7 @@ def tune_conv_layer(
         # against two timings taken minutes apart on a drifting machine.
         try:
             us_d2, us_b2, ratio = _measure_pair(
-                default_plan, best_plan, in_sz=in_sz, reps=reps
+                default_plan, best_plan, in_sz=in_sz, reps=reps, batch=batch
             )
         except Exception:  # challenger died on re-measure: default ships
             ratio = float("inf")
@@ -670,11 +686,14 @@ def tuned_schedule(
     w_sz: int,
     out_sz: int,
     policy: ExecutionPolicy,
+    batch: int = 1,
 ) -> Optional[Dict[str, object]]:
     """The schedule ``plan_conv_layer`` should apply under ``policy.tuning``.
 
     "cached": the persisted winner or None (default plan).  "auto": the
     persisted winner, tuning (measuring) once on a miss and persisting.
+    ``batch`` selects the batch-specific winner (a plan built for a
+    serving bucket looks up the schedule measured at that bucket's N).
     """
     kw = dict(
         stride=stride,
@@ -688,11 +707,13 @@ def tuned_schedule(
         out_sz=out_sz,
     )
     key = layer_key(
-        x_hw, c_in, k, c_out, emulate_hw=policy.resolve().emulate_hw, **kw
+        x_hw, c_in, k, c_out, emulate_hw=policy.resolve().emulate_hw, batch=batch, **kw
     )
     sched = load_schedule(key)
     if sched is None and policy.tuning == "auto":
-        sched = tune_conv_layer(x_hw, c_in, k, c_out, policy=policy, **kw).schedule
+        sched = tune_conv_layer(
+            x_hw, c_in, k, c_out, policy=policy, batch=batch, **kw
+        ).schedule
     return sched
 
 
@@ -707,7 +728,8 @@ def tune_model(
 
     Returns ``[(layer label, TuneResult), ...]``; repeated identical
     layers hit the plan cache after their first tuning.  ``tune_kw``
-    forwards to :func:`tune_conv_layer` (``reps``, ``force``, …).
+    forwards to :func:`tune_conv_layer` (``reps``, ``force``, ``batch`` —
+    pass the serving bucket's batch size to tune the model for it, …).
     """
     if datapath not in ("float", "int8"):
         raise ValueError(f"datapath {datapath!r} not in ('float', 'int8')")

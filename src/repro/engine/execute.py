@@ -17,7 +17,7 @@ benchmarks call — nothing above this layer re-derives kernel kwargs.
 from __future__ import annotations
 
 import functools
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -202,6 +202,33 @@ def forward(plan: ModelPlan, params, images: jax.Array) -> jax.Array:
     return x
 
 
+def serve_forward(plan: ModelPlan, params, images: jax.Array) -> jax.Array:
+    """Batch-invariant :func:`forward` for the serving executables.
+
+    The conv stack is already batch-invariant (each image's kernels see
+    only that image).  The FC head's batched GEMM is not: matmul kernels
+    block differently per row count, so row i of an (N,K)@(K,F) product
+    need not bit-match the (1,K)@(K,F) result.  Serving guarantees
+    bucketed == unbatched per image bit-exactly, so the head runs per
+    image via ``lax.map`` — identical accumulation order at every batch
+    size, for ~1% of VGG-16's MACs (the convs dominate).
+    """
+    x = images
+    for i, lp in enumerate(plan.layers):
+        x = run_conv_layer(lp, params["conv"][i], x)
+    x = x.reshape(x.shape[0], -1)
+
+    def head(row):
+        h = row
+        for j, fc in enumerate(params["fc"]):
+            h = h @ fc["kernel"].astype(h.dtype) + fc["bias"].astype(h.dtype)
+            if j < len(params["fc"]) - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    return jax.lax.map(head, x)
+
+
 def loss(plan: ModelPlan, params, batch):
     logits = forward(plan, params, batch["images"])
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
@@ -315,3 +342,82 @@ def calibrate_requant(
         if lp.pool:
             x = max_pool2x2(x)
     return pairs
+
+
+# ---------------------------------------------------------------------------
+# Serving executables: ahead-of-time compiles per (plan, batch, datapath)
+# ---------------------------------------------------------------------------
+
+
+#: Compile ledger: (plan, batch, datapath) -> number of times an executable
+#: was actually built.  ``lru_cache`` hits never touch it, so the serving
+#: tests can assert each (ModelPlan, bucket) executable compiled exactly
+#: once across a whole request stream.
+EXECUTABLE_COMPILES: Dict[Tuple[ModelPlan, int, str], int] = {}
+
+
+@functools.lru_cache(maxsize=None)
+def executable_for(plan: ModelPlan, batch: int, datapath: str = "float"):
+    """AOT-compile ``plan``'s forward for one static batch size (cached).
+
+    ``jax.jit(...).lower(shapes).compile()`` pins the executable to exactly
+    ``(batch, H, W, C)`` inputs — a serving loop calling it structurally
+    cannot retrace, which is the no-retrace-under-load guarantee
+    (DESIGN.md §8).  Returns the compiled callable:
+
+    - ``datapath="float"``: ``compiled(params, images_f32) -> logits``
+      (param shapes via ``jax.eval_shape`` over ``init_cnn``; runs
+      :func:`serve_forward` — the batch-invariant head — so per-image
+      outputs are bit-identical across buckets);
+    - ``datapath="int8"``: ``compiled(qparams, images_u8, requant) ->
+      int32 feature map`` — ``requant`` is the calibrated per-layer list of
+      per-channel (mult, shift) int32 pairs and is *required*: the
+      uncalibrated dynamic-shift path requantizes off ``psum.max()`` over
+      the whole batch, so its per-image outputs depend on batch
+      composition and can never be served from padded buckets.
+
+    Cached per (plan, batch, datapath); equal plans share executables.
+    """
+    if datapath not in ("float", "int8"):
+        raise ValueError(f"datapath {datapath!r} not in ('float', 'int8')")
+    cfg = plan.cfg
+    H, W = cfg.input_hw
+    C = plan.layers[0].c_in
+    batch = int(batch)
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if datapath == "float":
+        from repro.nn.conv import init_cnn
+
+        pshapes = jax.eval_shape(lambda k: init_cnn(k, cfg), jax.random.PRNGKey(0))
+        img = jax.ShapeDtypeStruct((batch, H, W, C), jnp.float32)
+        compiled = (
+            jax.jit(lambda p, x: serve_forward(plan, p, x))
+            .lower(pshapes, img)
+            .compile()
+        )
+    else:
+        # int8 param shapes come straight from the config (quantize_cnn
+        # concretizes scales, so it is not eval_shape-able).
+        qshapes = {
+            "conv": [
+                {"kernel": jax.ShapeDtypeStruct((l.K, l.K, l.M, l.N), jnp.int8)}
+                for l in cfg.layers
+            ]
+        }
+        rshapes = [
+            (
+                jax.ShapeDtypeStruct((l.N,), jnp.int32),
+                jax.ShapeDtypeStruct((l.N,), jnp.int32),
+            )
+            for l in cfg.layers[:-1]
+        ]
+        img = jax.ShapeDtypeStruct((batch, H, W, C), jnp.uint8)
+        compiled = (
+            jax.jit(lambda qp, x, rq: forward_int8(plan, qp, x, requant=rq))
+            .lower(qshapes, img, rshapes)
+            .compile()
+        )
+    key = (plan, batch, datapath)
+    EXECUTABLE_COMPILES[key] = EXECUTABLE_COMPILES.get(key, 0) + 1
+    return compiled

@@ -134,6 +134,7 @@ def plan_conv_layer(
     w_sz: int = 4,
     out_sz: int = 4,
     policy: ExecutionPolicy = ExecutionPolicy(),
+    batch: int = 1,
 ) -> ConvLayerPlan:
     """Resolve one layer's static schedule under ``policy`` (cached).
 
@@ -144,6 +145,9 @@ def plan_conv_layer(
     runtime arguments (per-channel calibrations are traced arrays).
     ``in_sz``/``w_sz``/``out_sz`` are element byte sizes for the VMEM
     width-tile auto-pick (pass the real itemsizes for non-f32 datapaths).
+    ``batch`` only selects which batch-specific autotuner winner applies
+    (tuned-plan cache keys carry the batch axis); it is not a field of the
+    resulting plan — kernels take the batch from the runtime array.
 
     When ``policy.tuning`` is "cached" or "auto" the persisted autotuner
     winner for this layer's cache key is applied transparently on top of
@@ -177,6 +181,7 @@ def plan_conv_layer(
             w_sz=w_sz,
             out_sz=out_sz,
             policy=pol,
+            batch=batch,
         )
         pol = pol.with_overrides(tuning="off")
         if schedule is not None:
@@ -251,6 +256,12 @@ class ModelPlan:
     cfg: object
     policy: ExecutionPolicy
     layers: Tuple[ConvLayerPlan, ...]
+    #: Batch size the per-layer tuned schedules were selected for (the
+    #: autotuner's cache keys carry a batch axis).  Kernels still take the
+    #: batch from the runtime array — this only picks which persisted
+    #: winners the layer plans baked in, so a serving bucket's plan can
+    #: differ from the N=1 plan.
+    batch: int = 1
 
     def init(self, key):
         from repro.nn.conv import init_cnn
@@ -298,8 +309,28 @@ class ModelPlan:
         sizes for the VMEM tile pick — what ``forward_int8`` actually runs
         and what its benchmark/dry-run records should describe."""
         return plan_model(
-            self.cfg, self.policy, c_in=self.layers[0].c_in, datapath="int8"
+            self.cfg,
+            self.policy,
+            c_in=self.layers[0].c_in,
+            datapath="int8",
+            batch=self.batch,
         )
+
+    def executable_for(self, batch: int, datapath: str = "float"):
+        """Ahead-of-time-compiled model forward for one static batch size.
+
+        The serving hook (DESIGN.md §8): ``jax.jit(...).lower(...).compile()``
+        over this plan's forward at exactly ``(batch, H, W, C)``, cached per
+        (plan, batch, datapath) in ``execute.executable_for`` — a request
+        stream served through the returned callable structurally cannot
+        retrace.  "float" → ``compiled(params, images_f32)``;
+        "int8" → ``compiled(qparams, images_u8, requant)`` with calibrated
+        per-layer (mult, shift) pairs (the dynamic-shift requant path is
+        batch-dependent and therefore not servable from buckets).
+        """
+        from repro.engine import execute
+
+        return execute.executable_for(self, batch, datapath)
 
     def describe(self) -> Tuple[Dict[str, object], ...]:
         return tuple(lp.describe() for lp in self.layers)
@@ -312,6 +343,7 @@ def plan_model(
     c_in: Optional[int] = None,
     datapath: str = "float",
     layer_substrates: Optional[Tuple[Optional[str], ...]] = None,
+    batch: int = 1,
 ) -> ModelPlan:
     """Compile a ``CNNConfig`` into a :class:`ModelPlan` (cached).
 
@@ -323,6 +355,8 @@ def plan_model(
     bias/ReLU, f32 byte sizes) or "int8" (the paper's integer inference
     lane: bias-free, fused mult+shift requant on every non-last layer,
     uint8/int8 byte sizes — the last layer emits raw int32 psums).
+    ``batch`` selects batch-specific autotuner winners per layer (serving
+    buckets plan at their own N); the default 1 keeps historical plans.
 
     ``layer_substrates`` pins per-layer substrates (a tuple with one entry
     per conv layer; ``None`` entries keep the policy's choice), so a
@@ -368,7 +402,8 @@ def plan_model(
                 w_sz=1 if int8 else 4,
                 out_sz=(4 if i == last_i else 1) if int8 else 4,
                 policy=lpol,
+                batch=batch,
             )
         )
         c = l.N
-    return ModelPlan(cfg=cfg, policy=policy, layers=tuple(plans))
+    return ModelPlan(cfg=cfg, policy=policy, layers=tuple(plans), batch=int(batch))

@@ -1,7 +1,18 @@
 """Serving launcher: batched prefill + greedy decode loop.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \\
       --batch 4 --prompt-len 32 --gen 16
+
+A thin shim over the shared serving core (``repro.serve.ServeEngine``,
+DESIGN.md §8): the prefill and decode step executables are ahead-of-time
+compiled once through the engine's backend/device-kind-stamped executable
+cache (``jit().lower().compile()``, like the CNN bucket executables), so
+the decode loop never retraces and no compile lands inside a timer.
+
+Throughput accounting reports prefill latency and decode tok/s
+*separately*: the old single ``tok/s`` number divided ``gen-1`` decode
+steps by a timer that excluded prefill (and hid the first decode step's
+compile inside it), overstating short-gen runs.
 """
 from __future__ import annotations
 
@@ -17,6 +28,7 @@ from repro.distributed import activate_mesh
 from repro.distributed.steps import make_decode_step, make_prefill_step
 from repro.launch.mesh import make_host_mesh
 from repro.nn.models import build_model
+from repro.serve import ServeEngine
 
 
 def main() -> None:
@@ -37,6 +49,8 @@ def main() -> None:
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
 
+    eng = ServeEngine(name=f"lm-{cfg.name}")
+    shape_tag = f"b{args.batch} p{args.prompt_len}"
     with activate_mesh(mesh), mesh:
         params = model.init(jax.random.PRNGKey(0))
         if cfg.family == "encdec":
@@ -46,30 +60,52 @@ def main() -> None:
                                      cross_len=args.prompt_len,
                                      dtype=cfg.dtype)
             bos = jnp.zeros((args.batch, 1), jnp.int32)
-            logits, cache = jax.jit(model.prefill)(params, src, bos, cache)
+            prefill = eng.executable(
+                eng.executable_key(cfg.name, "prefill", shape_tag),
+                lambda: jax.jit(model.prefill)
+                .lower(params, src, bos, cache).compile())
+            t0 = time.perf_counter()
+            logits, cache = prefill(params, src, bos, cache)
+            jax.block_until_ready(logits)
+            prefill_s = time.perf_counter() - t0
             pos0 = 1
         else:
             cache = model.init_cache(args.batch, max_len, dtype=cfg.dtype)
-            prefill = jax.jit(make_prefill_step(model))
-            logits, cache = prefill(params,
-                                    {"tokens": jnp.asarray(prompts)}, cache)
+            batch0 = {"tokens": jnp.asarray(prompts)}
+            prefill = eng.executable(
+                eng.executable_key(cfg.name, "prefill", shape_tag),
+                lambda: jax.jit(make_prefill_step(model))
+                .lower(params, batch0, cache).compile())
+            t0 = time.perf_counter()
+            logits, cache = prefill(params, batch0, cache)
+            jax.block_until_ready(logits)
+            prefill_s = time.perf_counter() - t0
             pos0 = args.prompt_len
 
-        decode = jax.jit(make_decode_step(model))
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         out_tokens = [tok]
-        t0 = time.perf_counter()
-        for i in range(args.gen - 1):
-            logits, cache = decode(params, tok, cache,
-                                   jnp.int32(pos0 + i))
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            out_tokens.append(tok)
-        jax.block_until_ready(tok)
-        dt = time.perf_counter() - t0
+        decode_s = 0.0
+        if args.gen > 1:
+            # Compiled BEFORE the timed loop: the old code jitted lazily,
+            # so the first decode step's compile landed inside the timer.
+            decode = eng.executable(
+                eng.executable_key(cfg.name, "decode", f"b{args.batch}"),
+                lambda: jax.jit(make_decode_step(model))
+                .lower(params, tok, cache, jnp.int32(pos0)).compile())
+            t0 = time.perf_counter()
+            for i in range(args.gen - 1):
+                logits, cache = decode(params, tok, cache,
+                                       jnp.int32(pos0 + i))
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                out_tokens.append(tok)
+            jax.block_until_ready(tok)
+            decode_s = time.perf_counter() - t0
     gen = np.stack([np.asarray(t) for t in out_tokens], 1)
-    tps = args.batch * (args.gen - 1) / max(dt, 1e-9)
-    print(f"[serve] generated {gen.shape} tokens; "
-          f"{tps:.1f} tok/s (host-CPU decode, batch {args.batch})")
+    decode_tps = args.batch * (args.gen - 1) / max(decode_s, 1e-9)
+    print(f"[serve] generated {gen.shape} tokens; prefill "
+          f"{prefill_s * 1e3:.1f} ms (batch {args.batch}, prompt "
+          f"{args.prompt_len}); decode {decode_tps:.1f} tok/s over "
+          f"{args.gen - 1} steps (host-CPU decode, batch {args.batch})")
     print("[serve] sample:", gen[0][:16].tolist())
 
 

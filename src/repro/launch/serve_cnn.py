@@ -1,0 +1,156 @@
+"""Production CNN serving CLI on the shared serving core (DESIGN.md §8).
+
+  PYTHONPATH=src python -m repro.launch.serve_cnn --arch vgg16 --smoke \\
+      --buckets 1,4,16 --requests 64 --rate 200 --max-delay-ms 5
+
+Compiles one executable per (ModelPlan, batch bucket) up front
+(``ModelPlan.executable_for`` → ahead-of-time ``jit().lower().compile()``,
+so the request stream cannot retrace), then serves a deterministic
+synthetic request stream (``data.pipeline.SyntheticRequestStream``)
+through pad-and-bucket admission with deadline flush, and writes the
+per-bucket metrics JSON.  Execution flags (``--substrate`` / ``--int8`` /
+``--tuning``) come from the shared launcher parent (``launch.cli``) —
+``--tuning cached`` plans each bucket off its batch-specific persisted
+autotuner winners.  ``--int8`` serves the fused integer datapath off
+calibrated per-channel requant pairs (the only batch-shape-independent
+int8 lane).  ``--check`` (the CI serve-smoke gate) exits non-zero unless
+every bucket flushed at least once, every request got a result, metrics
+are non-empty, and no executable compiled more than once.
+"""
+
+import argparse
+import json
+import sys
+
+import jax
+
+from repro.configs import CNN_REGISTRY, CNN_SMOKES
+from repro.data.pipeline import SyntheticRequestStream
+from repro.engine import plan_model
+from repro.launch.cli import execution_parent, policy_from_args
+from repro.serve import ServeEngine, serve_stream
+
+
+def make_stream(cfg, args, buckets):
+    """The synthetic request stream for one serve run: the bursts process
+    cycles the bucket sizes (with gaps past the flush deadline), so every
+    bucket flushes at least once — what the CI smoke asserts."""
+    return SyntheticRequestStream(
+        hw=cfg.input_hw,
+        channels=cfg.layers[0].M,
+        n_classes=cfg.n_classes,
+        n_requests=args.requests,
+        rate_hz=args.rate,
+        seed=args.seed,
+        process=args.arrival,
+        burst_sizes=tuple(buckets),
+        gap_s=4.0 * args.max_delay_ms / 1e3,
+        dtype="uint8" if args.int8 else "float32",
+    )
+
+
+def build_engine(cfg, policy, buckets, *, int8=False, seed=0, calib_batch=8):
+    """ModelPlan → params (+ int8 quantization/calibration) → warm engine."""
+    plan = plan_model(cfg, policy)
+    params = plan.init(jax.random.PRNGKey(seed))
+    if not int8:
+        return ServeEngine.for_model_plan(plan, params, buckets=buckets)
+    qparams, _ = plan.quantize(params)
+    sample = SyntheticRequestStream(
+        hw=cfg.input_hw, channels=cfg.layers[0].M, n_classes=cfg.n_classes,
+        seed=seed, dtype="uint8").sample_batch(calib_batch)
+    requant = plan.calibrate_requant(qparams, sample)
+    return ServeEngine.for_model_plan(
+        plan, qparams, buckets=buckets, datapath="int8", requant=requant)
+
+
+def check_run(engine, metrics, n_requests) -> list:
+    """The --check assertions; returns a list of failure strings."""
+    fails = []
+    for b in engine.buckets:
+        if metrics.flushes(b) < 1:
+            fails.append(f"bucket {b} never flushed")
+    if metrics.total_images != n_requests:
+        fails.append(
+            f"served {metrics.total_images} of {n_requests} requests")
+    for r in metrics.requests:
+        if r.result is None:
+            fails.append(f"request {r.rid} has no result")
+            break
+    bad = {k: v for k, v in engine.compile_counts.items() if v != 1}
+    if bad:
+        fails.append(f"executables compiled more than once: {bad}")
+    if not metrics.snapshot()["per_bucket"]:
+        fails.append("metrics snapshot is empty")
+    return fails
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__.split("\n")[0],
+        parents=[execution_parent(arch_choices=CNN_REGISTRY,
+                                  arch_default="vgg16")])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny arch variant (CNN_SMOKES) for CI")
+    ap.add_argument("--buckets", default="1,4,16,64",
+                    help="static batch buckets, comma-separated")
+    ap.add_argument("--max-delay-ms", type=float, default=5.0,
+                    help="deadline: oldest request ships within this")
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="mean arrival rate (req/s) for poisson/uniform")
+    ap.add_argument("--arrival", choices=("poisson", "uniform", "bursts"),
+                    default="bursts",
+                    help="arrival process (bursts cycles the bucket sizes)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="experiments/serve/metrics.json")
+    ap.add_argument("--check", action="store_true",
+                    help="assert >=1 flush per bucket, all requests served, "
+                         "compile-once; exit non-zero on failure (CI gate)")
+    args = ap.parse_args()
+
+    policy = policy_from_args(args)
+    cfg = (CNN_SMOKES if args.smoke else CNN_REGISTRY)[args.arch]
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    datapath = "int8" if args.int8 else "float"
+
+    engine = build_engine(cfg, policy, buckets, int8=args.int8, seed=args.seed)
+    metrics = serve_stream(engine, make_stream(cfg, args, buckets),
+                           max_delay_s=args.max_delay_ms / 1e3)
+    snap = metrics.snapshot()
+
+    payload = metrics.write(args.out, extra={
+        "arch": cfg.name,
+        "datapath": datapath,
+        "arrival": args.arrival,
+        "requests": args.requests,
+        "max_delay_ms": args.max_delay_ms,
+        "backend": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+        "plan": list(engine.plan.describe()),
+        "executables": dict(engine.compile_counts),
+    })
+
+    tot = snap["totals"]
+    print(f"[serve_cnn] {cfg.name} {datapath} buckets={list(buckets)} "
+          f"served {tot['images']} images in {tot.get('wall_s', 0):.3f}s "
+          f"({tot.get('images_per_s', 0):.1f} img/s, p99 {tot['p99_ms']:.1f} ms, "
+          f"pad waste {tot['pad_waste']:.1%})")
+    for b, rec in snap["per_bucket"].items():
+        print(f"[serve_cnn]   bucket {b:>3}: {rec['flushes']} flushes, "
+              f"{rec['images_per_s']:.1f} img/s, p99 {rec['p99_ms']:.2f} ms")
+    print(f"[serve_cnn] wrote {args.out} "
+          f"({len(json.dumps(payload))} bytes)")
+
+    if args.check:
+        fails = check_run(engine, metrics, args.requests)
+        if fails:
+            for f in fails:
+                print(f"[serve_cnn] CHECK FAILED: {f}", file=sys.stderr)
+            sys.exit(1)
+        print("[serve_cnn] check OK: every bucket flushed, all requests "
+              "served, every executable compiled exactly once")
+
+
+if __name__ == "__main__":
+    main()

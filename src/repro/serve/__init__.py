@@ -1,0 +1,22 @@
+"""The shared serving core (DESIGN.md §8).
+
+``ServeEngine`` (compile-once executables per (ModelPlan, batch bucket) +
+the backend/device-kind-stamped executable cache the LM launcher shares) +
+``BucketBatcher``/``pad_batch`` (pad-and-bucket admission with deadline
+flush) + ``ServeMetrics`` (per-bucket images/sec, p50/p99, queue depth,
+pad waste) + ``serve_stream`` (the open-loop driver).  Both launchers —
+``repro.launch.serve_cnn`` and ``repro.launch.serve`` — run on this.
+"""
+
+from repro.serve.batching import BucketBatcher, Request, pad_batch
+from repro.serve.engine import ServeEngine, serve_stream
+from repro.serve.metrics import ServeMetrics
+
+__all__ = [
+    "BucketBatcher",
+    "Request",
+    "ServeEngine",
+    "ServeMetrics",
+    "pad_batch",
+    "serve_stream",
+]

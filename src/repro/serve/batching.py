@@ -1,0 +1,122 @@
+"""Pad-and-bucket admission for the serving core (DESIGN.md §8).
+
+Incoming requests land in one FIFO queue; batches ship on a small STATIC
+set of batch shapes (the buckets), so every flush hits an executable that
+was compiled ahead of time — a request stream can never retrace.  A flush
+happens when (a) the queue can fill the largest bucket, or (b) the oldest
+request has waited ``max_delay_s`` — the deadline flush: a half-full
+bucket ships into the smallest bucket that covers it, padding the rest.
+
+:class:`BucketBatcher` is a pure state machine over an injectable clock
+(``submit`` / ``poll`` / ``next_deadline``), so admission logic is tested
+deterministically with a fake clock; the async driver around it lives in
+``repro.serve.engine.serve_stream``.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One queued inference request; the serve loop fills ``result``."""
+
+    rid: int
+    payload: Any
+    t_submit: float
+    result: Any = field(default=None, repr=False)
+
+
+class BucketBatcher:
+    """FIFO admission queue that ships batches on static bucket shapes."""
+
+    def __init__(
+        self,
+        buckets: Sequence[int] = (1, 4, 16, 64),
+        max_delay_s: float = 0.005,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        if not self.buckets or self.buckets[0] < 1:
+            raise ValueError(f"buckets must be positive ints, got {buckets!r}")
+        self.max_delay_s = float(max_delay_s)
+        self._clock = clock
+        self._q: Deque[Request] = deque()
+        self._lock = threading.Lock()
+        self._rid = itertools.count()
+
+    @property
+    def depth(self) -> int:
+        return len(self._q)
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket covering ``n`` requests (the pad target); ``n``
+        beyond the largest bucket maps to the largest (callers split)."""
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def submit(self, payload: Any, now: Optional[float] = None) -> Request:
+        """Enqueue one request; returns its handle (``result`` lands on it
+        when the serve loop flushes the bucket that carries it)."""
+        r = Request(next(self._rid), payload,
+                    self._clock() if now is None else float(now))
+        with self._lock:
+            self._q.append(r)
+        return r
+
+    def next_deadline(self) -> Optional[float]:
+        """Absolute clock time the oldest request must ship by (None when
+        the queue is empty) — what the serve loop sleeps against."""
+        with self._lock:
+            if not self._q:
+                return None
+            return self._q[0].t_submit + self.max_delay_s
+
+    def poll(
+        self, now: Optional[float] = None, force: bool = False
+    ) -> Optional[Tuple[int, List[Request]]]:
+        """Take one shippable batch: (bucket, requests) or None.
+
+        Ships the largest bucket whenever the queue can fill it; ships
+        whatever is pending (into the smallest covering bucket) when the
+        oldest request's deadline passed or ``force`` (stream drain).
+        """
+        now = self._clock() if now is None else float(now)
+        with self._lock:
+            n = len(self._q)
+            if n == 0:
+                return None
+            if n >= self.buckets[-1]:
+                take = self.buckets[-1]
+            elif force or now - self._q[0].t_submit >= self.max_delay_s:
+                take = n
+            else:
+                return None
+            reqs = [self._q.popleft() for _ in range(take)]
+        return self.bucket_for(len(reqs)), reqs
+
+
+def pad_batch(images: Sequence[np.ndarray], bucket: int) -> np.ndarray:
+    """Stack ``len(images) <= bucket`` HWC images into a (bucket, H, W, C)
+    array, zero-padding the empty slots.  Zero padding is safe because the
+    served executables are batch-independent per image (the float conv
+    stack and the *calibrated* int8 datapath) — asserted bit-exactly by
+    tests/test_serve.py."""
+    n = len(images)
+    if n == 0 or n > bucket:
+        raise ValueError(f"cannot pad {n} images into bucket {bucket}")
+    first = np.asarray(images[0])
+    out = np.zeros((bucket,) + first.shape, first.dtype)
+    for i, im in enumerate(images):
+        out[i] = im
+    return out

@@ -1,0 +1,228 @@
+"""The serving core: compile-once executables + the open-loop serve driver.
+
+:class:`ServeEngine` owns an executable cache keyed like ``tuned_plans/``
+entries — every key is stamped with ``backend-device_kind`` (an executable
+compiled for one hardware class is meaningless on another) plus the
+workload coordinates.  For CNN serving it holds one ahead-of-time compiled
+executable per (ModelPlan, batch bucket), built through the engine seam
+(``plan_model`` → ``ModelPlan.executable_for`` →
+``jax.jit(...).lower(...).compile()``), so a request stream structurally
+cannot retrace under load; the LM launcher (``repro.launch.serve``) parks
+its prefill/decode step executables in the same cache through the same
+compile-once registry.
+
+:func:`serve_stream` is the open-loop driver: it admits requests at their
+stream arrival times (sleeping to honor them, so queueing delay is real),
+flushes buckets on size or deadline through :class:`BucketBatcher`, and
+records :class:`ServeMetrics`.  Clock and sleep are injectable — the tests
+drive the whole loop on a fake clock.
+"""
+
+from __future__ import annotations
+
+import re
+import time
+from typing import Any, Callable, Dict, Iterable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.batching import BucketBatcher, pad_batch
+from repro.serve.metrics import ServeMetrics
+
+
+class ServeEngine:
+    """Compile-once executable cache + bucketed CNN inference."""
+
+    def __init__(self, name: str = "serve", buckets: Sequence[int] = (1, 4, 16, 64)):
+        self.name = name
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self._execs: Dict[str, Any] = {}
+        #: key -> number of times its build ran (the no-retrace ledger:
+        #: every value must stay 1 for the life of the engine).
+        self.compile_counts: Dict[str, int] = {}
+        self._plan = None
+        self._params = None
+        self._datapath = "float"
+        self._requant = None
+
+    # -- the executable cache -------------------------------------------
+
+    @staticmethod
+    def executable_key(*parts: object) -> str:
+        """Cache key for one executable: ``{backend}-{device_kind}`` stamp
+        (same slug rule as ``tuned_plans/`` file names) + the workload
+        coordinates (model/arch, datapath, bucket, …)."""
+        import jax
+
+        slug = re.sub(r"[^A-Za-z0-9_.-]+", "-", jax.devices()[0].device_kind)
+        stamp = f"{jax.default_backend()}-{slug}"
+        return " ".join((stamp,) + tuple(str(p) for p in parts))
+
+    def executable(self, key: str, build: Callable[[], Any]) -> Any:
+        """Compile-once registry: ``build`` runs at most once per key; every
+        later call returns the cached executable."""
+        if key not in self._execs:
+            self._execs[key] = build()
+            self.compile_counts[key] = self.compile_counts.get(key, 0) + 1
+        return self._execs[key]
+
+    # -- CNN bucket serving ---------------------------------------------
+
+    @classmethod
+    def for_model_plan(
+        cls,
+        plan,
+        params,
+        *,
+        buckets: Sequence[int] = (1, 4, 16, 64),
+        datapath: str = "float",
+        requant: Optional[Sequence[Tuple[Any, Any]]] = None,
+        warm: bool = True,
+    ) -> "ServeEngine":
+        """A serving engine for one :class:`~repro.engine.ModelPlan`.
+
+        ``params`` are the float params ("float") or the quantized int8
+        params ("int8").  The int8 lane *requires* calibrated ``requant``
+        (per-layer (mult, shift) pairs from ``plan.calibrate_requant``):
+        the uncalibrated dynamic-shift path requantizes off the whole
+        batch's ``psum.max()``, so a padded bucket would change per-image
+        outputs — exactly what serving must never do.  ``warm=True``
+        compiles every bucket's executable up front (production default:
+        all compilation happens before the first request).
+        """
+        if datapath not in ("float", "int8"):
+            raise ValueError(f"datapath {datapath!r} not in ('float', 'int8')")
+        if datapath == "int8" and requant is None:
+            raise ValueError(
+                "int8 serving requires calibrated requant pairs: the dynamic "
+                "(uncalibrated) requant path depends on batch composition and "
+                "cannot serve padded buckets bit-faithfully"
+            )
+        eng = cls(name=f"{plan.cfg.name}.{datapath}", buckets=buckets)
+        eng._plan = plan
+        eng._params = params
+        eng._datapath = datapath
+        eng._requant = None if requant is None else [tuple(p) for p in requant]
+        if warm:
+            eng.warmup()
+        return eng
+
+    @property
+    def plan(self):
+        """The base (N=1) ModelPlan this engine serves."""
+        return self._plan
+
+    def bucket_plan(self, bucket: int):
+        """The ModelPlan for one bucket: same cfg + policy, planned at the
+        bucket's batch size so batch-specific autotuner winners apply
+        (tuned-plan cache keys carry the batch axis)."""
+        from repro.engine import plan_model
+
+        p = self._plan
+        return plan_model(
+            p.cfg, p.policy, c_in=p.layers[0].c_in, batch=int(bucket)
+        )
+
+    def _bucket_exec(self, bucket: int):
+        plan = self.bucket_plan(bucket)
+        key = self.executable_key(plan.cfg.name, self._datapath, f"n{bucket}")
+        return self.executable(
+            key, lambda: plan.executable_for(int(bucket), datapath=self._datapath)
+        )
+
+    def warmup(self) -> None:
+        """Compile every bucket's executable (idempotent)."""
+        for b in self.buckets:
+            self._bucket_exec(b)
+
+    def bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"batch {n} exceeds the largest bucket {self.buckets[-1]}")
+
+    def run_bucket(self, bucket: int, images: np.ndarray):
+        """Run one already-padded (bucket, H, W, C) batch; returns the raw
+        device output (async — caller materializes)."""
+        ex = self._bucket_exec(bucket)
+        if self._datapath == "float":
+            return ex(self._params, images)
+        return ex(self._params, images, self._requant)
+
+    def infer(self, images: np.ndarray) -> np.ndarray:
+        """Pad ``n <= max(buckets)`` images into their bucket, run, slice
+        the padding back off — the synchronous single-shot entry point."""
+        n = int(images.shape[0])
+        b = self.bucket_for(n)
+        out = self.run_bucket(b, pad_batch(list(images), b))
+        return np.asarray(out)[:n]
+
+
+def serve_stream(
+    engine: ServeEngine,
+    stream: Iterable,
+    *,
+    max_delay_s: float = 0.005,
+    clock: Callable[[], float] = time.monotonic,
+    sleep: Callable[[float], None] = time.sleep,
+    batcher: Optional[BucketBatcher] = None,
+    metrics: Optional[ServeMetrics] = None,
+) -> ServeMetrics:
+    """Serve an arrival-timed request stream through ``engine``.
+
+    ``stream`` yields ``(t_arrival_s, image, ...)`` with arrivals as
+    offsets from loop start (``data.pipeline.SyntheticRequestStream``).
+    The loop sleeps until each arrival (flushing deadline-expired buckets
+    while it waits), submits, flushes any size-triggered batches, and
+    drains the queue at stream end.  Results land on each
+    :class:`~repro.serve.batching.Request` (``r.result``); returns the
+    filled :class:`ServeMetrics` (``wall_s`` set).
+    """
+    batcher = batcher or BucketBatcher(
+        engine.buckets, max_delay_s=max_delay_s, clock=clock
+    )
+    metrics = metrics or ServeMetrics(engine.buckets)
+    t0 = clock()
+    requests = []
+
+    def flush(force: bool = False) -> None:
+        while True:
+            got = batcher.poll(force=force)
+            if got is None:
+                return
+            bucket, reqs = got
+            depth = batcher.depth
+            t_a = clock()
+            out = np.asarray(
+                engine.run_bucket(bucket, pad_batch([r.payload for r in reqs],
+                                                    bucket))
+            )
+            t_b = clock()
+            for i, r in enumerate(reqs):
+                r.result = out[i]
+            metrics.record_flush(
+                bucket,
+                len(reqs),
+                batch_s=t_b - t_a,
+                latencies_s=[t_b - r.t_submit for r in reqs],
+                queue_depth=depth,
+            )
+
+    for item in stream:
+        t_arr, payload = float(item[0]), item[1]
+        while clock() - t0 < t_arr:
+            deadline = batcher.next_deadline()
+            now = clock()
+            if deadline is not None and deadline <= now:
+                flush()
+                continue
+            wait = t0 + t_arr - now
+            if deadline is not None:
+                wait = min(wait, deadline - now)
+            sleep(max(wait, 0.0))
+        requests.append(batcher.submit(payload))
+        flush()
+    flush(force=True)
+    metrics.wall_s = clock() - t0
+    metrics.requests = requests
+    return metrics

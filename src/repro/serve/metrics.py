@@ -1,0 +1,121 @@
+"""Serving metrics: per-bucket throughput, latency percentiles, pad waste.
+
+The TrIM paper's 453.6 GOPS peak (PAPER.md §V) is a sustained-load number,
+and the companion dataflow paper frames throughput-per-access as the metric
+that matters — both only measurable under load.  These are the software
+counters that make the reproduction's serving claims concrete: per-bucket
+images/sec (real images over engine wall-clock), request latency p50/p99
+(submit → result materialized), queue depth at flush time, and the
+pad-waste fraction the static buckets cost (padded slots / bucket slots).
+
+Snapshots are plain dicts → JSON: ``BENCH_serve.json`` records and the CI
+serve-smoke artifact both come from :meth:`ServeMetrics.snapshot`.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+
+@dataclass
+class _BucketStats:
+    flushes: int = 0
+    images: int = 0
+    padded: int = 0
+    batch_s: List[float] = field(default_factory=list)
+    latencies_s: List[float] = field(default_factory=list)
+    queue_depths: List[int] = field(default_factory=list)
+
+
+def _pctile(xs: Sequence[float], q: float) -> float:
+    import numpy as np
+
+    return float(np.percentile(np.asarray(xs, dtype=float), q)) if xs else 0.0
+
+
+class ServeMetrics:
+    """Accumulates per-bucket flush observations; snapshots to JSON."""
+
+    def __init__(self, buckets: Sequence[int]):
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self._b: Dict[int, _BucketStats] = {b: _BucketStats() for b in self.buckets}
+        self.wall_s: Optional[float] = None  # set by the serve loop
+
+    def record_flush(
+        self,
+        bucket: int,
+        n_real: int,
+        *,
+        batch_s: float,
+        latencies_s: Sequence[float],
+        queue_depth: int = 0,
+    ) -> None:
+        """One shipped batch: ``n_real`` requests padded into ``bucket``
+        slots, ``batch_s`` of engine wall-clock, per-request end-to-end
+        latencies, and the queue depth left behind at flush time."""
+        st = self._b.setdefault(int(bucket), _BucketStats())
+        st.flushes += 1
+        st.images += int(n_real)
+        st.padded += int(bucket) - int(n_real)
+        st.batch_s.append(float(batch_s))
+        st.latencies_s.extend(float(x) for x in latencies_s)
+        st.queue_depths.append(int(queue_depth))
+
+    @property
+    def total_images(self) -> int:
+        return sum(st.images for st in self._b.values())
+
+    def flushes(self, bucket: int) -> int:
+        st = self._b.get(int(bucket))
+        return st.flushes if st else 0
+
+    def snapshot(self) -> dict:
+        """The full metrics record (what the launchers/benchmarks emit)."""
+        per_bucket = {}
+        all_lat: List[float] = []
+        total_slots = 0
+        total_padded = 0
+        busy_s = 0.0
+        for b in sorted(self._b):
+            st = self._b[b]
+            busy = sum(st.batch_s)
+            busy_s += busy
+            total_slots += st.flushes * b
+            total_padded += st.padded
+            all_lat.extend(st.latencies_s)
+            per_bucket[str(b)] = {
+                "flushes": st.flushes,
+                "images": st.images,
+                "images_per_s": round(st.images / busy, 1) if busy else 0.0,
+                "p50_ms": round(_pctile(st.latencies_s, 50) * 1e3, 3),
+                "p99_ms": round(_pctile(st.latencies_s, 99) * 1e3, 3),
+                "pad_waste": round(st.padded / (st.flushes * b), 4)
+                if st.flushes
+                else 0.0,
+                "queue_depth_max": max(st.queue_depths, default=0),
+            }
+        totals = {
+            "images": self.total_images,
+            "flushes": sum(st.flushes for st in self._b.values()),
+            "pad_waste": round(total_padded / total_slots, 4) if total_slots else 0.0,
+            "p50_ms": round(_pctile(all_lat, 50) * 1e3, 3),
+            "p99_ms": round(_pctile(all_lat, 99) * 1e3, 3),
+            "busy_s": round(busy_s, 4),
+        }
+        if self.wall_s:
+            totals["wall_s"] = round(self.wall_s, 4)
+            totals["images_per_s"] = round(self.total_images / self.wall_s, 1)
+        return {"buckets": list(self.buckets), "per_bucket": per_bucket,
+                "totals": totals}
+
+    def write(self, path: str, extra: Optional[dict] = None) -> dict:
+        """Write ``snapshot()`` (plus ``extra`` stamp fields) as JSON."""
+        payload = dict(extra or {})
+        payload["metrics"] = self.snapshot()
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1)
+        return payload

@@ -41,10 +41,10 @@ def _fast_measure(monkeypatch, scripted=None, counter=None):
     honest), scripted per-substrate timings, optional call counting."""
     real = autotune._measure_plan
 
-    def fake(plan, *, in_sz, warmup=1, reps=5):
+    def fake(plan, *, in_sz, warmup=1, reps=5, batch=1):
         if counter is not None:
             counter.append(plan.substrate)
-        us, out = real(plan, in_sz=in_sz, warmup=0, reps=1)
+        us, out = real(plan, in_sz=in_sz, warmup=0, reps=1, batch=batch)
         if scripted is not None:
             us = scripted[plan.substrate]
         return us, out
@@ -251,6 +251,31 @@ def test_cache_key_sensitivity(plan_cache):
     epi = autotune.layer_key(*INT8_ARGS, emulate_hw=False,
                              **{**INT8_KW, "requant_kind": "shift"})
     assert len({base, geom, fdt, emu, epi}) == 5
+
+
+def test_cache_key_carries_batch_axis(plan_cache):
+    """Serving buckets tune independently: the layer key gained an ``n{N}``
+    batch axis in PLAN_CACHE_VERSION 2, so an N=16 winner never shadows the
+    N=1 one (a wide batch can prefer a different schedule)."""
+    k1 = autotune.layer_key(*INT8_ARGS, emulate_hw=False, **INT8_KW)
+    k4 = autotune.layer_key(*INT8_ARGS, emulate_hw=False, batch=4,
+                            **INT8_KW)
+    assert " n1 " in k1 and " n4 " in k4
+    assert k1 != k4
+
+
+def test_tune_at_batch_persists_batch_keyed_winner(plan_cache, monkeypatch):
+    _fast_measure(monkeypatch)
+    plan_conv_layer(*INT8_ARGS, **INT8_KW, batch=4,
+                    policy=ExecutionPolicy(tuning="auto"))
+    data = json.load(open(autotune.cache_path()))
+    [(key, _)] = list(data["plans"].items())
+    assert key == autotune.layer_key(*INT8_ARGS, emulate_hw=False, batch=4,
+                                     **INT8_KW)
+    # the N=1 lookup misses this winner (cached mode: default schedule)
+    lp1 = plan_conv_layer(*INT8_ARGS, **INT8_KW,
+                          policy=ExecutionPolicy(tuning="cached"))
+    assert not lp1.tuned
 
 
 def test_cache_file_per_device_kind(plan_cache, monkeypatch):

@@ -1,0 +1,307 @@
+"""The shared serving core (repro.serve, DESIGN.md §8).
+
+Covers: the BucketBatcher state machine on a fake clock (size flush,
+deadline flush, drain), pad_batch, the synthetic request stream's
+determinism and arrival processes, the serving bit-identity property
+(padded-and-bucketed output == unbatched N=1 output, float AND fused-int8
+lanes), the compile-once guarantee (ServeEngine.compile_counts and the
+engine-level EXECUTABLE_COMPILES ledger), the calibrated-requant
+requirement on the int8 lane, the full serve_stream loop on a fake clock,
+and ServeMetrics snapshot arithmetic.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+
+from repro.configs import CNN_SMOKES
+from repro.data.pipeline import SyntheticRequestStream
+from repro.engine import ExecutionPolicy, execute, plan_model
+from repro.serve import (BucketBatcher, ServeEngine, ServeMetrics, pad_batch,
+                         serve_stream)
+
+CFG = CNN_SMOKES["vgg16"]
+
+
+class FakeClock:
+    """Deterministic clock + sleep pair for driving the serve loop."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def sleep(self, dt: float) -> None:
+        self.t += max(dt, 0.0)
+
+
+def _stream(n=6, process="bursts", dtype="float32", seed=0, **kw):
+    return SyntheticRequestStream(
+        hw=CFG.input_hw, channels=CFG.layers[0].M, n_classes=CFG.n_classes,
+        n_requests=n, seed=seed, process=process, dtype=dtype, **kw)
+
+
+def _float_engine(buckets=(1, 4), warm=True):
+    plan = plan_model(CFG, ExecutionPolicy())
+    params = plan.init(jax.random.PRNGKey(0))
+    return ServeEngine.for_model_plan(plan, params, buckets=buckets,
+                                      warm=warm)
+
+
+def _int8_engine(buckets=(1, 4)):
+    plan = plan_model(CFG, ExecutionPolicy())
+    params = plan.init(jax.random.PRNGKey(0))
+    qparams, _ = plan.quantize(params)
+    requant = plan.calibrate_requant(
+        qparams, _stream(dtype="uint8").sample_batch(4))
+    return ServeEngine.for_model_plan(plan, qparams, buckets=buckets,
+                                      datapath="int8", requant=requant)
+
+
+# ---------------------------------------------------------------------------
+# BucketBatcher: the pad-and-bucket admission state machine
+# ---------------------------------------------------------------------------
+
+
+def test_batcher_size_flush():
+    clk = FakeClock()
+    b = BucketBatcher(buckets=(2, 4), max_delay_s=1.0, clock=clk)
+    assert b.poll() is None
+    for _ in range(4):
+        b.submit("img")
+    bucket, reqs = b.poll()
+    assert bucket == 4 and len(reqs) == 4
+    assert b.depth == 0 and b.poll() is None
+
+
+def test_batcher_deadline_flush():
+    clk = FakeClock()
+    b = BucketBatcher(buckets=(2, 4), max_delay_s=0.01, clock=clk)
+    b.submit("a")
+    assert b.poll() is None  # under-full, deadline not expired
+    assert b.next_deadline() == pytest.approx(0.01)
+    clk.t = 0.02
+    bucket, reqs = b.poll()
+    assert bucket == 2 and len(reqs) == 1  # padded into the smallest cover
+
+
+def test_batcher_drain_and_bucket_for():
+    clk = FakeClock()
+    b = BucketBatcher(buckets=(2, 4), max_delay_s=10.0, clock=clk)
+    for _ in range(3):
+        b.submit("x")
+    bucket, reqs = b.poll(force=True)
+    assert bucket == 4 and len(reqs) == 3
+    assert b.bucket_for(1) == 2 and b.bucket_for(3) == 4
+
+
+@settings(max_examples=10)
+@given(n=st.integers(min_value=0, max_value=12))
+def test_batcher_conserves_requests(n):
+    """Property: every submitted request comes back out exactly once, in
+    order, whatever mix of size- and force-flushes drains the queue."""
+    clk = FakeClock()
+    b = BucketBatcher(buckets=(2, 4), max_delay_s=10.0, clock=clk)
+    rids = [b.submit(i).rid for i in range(n)]
+    out = []
+    while True:
+        got = b.poll(force=True)
+        if got is None:
+            break
+        bucket, reqs = got
+        assert len(reqs) <= bucket
+        out.extend(r.rid for r in reqs)
+    assert out == rids and b.depth == 0
+
+
+def test_pad_batch_zero_pads():
+    imgs = [np.ones((4, 4, 3), np.float32) * (i + 1) for i in range(3)]
+    out = pad_batch(imgs, 4)
+    assert out.shape == (4, 4, 4, 3)
+    np.testing.assert_array_equal(out[:3], np.stack(imgs))
+    np.testing.assert_array_equal(out[3], 0)
+
+
+# ---------------------------------------------------------------------------
+# SyntheticRequestStream: deterministic arrival-timed requests
+# ---------------------------------------------------------------------------
+
+
+def test_stream_deterministic_in_seed():
+    a, b = _stream(process="poisson", seed=3), _stream(process="poisson",
+                                                       seed=3)
+    for (ta, xa, la), (tb, xb, lb) in zip(a, b):
+        assert ta == tb and la == lb
+        np.testing.assert_array_equal(xa, xb)
+    assert not np.array_equal(_stream(process="poisson", seed=4)
+                              .arrival_times(), a.arrival_times())
+
+
+def test_stream_arrival_processes():
+    uni = _stream(n=5, process="uniform", rate_hz=10.0).arrival_times()
+    np.testing.assert_allclose(uni, np.arange(5) / 10.0)
+    poi = _stream(n=8, process="poisson").arrival_times()
+    assert poi[0] == 0.0 and (np.diff(poi) >= 0).all() and poi[-1] > 0
+    bur = _stream(n=7, process="bursts", burst_sizes=(1, 2),
+                  gap_s=0.5).arrival_times()
+    # bursts cycle (1, 2): instants 0.0, 0.5, 1.0, ... carry 1,2,1,2,... reqs
+    np.testing.assert_allclose(bur, [0.0, 0.5, 0.5, 1.0, 1.5, 1.5, 2.0])
+
+
+def test_stream_uint8_dtype_for_int8_lane():
+    img, _ = _stream(dtype="uint8").image_at(0)
+    assert img.dtype == np.uint8
+    assert _stream().image_at(0)[0].dtype == np.float32
+
+
+# ---------------------------------------------------------------------------
+# the serving bit-identity property (the reason serve_forward exists)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("datapath", ["float", "int8"])
+@pytest.mark.parametrize("n", [1, 3, 4])
+def test_bucketed_equals_unbatched_bitwise(datapath, n):
+    """Padded-and-bucketed inference is bit-identical, per image, to the
+    unbatched N=1 path — on the float lane (per-image FC head via
+    serve_forward) and the fused-int8 lane (calibrated requant)."""
+    eng = _float_engine() if datapath == "float" else _int8_engine()
+    imgs = _stream(dtype="uint8" if datapath == "int8" else "float32"
+                   ).sample_batch(n)
+    batched = eng.infer(imgs)
+    assert batched.shape[0] == n
+    for i in range(n):
+        single = eng.infer(imgs[i:i + 1])
+        np.testing.assert_array_equal(batched[i], single[0])
+
+
+def test_serve_forward_matches_training_forward_numerically():
+    """serve_forward reorders only the FC head's accumulation (per-image
+    lax.map), so it must agree with the training forward to float tolerance
+    and produce identical argmax classes."""
+    plan = plan_model(CFG, ExecutionPolicy())
+    params = plan.init(jax.random.PRNGKey(0))
+    x = _stream().sample_batch(2)
+    a = np.asarray(execute.forward(plan, params, x))
+    b = np.asarray(execute.serve_forward(plan, params, x))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(a.argmax(-1), b.argmax(-1))
+
+
+# ---------------------------------------------------------------------------
+# compile-once: the no-retrace guarantee
+# ---------------------------------------------------------------------------
+
+
+def test_engine_compiles_each_bucket_exactly_once():
+    eng = _float_engine(buckets=(1, 4))
+    assert len(eng.compile_counts) == 2
+    # repeated warmup + serving traffic never rebuilds an executable
+    eng.warmup()
+    for _ in range(3):
+        eng.infer(_stream().sample_batch(3))
+    assert all(v == 1 for v in eng.compile_counts.values())
+    # the engine-seam ledger agrees: every (plan, batch, datapath) compiled
+    # at most once for the life of the process
+    assert all(v == 1 for v in execute.EXECUTABLE_COMPILES.values())
+
+
+def test_executable_keys_are_device_stamped():
+    eng = _float_engine(buckets=(1,))
+    backend = jax.default_backend()
+    (key,) = eng.compile_counts
+    assert key.startswith(f"{backend}-")
+    assert key.endswith("n1")
+
+
+def test_int8_engine_requires_calibrated_requant():
+    plan = plan_model(CFG, ExecutionPolicy())
+    params = plan.init(jax.random.PRNGKey(0))
+    qparams, _ = plan.quantize(params)
+    with pytest.raises(ValueError, match="requant"):
+        ServeEngine.for_model_plan(plan, qparams, buckets=(1,),
+                                   datapath="int8")
+
+
+def test_infer_rejects_oversized_batch():
+    eng = _float_engine(buckets=(1, 4))
+    with pytest.raises(ValueError, match="exceeds"):
+        eng.infer(_stream().sample_batch(5))
+
+
+# ---------------------------------------------------------------------------
+# the open-loop serve driver on a fake clock
+# ---------------------------------------------------------------------------
+
+
+def test_serve_stream_flushes_every_bucket_and_serves_all():
+    clk = FakeClock()
+    eng = _float_engine(buckets=(1, 4))
+    stream = _stream(n=10, process="bursts", burst_sizes=(1, 4), gap_s=0.1)
+    metrics = serve_stream(eng, stream, max_delay_s=0.01, clock=clk,
+                           sleep=clk.sleep)
+    assert metrics.total_images == 10
+    for b in eng.buckets:
+        assert metrics.flushes(b) >= 1, f"bucket {b} never flushed"
+    assert all(r.result is not None for r in metrics.requests)
+    assert all(v == 1 for v in eng.compile_counts.values())
+    assert metrics.wall_s and metrics.wall_s > 0
+    # every request's served result is the unbatched answer for its image
+    for r, (t, img, label) in zip(metrics.requests, _stream(n=10)):
+        np.testing.assert_array_equal(
+            r.result, eng.infer(img[None])[0])
+
+
+def test_serve_stream_deadline_flush_under_trickle():
+    """A trickle below every bucket size still ships: the deadline flush
+    pads each request into the smallest bucket within max_delay."""
+    clk = FakeClock()
+    eng = _float_engine(buckets=(4,))
+    stream = _stream(n=3, process="uniform", rate_hz=10.0)  # 100 ms apart
+    metrics = serve_stream(eng, stream, max_delay_s=0.005, clock=clk,
+                           sleep=clk.sleep)
+    assert metrics.total_images == 3
+    assert metrics.flushes(4) == 3  # each arrival aged out alone
+    snap = metrics.snapshot()
+    assert snap["per_bucket"]["4"]["pad_waste"] == pytest.approx(0.75)
+    # latency = queueing delay (deadline) + engine time, never negative
+    assert snap["per_bucket"]["4"]["p50_ms"] >= 5.0
+
+
+# ---------------------------------------------------------------------------
+# metrics arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_snapshot_arithmetic():
+    m = ServeMetrics(buckets=(1, 4))
+    m.record_flush(4, 3, batch_s=0.01, latencies_s=[0.011, 0.012, 0.013],
+                   queue_depth=2)
+    m.record_flush(1, 1, batch_s=0.002, latencies_s=[0.003])
+    m.wall_s = 0.1
+    snap = m.snapshot()
+    assert m.total_images == 4 and m.flushes(4) == 1
+    b4 = snap["per_bucket"]["4"]
+    assert b4["images"] == 3 and b4["pad_waste"] == 0.25
+    assert b4["images_per_s"] == pytest.approx(300.0)
+    assert b4["queue_depth_max"] == 2
+    tot = snap["totals"]
+    assert tot["images"] == 4 and tot["flushes"] == 2
+    assert tot["pad_waste"] == pytest.approx(1 / 5)
+    assert tot["images_per_s"] == pytest.approx(40.0)
+    assert tot["p99_ms"] >= tot["p50_ms"] > 0
+
+
+def test_metrics_write_wraps_extra_stamps(tmp_path):
+    import json
+    m = ServeMetrics(buckets=(1,))
+    m.record_flush(1, 1, batch_s=0.001, latencies_s=[0.001])
+    path = tmp_path / "metrics.json"
+    payload = m.write(str(path), extra={"arch": "vgg16-smoke"})
+    on_disk = json.load(open(path))
+    assert on_disk == payload
+    assert on_disk["arch"] == "vgg16-smoke"
+    assert on_disk["metrics"]["per_bucket"]["1"]["images"] == 1
