@@ -51,11 +51,15 @@ def load_records(path):
 
 
 def device_kind_of(path):
-    """The artifact's device kind: the header stamp, else the first
-    stamped record, else None (pre-stamp artifacts)."""
+    """The artifact's device kind: the schema_version>=2 top-level header
+    (``repro.serve.stamp_payload`` — BENCH_serve.json and the launcher
+    metrics artifacts), else the legacy ``device`` stamp dict
+    (BENCH_kernels.json), else the first stamped record, else None
+    (pre-stamp artifacts)."""
     with open(path) as f:
         data = json.load(f)
-    kind = (data.get("device") or {}).get("device_kind")
+    kind = data.get("device_kind") or (data.get("device") or {}).get(
+        "device_kind")
     if kind:
         return kind
     for r in data.get("records", []):

@@ -381,42 +381,89 @@ def bench_kernels_fused() -> None:
     print(f"kernels_fused,WROTE,{out_path},,,")
 
 
-def bench_serve() -> None:
-    """Closed-loop bucketed serving: images/sec + latency percentiles per
-    (arch, datapath, bucket) off the shared serving core (DESIGN.md §8).
+def _serve_load_items(cfg, n_requests, dtype):
+    """A saturating request list (every arrival at t=0) — the equal
+    offered load both serve_concurrent arms replay."""
+    from repro.data.pipeline import SyntheticRequestStream
 
-    Each record times ``ServeEngine.run_bucket`` on a full bucket (no pad
-    waste — this is the peak-throughput arm; the open-loop launcher
-    ``repro.launch.serve_cnn`` measures the queueing side).  The engine is
-    built exactly like the production CLI (``launch.serve_cnn
-    .build_engine``: ahead-of-time compiled bucket executables, calibrated
-    requant on the int8 lane) with ``tuning="cached"`` so batch-specific
-    persisted autotuner winners apply.  Records carry ``images_per_s``
+    stream = SyntheticRequestStream(
+        hw=cfg.input_hw, channels=cfg.layers[0].M, n_classes=cfg.n_classes,
+        n_requests=n_requests, process="bursts", burst_sizes=(n_requests,),
+        gap_s=0.0, dtype=dtype)
+    return list(stream)
+
+
+def _serve_round(engine, serve_config, items, producers):
+    """One measured serve run over ``items``: a fresh Server around the
+    shared (already compiled) engine; returns its filled metrics."""
+    from repro.serve import Server
+
+    srv = Server(engine, serve_config)
+    try:
+        metrics = srv.run_stream(iter(items), producers=producers)
+    finally:
+        srv.close()
+    tot = metrics.snapshot()["totals"]
+    if tot["images"] + tot["shed"] + tot["expired"] != tot["submitted"]:
+        raise RuntimeError(f"serve bench conservation violated: {tot}")
+    return metrics
+
+
+def bench_serve() -> None:
+    """Bucketed serving: closed-loop per-bucket throughput/latency plus
+    the serve_concurrent threaded-vs-open-loop arm (DESIGN.md §8).
+
+    Per-bucket records time ``ServeEngine.run_bucket`` on a full bucket
+    (no pad waste — the peak-throughput arm; the open-loop launcher
+    ``repro.launch.serve_cnn`` measures the queueing side).  Engines come
+    from the production facade path (``launch.serve_cnn.build_server``:
+    ahead-of-time compiled bucket executables, calibrated requant on the
+    int8 lane) with ``tuning="cached"`` so batch-specific persisted
+    autotuner winners apply.  Records carry ``images_per_s``
     (higher-is-better throughput gate) and ``p50_ms``/``p99_ms``
-    (lower-is-better latency gate) plus ``backend``/``device_kind`` stamps
-    and the bucket plan — ``benchmarks.compare`` skips these machine-scoped
-    gates across device kinds.  Reps via REPRO_SERVE_BENCH_REPS (default
-    15).  Writes BENCH_serve.json for the serving perf trajectory.
+    (lower-is-better latency gate) — ``benchmarks.compare`` skips these
+    machine-scoped gates across device kinds.
+
+    ``serve_concurrent`` records replay the SAME saturating request list
+    through two arms — N producer threads feeding the flush worker
+    (``Server.run_stream(..., producers=N)``) vs the single-threaded
+    inline open loop — in adjacent rounds, and gate the drift-robust
+    median per-round wall ratio (``repro.engine.autotune.aggregate_pair``)
+    as ``concurrent_speedup`` (compare.py --floor: threaded admission must
+    not lose throughput at equal offered load).  A shed-policy record
+    exercises the bounded queue (``shed_rate``).  Knobs:
+    REPRO_SERVE_BENCH_REPS (default 15), REPRO_SERVE_CONC_REQUESTS (64),
+    REPRO_SERVE_CONC_ROUNDS (5).  Writes BENCH_serve.json under the
+    schema_version-2 header (``repro.serve.stamp_payload``).
     """
     import jax
     from repro.configs import CNN_SMOKES
     from repro.data.pipeline import SyntheticRequestStream
     from repro.engine import ExecutionPolicy
-    from repro.launch.serve_cnn import build_engine
+    from repro.engine.autotune import aggregate_pair
+    from repro.launch.serve_cnn import build_server
+    from repro.serve import ServeConfig, stamp_payload
 
     reps = int(os.environ.get("REPRO_SERVE_BENCH_REPS", "15"))
+    conc_requests = int(os.environ.get("REPRO_SERVE_CONC_REQUESTS", "256"))
+    conc_rounds = int(os.environ.get("REPRO_SERVE_CONC_ROUNDS", "5"))
+    producers = 4
     buckets = (1, 4, 16)
     policy = ExecutionPolicy(tuning="cached")
     backend = jax.default_backend()
     device_kind = jax.devices()[0].device_kind
     stamp = {"backend": backend, "device_kind": device_kind}
     records: List[Dict] = []
+    engines = {}
     print("section,name,bucket,images_per_s,p50_ms,p99_ms,backend")
     for arch in ("vgg16", "alexnet"):
         cfg = CNN_SMOKES[arch]
         for datapath in ("float", "int8"):
             int8 = datapath == "int8"
-            engine = build_engine(cfg, policy, buckets, int8=int8)
+            server = build_server(
+                cfg, policy, ServeConfig(buckets=buckets, datapath=datapath))
+            engine = server.engine
+            engines[(arch, datapath)] = (cfg, engine)
             stream = SyntheticRequestStream(
                 hw=cfg.input_hw, channels=cfg.layers[0].M,
                 n_classes=cfg.n_classes,
@@ -450,12 +497,86 @@ def bench_serve() -> None:
             if bad:
                 raise RuntimeError(
                     f"serve bench recompiled executables: {bad}")
+
+    # -- serve_concurrent: threaded admission vs the open-loop baseline --
+    print("section,name,producers,images_per_s,p99_ms,shed_rate,"
+          "concurrent_speedup")
+    for arch, datapath in (("vgg16", "float"), ("vgg16", "int8")):
+        cfg, engine = engines[(arch, datapath)]
+        serve_config = ServeConfig(buckets=buckets, datapath=datapath)
+        items = _serve_load_items(
+            cfg, conc_requests, "uint8" if datapath == "int8" else "float32")
+        # warm both arms outside the timed rounds
+        _serve_round(engine, serve_config, items, producers)
+        _serve_round(engine, serve_config, items, 0)
+        walls_thr, walls_inline = [], []
+        last_thr = None
+        for _ in range(conc_rounds):
+            last_thr = _serve_round(engine, serve_config, items, producers)
+            walls_thr.append(last_thr.wall_s)
+            walls_inline.append(
+                _serve_round(engine, serve_config, items, 0).wall_s)
+        wall_thr, wall_inline, speedup = aggregate_pair(
+            walls_thr, walls_inline)
+        snap = last_thr.snapshot()
+        tot = snap["totals"]
+        if tot["images"] != conc_requests:
+            raise RuntimeError(
+                f"serve_concurrent dropped work: served {tot['images']} of "
+                f"{conc_requests}")
+        bad = {k: v for k, v in engine.compile_counts.items() if v != 1}
+        if bad:
+            raise RuntimeError(
+                f"serve_concurrent recompiled executables: {bad}")
+        name = f"serve_concurrent_{arch}_{datapath}"
+        img_per_s = conc_requests / wall_thr if wall_thr else 0.0
+        print(f"serve,{name},{producers},{img_per_s:.1f},"
+              f"{tot['p99_ms']:.2f},0.000,{speedup:.3f}")
+        records.append({
+            "name": name, "arch": cfg.name, "datapath": datapath,
+            "producers": producers, "requests": conc_requests,
+            "rounds": conc_rounds, "overload": serve_config.overload,
+            "images_per_s": round(img_per_s, 1),
+            "open_loop_images_per_s": round(
+                conc_requests / wall_inline, 1) if wall_inline else 0.0,
+            "p99_ms": tot["p99_ms"],
+            "shed_rate": 0.0,
+            "overlapped": tot["overlapped"],
+            "concurrent_speedup": round(speedup, 3),
+            **stamp,
+        })
+
+    # shed policy under the same load: the bounded queue must reject,
+    # not wedge — shed_rate documents how much this load overdrives a
+    # capacity-8 queue
+    cfg, engine = engines[("vgg16", "float")]
+    shed_config = ServeConfig(buckets=buckets, queue_capacity=8,
+                              overload="shed")
+    items = _serve_load_items(cfg, conc_requests, "float32")
+    metrics = _serve_round(engine, shed_config, items, producers)
+    tot = metrics.snapshot()["totals"]
+    shed_rate = tot["shed"] / tot["submitted"] if tot["submitted"] else 0.0
+    name = "serve_concurrent_vgg16_float_shed"
+    print(f"serve,{name},{producers},"
+          f"{tot.get('images_per_s', 0.0):.1f},{tot['p99_ms']:.2f},"
+          f"{shed_rate:.3f},")
+    records.append({
+        "name": name, "arch": cfg.name, "datapath": "float",
+        "producers": producers, "requests": conc_requests,
+        "queue_capacity": shed_config.queue_capacity,
+        "overload": "shed",
+        "served": tot["images"], "shed": tot["shed"],
+        "shed_rate": round(shed_rate, 4),
+        "p99_ms": tot["p99_ms"],
+        **stamp,
+    })
+
     out_dir = os.environ.get("REPRO_BENCH_DIR", ".")
     os.makedirs(out_dir, exist_ok=True)
     out_path = os.path.join(out_dir, "BENCH_serve.json")
     with open(out_path, "w") as f:
-        json.dump({"section": "serve", "device": stamp,
-                   "records": records}, f, indent=1)
+        json.dump(stamp_payload({"section": "serve", "records": records}),
+                  f, indent=1)
     print(f"serve,WROTE,{out_path},,,,")
 
 

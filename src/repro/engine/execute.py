@@ -356,6 +356,21 @@ def calibrate_requant(
 EXECUTABLE_COMPILES: Dict[Tuple[ModelPlan, int, str], int] = {}
 
 
+def _donate_images_argnums() -> tuple:
+    """Donation spec for the serving executables' image argument.
+
+    The serving flush worker stages each bucket with ``jax.device_put``
+    and never reuses the staged buffer, so donating it lets the runtime
+    recycle that transfer target in place — the staging half of the
+    transfer/compute overlap.  CPU jaxlib does not implement input
+    donation (it warns and ignores), so donation is requested only on
+    backends that honor it.
+    """
+    import jax
+
+    return (1,) if jax.default_backend() in ("gpu", "tpu", "cuda", "rocm") else ()
+
+
 @functools.lru_cache(maxsize=None)
 def executable_for(plan: ModelPlan, batch: int, datapath: str = "float"):
     """AOT-compile ``plan``'s forward for one static batch size (cached).
@@ -392,7 +407,8 @@ def executable_for(plan: ModelPlan, batch: int, datapath: str = "float"):
         pshapes = jax.eval_shape(lambda k: init_cnn(k, cfg), jax.random.PRNGKey(0))
         img = jax.ShapeDtypeStruct((batch, H, W, C), jnp.float32)
         compiled = (
-            jax.jit(lambda p, x: serve_forward(plan, p, x))
+            jax.jit(lambda p, x: serve_forward(plan, p, x),
+                    donate_argnums=_donate_images_argnums())
             .lower(pshapes, img)
             .compile()
         )
@@ -414,7 +430,8 @@ def executable_for(plan: ModelPlan, batch: int, datapath: str = "float"):
         ]
         img = jax.ShapeDtypeStruct((batch, H, W, C), jnp.uint8)
         compiled = (
-            jax.jit(lambda qp, x, rq: forward_int8(plan, qp, x, requant=rq))
+            jax.jit(lambda qp, x, rq: forward_int8(plan, qp, x, requant=rq),
+                    donate_argnums=_donate_images_argnums())
             .lower(qshapes, img, rshapes)
             .compile()
         )

@@ -103,3 +103,51 @@ def execution_parent(
 def policy_from_args(args: argparse.Namespace) -> ExecutionPolicy:
     """One place mapping parsed launcher args -> ExecutionPolicy."""
     return ExecutionPolicy.from_args(args)
+
+
+def serving_parent(
+    buckets_default: str = "1,4,16,64",
+    max_delay_ms_default: float = 5.0,
+) -> argparse.ArgumentParser:
+    """Parent parser with the shared serving flags (DESIGN.md §8).
+
+    Both serving launchers (``serve_cnn``, ``serve``) mount this and map
+    it through ``ServeConfig.from_args`` — one flag surface, one mapping
+    (the serving mirror of ``execution_parent`` ->
+    ``ExecutionPolicy.from_args``).  ``--queue-capacity`` bounds the
+    admission queue (0 = unbounded) and ``--overload`` picks what a full
+    queue does: block producers (backpressure), shed the request, or
+    degrade to eager smaller-bucket flushes.  ``--producers`` drives the
+    threaded closed/open-loop load mode (0 = the deterministic inline
+    open loop); it is a load-generation knob, not a ServeConfig field.
+    """
+    from repro.serve.config import OVERLOAD_POLICIES
+
+    p = argparse.ArgumentParser(add_help=False)
+    p.add_argument("--buckets", default=buckets_default,
+                   help="static batch buckets, comma-separated")
+    p.add_argument("--max-delay-ms", type=float,
+                   default=max_delay_ms_default,
+                   help="deadline: oldest request ships within this")
+    p.add_argument("--queue-capacity", type=int, default=0,
+                   help="bounded admission queue (backpressure); "
+                        "0 = unbounded")
+    p.add_argument("--overload", choices=list(OVERLOAD_POLICIES),
+                   default="block",
+                   help="full-queue policy: block producers, shed the "
+                        "request, or degrade to eager smaller-bucket "
+                        "flushes")
+    p.add_argument("--request-timeout-ms", type=float, default=None,
+                   help="per-request deadline: queued work older than "
+                        "this is expired, never served stale")
+    p.add_argument("--producers", type=int, default=0,
+                   help="producer threads submitting concurrently "
+                        "(0 = single-threaded inline open loop)")
+    return p
+
+
+def serve_config_from_args(args: argparse.Namespace, **overrides):
+    """One place mapping parsed serving args -> ServeConfig."""
+    from repro.serve.config import ServeConfig
+
+    return ServeConfig.from_args(args, **overrides)

@@ -26,13 +26,14 @@ import numpy as np
 from repro.configs import get_config, get_smoke
 from repro.distributed import activate_mesh
 from repro.distributed.steps import make_decode_step, make_prefill_step
+from repro.launch.cli import serve_config_from_args, serving_parent
 from repro.launch.mesh import make_host_mesh
 from repro.nn.models import build_model
 from repro.serve import ServeEngine
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(parents=[serving_parent()])
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
@@ -42,6 +43,11 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    # One config mapping shared with serve_cnn (launch.cli serving flags
+    # -> ServeConfig); the LM loop's only "bucket" is its static decode
+    # batch, so that field is pinned from --batch.
+    serve_config = serve_config_from_args(args, buckets=(args.batch,),
+                                          datapath="float")
     mesh = make_host_mesh(model=args.tp)
     model = build_model(cfg, tp=int(mesh.shape["model"]))
     max_len = args.prompt_len + args.gen
@@ -49,7 +55,7 @@ def main() -> None:
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
 
-    eng = ServeEngine(name=f"lm-{cfg.name}")
+    eng = ServeEngine(name=f"lm-{cfg.name}", buckets=serve_config.buckets)
     shape_tag = f"b{args.batch} p{args.prompt_len}"
     with activate_mesh(mesh), mesh:
         params = model.init(jax.random.PRNGKey(0))

@@ -1,21 +1,31 @@
 """Production CNN serving CLI on the shared serving core (DESIGN.md §8).
 
   PYTHONPATH=src python -m repro.launch.serve_cnn --arch vgg16 --smoke \\
-      --buckets 1,4,16 --requests 64 --rate 200 --max-delay-ms 5
+      --buckets 1,4,16 --requests 64 --rate 200 --max-delay-ms 5 \\
+      --producers 4 --queue-capacity 32 --overload block
 
-Compiles one executable per (ModelPlan, batch bucket) up front
-(``ModelPlan.executable_for`` → ahead-of-time ``jit().lower().compile()``,
-so the request stream cannot retrace), then serves a deterministic
-synthetic request stream (``data.pipeline.SyntheticRequestStream``)
-through pad-and-bucket admission with deadline flush, and writes the
-per-bucket metrics JSON.  Execution flags (``--substrate`` / ``--int8`` /
-``--tuning``) come from the shared launcher parent (``launch.cli``) —
-``--tuning cached`` plans each bucket off its batch-specific persisted
-autotuner winners.  ``--int8`` serves the fused integer datapath off
-calibrated per-channel requant pairs (the only batch-shape-independent
-int8 lane).  ``--check`` (the CI serve-smoke gate) exits non-zero unless
-every bucket flushed at least once, every request got a result, metrics
-are non-empty, and no executable compiled more than once.
+Builds one ``repro.serve.Server`` from a frozen ``ServeConfig``
+(``launch.cli.serving_parent`` flags -> ``ServeConfig.from_args``, the
+one mapping both serving launchers share).  The server AOT-compiles one
+executable per (ModelPlan, batch bucket) up front
+(``ModelPlan.executable_for`` -> ``jit().lower().compile()``, so the
+request stream cannot retrace), then serves a deterministic synthetic
+request stream (``data.pipeline.SyntheticRequestStream``) through
+pad-and-bucket admission with deadline flush — single-threaded inline
+(``--producers 0``, deterministic) or through ``--producers N`` real
+producer threads feeding the dedicated flush worker (double-buffered
+host<->device staging; bounded queue + ``--overload`` policy).
+
+Execution flags (``--substrate`` / ``--int8`` / ``--tuning``) come from
+the shared launcher parent (``launch.cli``) — ``--tuning cached`` plans
+each bucket off its batch-specific persisted autotuner winners; ``--int8``
+serves the fused integer datapath off calibrated per-channel requant
+pairs (the only batch-shape-independent int8 lane).  ``--check`` (the CI
+serve-smoke / serve-stress gate) exits non-zero unless request
+conservation holds (served + shed + expired == submitted, no request
+left pending), metrics are non-empty, no executable compiled more than
+once — and, in the deterministic inline mode, every bucket flushed at
+least once.
 """
 
 import argparse
@@ -27,8 +37,9 @@ import jax
 from repro.configs import CNN_REGISTRY, CNN_SMOKES
 from repro.data.pipeline import SyntheticRequestStream
 from repro.engine import plan_model
-from repro.launch.cli import execution_parent, policy_from_args
-from repro.serve import ServeEngine, serve_stream
+from repro.launch.cli import (execution_parent, policy_from_args,
+                              serve_config_from_args, serving_parent)
+from repro.serve import Server
 
 
 def make_stream(cfg, args, buckets):
@@ -49,35 +60,54 @@ def make_stream(cfg, args, buckets):
     )
 
 
-def build_engine(cfg, policy, buckets, *, int8=False, seed=0, calib_batch=8):
-    """ModelPlan → params (+ int8 quantization/calibration) → warm engine."""
+def build_server(cfg, policy, serve_config, *, seed=0, calib_batch=8):
+    """ModelPlan -> params (+ int8 quantization/calibration) -> warm
+    Server (every bucket executable compiled before the first request)."""
     plan = plan_model(cfg, policy)
     params = plan.init(jax.random.PRNGKey(seed))
-    if not int8:
-        return ServeEngine.for_model_plan(plan, params, buckets=buckets)
+    if serve_config.datapath != "int8":
+        return Server.from_plan(plan, params, serve_config)
     qparams, _ = plan.quantize(params)
     sample = SyntheticRequestStream(
         hw=cfg.input_hw, channels=cfg.layers[0].M, n_classes=cfg.n_classes,
         seed=seed, dtype="uint8").sample_batch(calib_batch)
     requant = plan.calibrate_requant(qparams, sample)
-    return ServeEngine.for_model_plan(
-        plan, qparams, buckets=buckets, datapath="int8", requant=requant)
+    return Server.from_plan(plan, qparams, serve_config, requant=requant)
 
 
-def check_run(engine, metrics, n_requests) -> list:
-    """The --check assertions; returns a list of failure strings."""
+def check_run(server, metrics, n_requests, *, expect_all_buckets) -> list:
+    """The --check assertions; returns a list of failure strings.
+
+    Conservation is the invariant that must hold in every mode: every
+    submitted request ends in exactly one terminal state.  Per-bucket
+    flush coverage is only deterministic in the inline open loop (the
+    bursts stream is sized to the buckets); under ``--producers N`` the
+    interleaving decides bucket fills, so that check is skipped.
+    """
     fails = []
-    for b in engine.buckets:
-        if metrics.flushes(b) < 1:
-            fails.append(f"bucket {b} never flushed")
-    if metrics.total_images != n_requests:
+    tot = metrics.snapshot()["totals"]
+    if tot["submitted"] != n_requests:
+        fails.append(f"submitted {tot['submitted']} != offered {n_requests}")
+    if tot["images"] + tot["shed"] + tot["expired"] != tot["submitted"]:
         fails.append(
-            f"served {metrics.total_images} of {n_requests} requests")
+            "conservation violated: served %d + shed %d + expired %d != "
+            "submitted %d" % (tot["images"], tot["shed"], tot["expired"],
+                              tot["submitted"]))
+    statuses = [r.status for r in metrics.requests]
+    if any(s == "pending" for s in statuses):
+        fails.append(f"{statuses.count('pending')} requests left pending")
+    rids = [r.rid for r in metrics.requests]
+    if len(set(rids)) != len(rids):
+        fails.append("duplicate request ids")
     for r in metrics.requests:
-        if r.result is None:
-            fails.append(f"request {r.rid} has no result")
+        if r.status == "served" and r.result is None:
+            fails.append(f"request {r.rid} served without a result")
             break
-    bad = {k: v for k, v in engine.compile_counts.items() if v != 1}
+    if expect_all_buckets:
+        for b in server.engine.buckets:
+            if metrics.flushes(b) < 1:
+                fails.append(f"bucket {b} never flushed")
+    bad = {k: v for k, v in server.engine.compile_counts.items() if v != 1}
     if bad:
         fails.append(f"executables compiled more than once: {bad}")
     if not metrics.snapshot()["per_bucket"]:
@@ -89,13 +119,10 @@ def main() -> None:
     ap = argparse.ArgumentParser(
         description=__doc__.split("\n")[0],
         parents=[execution_parent(arch_choices=CNN_REGISTRY,
-                                  arch_default="vgg16")])
+                                  arch_default="vgg16"),
+                 serving_parent()])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny arch variant (CNN_SMOKES) for CI")
-    ap.add_argument("--buckets", default="1,4,16,64",
-                    help="static batch buckets, comma-separated")
-    ap.add_argument("--max-delay-ms", type=float, default=5.0,
-                    help="deadline: oldest request ships within this")
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--rate", type=float, default=200.0,
                     help="mean arrival rate (req/s) for poisson/uniform")
@@ -105,35 +132,45 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="experiments/serve/metrics.json")
     ap.add_argument("--check", action="store_true",
-                    help="assert >=1 flush per bucket, all requests served, "
-                         "compile-once; exit non-zero on failure (CI gate)")
+                    help="assert request conservation, compile-once (and "
+                         ">=1 flush per bucket in inline mode); exit "
+                         "non-zero on failure (CI gate)")
     args = ap.parse_args()
 
     policy = policy_from_args(args)
+    serve_config = serve_config_from_args(args)
     cfg = (CNN_SMOKES if args.smoke else CNN_REGISTRY)[args.arch]
-    buckets = tuple(int(b) for b in args.buckets.split(","))
-    datapath = "int8" if args.int8 else "float"
 
-    engine = build_engine(cfg, policy, buckets, int8=args.int8, seed=args.seed)
-    metrics = serve_stream(engine, make_stream(cfg, args, buckets),
-                           max_delay_s=args.max_delay_ms / 1e3)
+    server = build_server(cfg, policy, serve_config, seed=args.seed)
+    try:
+        metrics = server.run_stream(
+            make_stream(cfg, args, serve_config.buckets),
+            producers=args.producers)
+    finally:
+        server.close()
     snap = metrics.snapshot()
 
     payload = metrics.write(args.out, extra={
         "arch": cfg.name,
-        "datapath": datapath,
+        "datapath": serve_config.datapath,
         "arrival": args.arrival,
         "requests": args.requests,
         "max_delay_ms": args.max_delay_ms,
-        "backend": jax.default_backend(),
-        "device_kind": jax.devices()[0].device_kind,
-        "plan": list(engine.plan.describe()),
-        "executables": dict(engine.compile_counts),
+        "producers": args.producers,
+        "queue_capacity": serve_config.queue_capacity,
+        "overload": serve_config.overload,
+        "plan": list(server.engine.plan.describe()),
+        "executables": dict(server.engine.compile_counts),
     })
 
     tot = snap["totals"]
-    print(f"[serve_cnn] {cfg.name} {datapath} buckets={list(buckets)} "
-          f"served {tot['images']} images in {tot.get('wall_s', 0):.3f}s "
+    mode = (f"{args.producers} producers" if args.producers
+            else "inline open loop")
+    print(f"[serve_cnn] {cfg.name} {serve_config.datapath} "
+          f"buckets={list(serve_config.buckets)} ({mode}) "
+          f"served {tot['images']}/{tot['submitted']} "
+          f"(shed {tot['shed']}, expired {tot['expired']}, "
+          f"overlapped {tot['overlapped']}) in {tot.get('wall_s', 0):.3f}s "
           f"({tot.get('images_per_s', 0):.1f} img/s, p99 {tot['p99_ms']:.1f} ms, "
           f"pad waste {tot['pad_waste']:.1%})")
     for b, rec in snap["per_bucket"].items():
@@ -143,13 +180,15 @@ def main() -> None:
           f"({len(json.dumps(payload))} bytes)")
 
     if args.check:
-        fails = check_run(engine, metrics, args.requests)
+        fails = check_run(server, metrics, args.requests,
+                          expect_all_buckets=args.producers == 0)
         if fails:
             for f in fails:
                 print(f"[serve_cnn] CHECK FAILED: {f}", file=sys.stderr)
             sys.exit(1)
-        print("[serve_cnn] check OK: every bucket flushed, all requests "
-              "served, every executable compiled exactly once")
+        print("[serve_cnn] check OK: request conservation holds, every "
+              "executable compiled exactly once"
+              + ("" if args.producers else ", every bucket flushed"))
 
 
 if __name__ == "__main__":

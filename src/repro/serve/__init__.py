@@ -1,22 +1,37 @@
 """The shared serving core (DESIGN.md §8).
 
-``ServeEngine`` (compile-once executables per (ModelPlan, batch bucket) +
-the backend/device-kind-stamped executable cache the LM launcher shares) +
-``BucketBatcher``/``pad_batch`` (pad-and-bucket admission with deadline
-flush) + ``ServeMetrics`` (per-bucket images/sec, p50/p99, queue depth,
-pad waste) + ``serve_stream`` (the open-loop driver).  Both launchers —
+``Server`` (the unified facade: threaded admission with backpressure and
+per-request deadlines, a dedicated flush worker with double-buffered
+host<->device staging, plus the deterministic inline open loop) built
+from a frozen ``ServeConfig``, over ``ServeEngine`` (compile-once
+executables per (ModelPlan, batch bucket) + the backend/device-kind-
+stamped executable cache the LM launcher shares).  ``BucketBatcher`` /
+``pad_batch`` do pad-and-bucket admission with deadline flush and
+per-request expiry; ``ServeMetrics`` carries per-bucket images/sec,
+p50/p99, queue depth, pad waste, and the admission counters
+(submitted/shed/expired/overlapped).  Both launchers —
 ``repro.launch.serve_cnn`` and ``repro.launch.serve`` — run on this.
+
+``serve_stream`` and ``ServeEngine.for_model_plan`` are deprecation
+shims over the ``Server`` facade.
 """
 
 from repro.serve.batching import BucketBatcher, Request, pad_batch
+from repro.serve.config import OVERLOAD_POLICIES, ServeConfig
 from repro.serve.engine import ServeEngine, serve_stream
-from repro.serve.metrics import ServeMetrics
+from repro.serve.metrics import SCHEMA_VERSION, ServeMetrics, stamp_payload
+from repro.serve.server import Server
 
 __all__ = [
     "BucketBatcher",
+    "OVERLOAD_POLICIES",
     "Request",
+    "SCHEMA_VERSION",
+    "Server",
+    "ServeConfig",
     "ServeEngine",
     "ServeMetrics",
     "pad_batch",
     "serve_stream",
+    "stamp_payload",
 ]

@@ -27,12 +27,23 @@ import numpy as np
 
 @dataclass
 class Request:
-    """One queued inference request; the serve loop fills ``result``."""
+    """One queued inference request; the serve loop fills ``result``.
+
+    ``status`` walks pending -> served | shed | expired exactly once
+    (conservation: every submitted request ends in exactly one terminal
+    state); ``done`` is set at that transition, so producer threads can
+    wait on their own handles.  ``deadline_s`` is the absolute clock time
+    past which queued work is expired instead of served stale.
+    """
 
     rid: int
     payload: Any
     t_submit: float
     result: Any = field(default=None, repr=False)
+    deadline_s: Optional[float] = None
+    status: str = "pending"
+    done: threading.Event = field(
+        default_factory=threading.Event, repr=False, compare=False)
 
 
 class BucketBatcher:
@@ -52,6 +63,12 @@ class BucketBatcher:
         self._q: Deque[Request] = deque()
         self._lock = threading.Lock()
         self._rid = itertools.count()
+        # Monotone floor for caller-supplied submit timestamps: the last
+        # admitted t_submit (init: the clock at construction).
+        self._last_t = float(self._clock())
+        # Queued requests carrying a per-request deadline (lets
+        # purge_expired skip the queue scan on deadline-free streams).
+        self._n_deadlined = 0
 
     @property
     def depth(self) -> int:
@@ -65,14 +82,54 @@ class BucketBatcher:
                 return b
         return self.buckets[-1]
 
-    def submit(self, payload: Any, now: Optional[float] = None) -> Request:
+    def take_rid(self) -> int:
+        """Allocate one request id from the batcher's counter (so shed
+        requests that never enter the queue still get unique rids)."""
+        return next(self._rid)
+
+    def submit(self, payload: Any, now: Optional[float] = None,
+               deadline_s: Optional[float] = None) -> Request:
         """Enqueue one request; returns its handle (``result`` lands on it
-        when the serve loop flushes the bucket that carries it)."""
-        r = Request(next(self._rid), payload,
-                    self._clock() if now is None else float(now))
+        when the serve loop flushes the bucket that carries it).
+
+        A caller-supplied ``now`` is CLAMPED onto the monotone clock:
+        into [previous submit's t_submit, clock()].  An unclamped
+        timestamp behind the queue's monotone floor would make the
+        deadline flush fire early (a backdated t_submit ages out
+        instantly), and one ahead of the clock would make it fire late or
+        never (next_deadline sits in the future forever) — both break the
+        "oldest request ships within max_delay_s" contract.
+        """
+        t = self._clock() if now is None else float(now)
         with self._lock:
+            t = min(max(t, self._last_t), max(self._clock(), self._last_t))
+            self._last_t = t
+            r = Request(next(self._rid), payload, t, deadline_s=deadline_s)
             self._q.append(r)
+            if deadline_s is not None:
+                self._n_deadlined += 1
         return r
+
+    def purge_expired(self, now: Optional[float] = None) -> List[Request]:
+        """Remove and return queued requests whose per-request deadline
+        has passed — expired work is dropped, never served stale.  The
+        caller owns the terminal transition (status/done/metrics); O(1)
+        when no queued request carries a deadline."""
+        with self._lock:
+            if self._n_deadlined == 0:
+                return []
+            now = self._clock() if now is None else float(now)
+            expired: List[Request] = []
+            kept: Deque[Request] = deque()
+            while self._q:
+                r = self._q.popleft()
+                if r.deadline_s is not None and now > r.deadline_s:
+                    expired.append(r)
+                    self._n_deadlined -= 1
+                else:
+                    kept.append(r)
+            self._q = kept
+        return expired
 
     def next_deadline(self) -> Optional[float]:
         """Absolute clock time the oldest request must ship by (None when
@@ -103,6 +160,7 @@ class BucketBatcher:
             else:
                 return None
             reqs = [self._q.popleft() for _ in range(take)]
+            self._n_deadlined -= sum(1 for r in reqs if r.deadline_s is not None)
         return self.bucket_for(len(reqs)), reqs
 
 

@@ -1,0 +1,102 @@
+"""The frozen serving configuration (DESIGN.md §8).
+
+:class:`ServeConfig` is the serving-side analogue of the engine's
+``ExecutionPolicy`` (§3): one frozen, hashable value object carrying every
+admission knob — bucket shapes, the deadline-flush budget, the bounded
+admission queue and its overload policy, the datapath, and the optional
+per-request deadline — so the :class:`~repro.serve.server.Server` facade,
+both launchers, and the benchmarks all construct their serving state from
+one mapping instead of threading ad-hoc kwargs.
+
+``ServeConfig.from_args`` is THE mapping from the shared launcher CLI
+flags (``launch.cli.serving_parent``: ``--buckets`` / ``--max-delay-ms`` /
+``--queue-capacity`` / ``--overload`` / ``--int8``) onto a config, the
+same pattern ``ExecutionPolicy.from_args`` set for the execution flags.
+"""
+
+from __future__ import annotations
+
+import argparse
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+#: Overload policies for a full admission queue (``queue_capacity``):
+#: - "block":   producers wait for queue space (backpressure; the inline
+#:   open loop relieves pressure by flushing, since the caller IS the
+#:   flush worker there);
+#: - "shed":    reject the request immediately (``Request.status ==
+#:   "shed"``, counted — the caller sees the overload instead of
+#:   unbounded queueing delay);
+#: - "degrade": admit, but the flush worker ships eagerly into the
+#:   smallest covering bucket while over capacity (degrade-to-smaller-
+#:   bucket: latency-first draining instead of waiting to fill the
+#:   largest bucket or age out the deadline).
+OVERLOAD_POLICIES: Tuple[str, ...] = ("block", "shed", "degrade")
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Frozen, hashable "how to serve": buckets + admission behavior.
+
+    ``queue_capacity == 0`` means unbounded (no backpressure — the PR-6
+    open-loop behavior).  ``request_timeout_ms`` is the default
+    per-request deadline: a request still queued past it is *expired*
+    (result never computed) rather than served stale; ``None`` disables.
+    """
+
+    buckets: Tuple[int, ...] = (1, 4, 16, 64)
+    max_delay_ms: float = 5.0
+    queue_capacity: int = 0
+    overload: str = "block"
+    datapath: str = "float"
+    request_timeout_ms: Optional[float] = field(default=None)
+
+    def __post_init__(self):
+        buckets = tuple(sorted(set(int(b) for b in self.buckets)))
+        if not buckets or buckets[0] < 1:
+            raise ValueError(
+                f"buckets must be positive ints, got {self.buckets!r}")
+        object.__setattr__(self, "buckets", buckets)
+        if self.overload not in OVERLOAD_POLICIES:
+            raise ValueError(
+                f"overload {self.overload!r} not in {OVERLOAD_POLICIES}")
+        if self.datapath not in ("float", "int8"):
+            raise ValueError(
+                f"datapath {self.datapath!r} not in ('float', 'int8')")
+        if int(self.queue_capacity) < 0:
+            raise ValueError(
+                f"queue_capacity must be >= 0, got {self.queue_capacity!r}")
+        object.__setattr__(self, "queue_capacity", int(self.queue_capacity))
+        if self.request_timeout_ms is not None and self.request_timeout_ms <= 0:
+            raise ValueError(
+                f"request_timeout_ms must be > 0, got {self.request_timeout_ms!r}")
+
+    @property
+    def max_delay_s(self) -> float:
+        return float(self.max_delay_ms) / 1e3
+
+    @property
+    def request_timeout_s(self) -> Optional[float]:
+        if self.request_timeout_ms is None:
+            return None
+        return float(self.request_timeout_ms) / 1e3
+
+    @classmethod
+    def from_args(cls, args: argparse.Namespace, **overrides) -> "ServeConfig":
+        """One place mapping the shared serving CLI flags -> ServeConfig.
+
+        Both launchers (``serve_cnn``, ``serve``) build their config here;
+        ``overrides`` lets a launcher pin fields its CLI does not expose
+        (the LM launcher pins ``buckets=(batch,)``).
+        """
+        kw = dict(
+            buckets=tuple(int(b) for b in str(args.buckets).split(",")),
+            max_delay_ms=float(args.max_delay_ms),
+            queue_capacity=int(args.queue_capacity),
+            overload=args.overload,
+            datapath="int8" if getattr(args, "int8", False) else "float",
+        )
+        if getattr(args, "request_timeout_ms", None) is not None:
+            kw["request_timeout_ms"] = float(args.request_timeout_ms)
+        kw.update(overrides)
+        return cls(**kw)

@@ -22,11 +22,13 @@ from __future__ import annotations
 
 import re
 import time
+import warnings
 from typing import Any, Callable, Dict, Iterable, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.serve.batching import BucketBatcher, pad_batch
+from repro.serve.config import ServeConfig
 from repro.serve.metrics import ServeMetrics
 
 
@@ -70,6 +72,32 @@ class ServeEngine:
 
     @classmethod
     def for_model_plan(
+        cls,
+        plan,
+        params,
+        *,
+        buckets: Sequence[int] = (1, 4, 16, 64),
+        datapath: str = "float",
+        requant: Optional[Sequence[Tuple[Any, Any]]] = None,
+        warm: bool = True,
+    ) -> "ServeEngine":
+        """Deprecated: use ``repro.serve.Server.from_plan(plan, params,
+        ServeConfig(buckets=..., datapath=...))`` — the facade owns
+        admission (threading, backpressure, deadlines) on top of this
+        engine.  Delegates to :meth:`build_for_plan` unchanged."""
+        warnings.warn(
+            "ServeEngine.for_model_plan is deprecated; construct the "
+            "serving facade via repro.serve.Server.from_plan(plan, "
+            "params, ServeConfig(...))",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return cls.build_for_plan(
+            plan, params, buckets=buckets, datapath=datapath,
+            requant=requant, warm=warm)
+
+    @classmethod
+    def build_for_plan(
         cls,
         plan,
         params,
@@ -141,9 +169,21 @@ class ServeEngine:
                 return b
         raise ValueError(f"batch {n} exceeds the largest bucket {self.buckets[-1]}")
 
-    def run_bucket(self, bucket: int, images: np.ndarray):
-        """Run one already-padded (bucket, H, W, C) batch; returns the raw
-        device output (async — caller materializes)."""
+    def stage(self, images: np.ndarray):
+        """Host->device staging for one padded batch: ``jax.device_put``
+        dispatched now, so a caller that stages batch k+1 while batch k's
+        executable runs overlaps the transfer with compute (the Server
+        flush worker's double buffer).  The staged buffer is what the
+        donated-input executables consume in place on backends that
+        implement donation (``execute.executable_for``)."""
+        import jax
+
+        return jax.device_put(images)
+
+    def run_bucket(self, bucket: int, images):
+        """Run one already-padded (bucket, H, W, C) batch (host array or
+        a ``stage``-d device array); returns the raw device output
+        (async — caller materializes)."""
         ex = self._bucket_exec(bucket)
         if self._datapath == "float":
             return ex(self._params, images)
@@ -168,61 +208,28 @@ def serve_stream(
     batcher: Optional[BucketBatcher] = None,
     metrics: Optional[ServeMetrics] = None,
 ) -> ServeMetrics:
-    """Serve an arrival-timed request stream through ``engine``.
+    """Deprecated: use ``repro.serve.Server(engine, ServeConfig(...))
+    .run_stream(stream)``.
 
-    ``stream`` yields ``(t_arrival_s, image, ...)`` with arrivals as
-    offsets from loop start (``data.pipeline.SyntheticRequestStream``).
-    The loop sleeps until each arrival (flushing deadline-expired buckets
-    while it waits), submits, flushes any size-triggered batches, and
-    drains the queue at stream end.  Results land on each
-    :class:`~repro.serve.batching.Request` (``r.result``); returns the
-    filled :class:`ServeMetrics` (``wall_s`` set).
+    The single-threaded open loop this function used to implement now
+    lives (verbatim semantics) in ``Server.run_stream(stream,
+    producers=0)``; this shim builds a Server around ``engine`` with the
+    matching config and delegates, so metrics output is identical
+    (asserted by tests/test_serve.py).
     """
-    batcher = batcher or BucketBatcher(
-        engine.buckets, max_delay_s=max_delay_s, clock=clock
+    warnings.warn(
+        "serve_stream is deprecated; use repro.serve.Server(engine, "
+        "ServeConfig(...)).run_stream(stream)",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    metrics = metrics or ServeMetrics(engine.buckets)
-    t0 = clock()
-    requests = []
+    from repro.serve.server import Server
 
-    def flush(force: bool = False) -> None:
-        while True:
-            got = batcher.poll(force=force)
-            if got is None:
-                return
-            bucket, reqs = got
-            depth = batcher.depth
-            t_a = clock()
-            out = np.asarray(
-                engine.run_bucket(bucket, pad_batch([r.payload for r in reqs],
-                                                    bucket))
-            )
-            t_b = clock()
-            for i, r in enumerate(reqs):
-                r.result = out[i]
-            metrics.record_flush(
-                bucket,
-                len(reqs),
-                batch_s=t_b - t_a,
-                latencies_s=[t_b - r.t_submit for r in reqs],
-                queue_depth=depth,
-            )
-
-    for item in stream:
-        t_arr, payload = float(item[0]), item[1]
-        while clock() - t0 < t_arr:
-            deadline = batcher.next_deadline()
-            now = clock()
-            if deadline is not None and deadline <= now:
-                flush()
-                continue
-            wait = t0 + t_arr - now
-            if deadline is not None:
-                wait = min(wait, deadline - now)
-            sleep(max(wait, 0.0))
-        requests.append(batcher.submit(payload))
-        flush()
-    flush(force=True)
-    metrics.wall_s = clock() - t0
-    metrics.requests = requests
-    return metrics
+    cfg = ServeConfig(
+        buckets=engine.buckets,
+        max_delay_ms=max_delay_s * 1e3,
+        datapath=engine._datapath,
+    )
+    srv = Server(engine, cfg, clock=clock, sleep=sleep, batcher=batcher,
+                 metrics=metrics)
+    return srv.run_stream(stream)

@@ -16,8 +16,39 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
+
+#: Schema version stamped on every serve-metrics / BENCH_serve* JSON
+#: artifact (``stamp_payload``).  History:
+#:   1 — implicit (PR 6): no version field; device stamp ad-hoc per writer.
+#:   2 — ``schema_version`` + top-level ``backend``/``device_kind`` header
+#:       (same fields the BENCH kernel artifacts carry), admission
+#:       counters (submitted/shed/expired/overlapped) in totals.
+SCHEMA_VERSION = 2
+
+
+def device_stamp() -> dict:
+    """The ``backend``/``device_kind`` pair every serve artifact carries
+    (same stamp rule as the BENCH_kernels records and tuned_plans keys)."""
+    import jax
+
+    return {"backend": jax.default_backend(),
+            "device_kind": jax.devices()[0].device_kind}
+
+
+def stamp_payload(payload: Optional[dict] = None) -> dict:
+    """THE one place serve JSON writers get their header: schema_version +
+    backend/device_kind, then the caller's fields.  ``ServeMetrics.write``
+    (launcher metrics artifacts) and ``benchmarks/run.py``'s
+    BENCH_serve.json writer both build on this, so ``benchmarks/compare``
+    can machine-scope serve metrics off the header without sniffing
+    records."""
+    out: dict = {"schema_version": SCHEMA_VERSION}
+    out.update(device_stamp())
+    out.update(payload or {})
+    return out
 
 
 @dataclass
@@ -43,6 +74,33 @@ class ServeMetrics:
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
         self._b: Dict[int, _BucketStats] = {b: _BucketStats() for b in self.buckets}
         self.wall_s: Optional[float] = None  # set by the serve loop
+        # Admission counters (conservation: submitted == served + shed +
+        # expired at drain).  Incremented from producer threads AND the
+        # flush worker, so they take the lock — += is not atomic across
+        # bytecodes.
+        self._lock = threading.Lock()
+        self.submitted = 0
+        self.shed = 0
+        self.expired = 0
+        #: flushes whose host->device staging overlapped a prior
+        #: in-flight bucket's compute (the double-buffering win).
+        self.overlapped = 0
+
+    def record_submit(self) -> None:
+        with self._lock:
+            self.submitted += 1
+
+    def record_shed(self) -> None:
+        with self._lock:
+            self.shed += 1
+
+    def record_expired(self, n: int = 1) -> None:
+        with self._lock:
+            self.expired += int(n)
+
+    def record_overlap(self) -> None:
+        with self._lock:
+            self.overlapped += 1
 
     def record_flush(
         self,
@@ -56,13 +114,14 @@ class ServeMetrics:
         """One shipped batch: ``n_real`` requests padded into ``bucket``
         slots, ``batch_s`` of engine wall-clock, per-request end-to-end
         latencies, and the queue depth left behind at flush time."""
-        st = self._b.setdefault(int(bucket), _BucketStats())
-        st.flushes += 1
-        st.images += int(n_real)
-        st.padded += int(bucket) - int(n_real)
-        st.batch_s.append(float(batch_s))
-        st.latencies_s.extend(float(x) for x in latencies_s)
-        st.queue_depths.append(int(queue_depth))
+        with self._lock:
+            st = self._b.setdefault(int(bucket), _BucketStats())
+            st.flushes += 1
+            st.images += int(n_real)
+            st.padded += int(bucket) - int(n_real)
+            st.batch_s.append(float(batch_s))
+            st.latencies_s.extend(float(x) for x in latencies_s)
+            st.queue_depths.append(int(queue_depth))
 
     @property
     def total_images(self) -> int:
@@ -104,6 +163,12 @@ class ServeMetrics:
             "p50_ms": round(_pctile(all_lat, 50) * 1e3, 3),
             "p99_ms": round(_pctile(all_lat, 99) * 1e3, 3),
             "busy_s": round(busy_s, 4),
+            # admission accounting (served == images; conservation:
+            # submitted == served + shed + expired once drained)
+            "submitted": self.submitted,
+            "shed": self.shed,
+            "expired": self.expired,
+            "overlapped": self.overlapped,
         }
         if self.wall_s:
             totals["wall_s"] = round(self.wall_s, 4)
@@ -112,8 +177,10 @@ class ServeMetrics:
                 "totals": totals}
 
     def write(self, path: str, extra: Optional[dict] = None) -> dict:
-        """Write ``snapshot()`` (plus ``extra`` stamp fields) as JSON."""
-        payload = dict(extra or {})
+        """Write ``snapshot()`` (plus ``extra`` stamp fields) as JSON,
+        under the serve schema header (``stamp_payload``: schema_version +
+        backend/device_kind — callers no longer stamp those by hand)."""
+        payload = stamp_payload(extra)
         payload["metrics"] = self.snapshot()
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         with open(path, "w") as f:

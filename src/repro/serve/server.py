@@ -1,0 +1,378 @@
+"""The `Server` facade: threaded admission + flush worker (DESIGN.md §8).
+
+One object owns the whole serving path.  Many producer threads call
+``submit()``; a single dedicated flush worker owns the
+:class:`~repro.serve.batching.BucketBatcher` (its lock is the only thing
+producers and the worker contend on) and drains it on size or deadline.
+A bounded admission queue (``ServeConfig.queue_capacity``) gives
+backpressure with an explicit overload policy — ``block`` producers,
+``shed`` the request, or ``degrade`` to eager smaller-bucket flushes —
+and per-request deadlines expire queued work instead of serving stale
+results.
+
+The worker double-buffers host<->device staging: while bucket ``k``
+computes on device, bucket ``k+1`` is padded and ``jax.device_put`` (and,
+on backends that implement donation, its staged buffer is donated to the
+executable — ``engine.execute.executable_for``).  ``np.asarray`` /
+``jax.block_until_ready`` happens only at result hand-off, so transfer
+and compute overlap across flushes (``ServeMetrics.overlapped`` counts
+the flushes that actually pipelined).
+
+``run_stream(stream, producers=0)`` keeps the PR-6 single-threaded open
+loop — deterministic on an injected clock, and byte-for-byte the metrics
+the deprecated ``serve_stream`` produced; ``producers >= 1`` partitions
+the arrival-timed stream across that many real producer threads and
+serves it through the worker.  Construct via ``Server.from_plan(plan,
+params, ServeConfig(...))`` — the serving-side mirror of
+``ExecutionPolicy -> plan_model`` (§3).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Iterable, List, Optional
+
+import numpy as np
+
+from repro.serve.batching import BucketBatcher, Request, pad_batch
+from repro.serve.config import ServeConfig
+from repro.serve.metrics import ServeMetrics
+
+
+class Server:
+    """Unified serving facade: ``submit`` / ``run_stream`` / ``drain`` /
+    ``close`` over one compile-once engine + one frozen ServeConfig."""
+
+    def __init__(
+        self,
+        engine,
+        config: ServeConfig = ServeConfig(),
+        *,
+        clock: Callable[[], float] = time.monotonic,
+        sleep: Callable[[float], None] = time.sleep,
+        batcher: Optional[BucketBatcher] = None,
+        metrics: Optional[ServeMetrics] = None,
+    ):
+        if tuple(engine.buckets) != tuple(config.buckets):
+            raise ValueError(
+                f"engine buckets {engine.buckets} != config buckets "
+                f"{config.buckets}: one ServeConfig must describe both")
+        self.engine = engine
+        self.config = config
+        self._clock = clock
+        self._sleep = sleep
+        self._real_clock = clock is time.monotonic
+        self.batcher = batcher or BucketBatcher(
+            config.buckets, max_delay_s=config.max_delay_s, clock=clock)
+        self.metrics = metrics or ServeMetrics(config.buckets)
+        #: every admitted request handle, in admission order (what
+        #: ``metrics.requests`` is set to at stream end)
+        self.requests: List[Request] = []
+        self._cv = threading.Condition()
+        self._worker: Optional[threading.Thread] = None
+        self._running = False
+        self._draining = False
+        self._closed = False
+
+    @classmethod
+    def from_plan(
+        cls,
+        plan,
+        params,
+        config: ServeConfig = ServeConfig(),
+        *,
+        requant=None,
+        warm: bool = True,
+        clock: Callable[[], float] = time.monotonic,
+        sleep: Callable[[float], None] = time.sleep,
+    ) -> "Server":
+        """A server for one :class:`~repro.engine.ModelPlan`: builds the
+        compile-once engine (one AOT executable per bucket, warmed before
+        the first request) and wraps it in the facade.  The int8 datapath
+        requires calibrated ``requant`` pairs, exactly as the engine
+        does."""
+        from repro.serve.engine import ServeEngine
+
+        engine = ServeEngine.build_for_plan(
+            plan, params, buckets=config.buckets,
+            datapath=config.datapath, requant=requant, warm=warm)
+        return cls(engine, config, clock=clock, sleep=sleep)
+
+    # -- lifecycle ------------------------------------------------------
+
+    def start(self) -> "Server":
+        """Spawn the flush worker (idempotent; ``submit`` auto-starts)."""
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("start() on a closed Server")
+            if self._running:
+                return self
+            self._running = True
+            self._worker = threading.Thread(
+                target=self._worker_loop,
+                name=f"serve-flush-{self.engine.name}", daemon=True)
+            self._worker.start()
+        return self
+
+    def drain(self, timeout_s: float = 60.0) -> None:
+        """Block until every admitted request reached a terminal state
+        (served or expired) — queued work is force-flushed sub-bucket."""
+        if self._worker is None:
+            self._flush_ready(force=True)
+            return
+        with self._cv:
+            self._draining = True
+            pending = [r for r in self.requests if not r.done.is_set()]
+            self._cv.notify_all()
+        end = time.monotonic() + timeout_s
+        try:
+            for r in pending:
+                if not r.done.wait(max(end - time.monotonic(), 0.0)):
+                    raise TimeoutError(
+                        f"drain: request {r.rid} not completed within "
+                        f"{timeout_s}s (flush worker stuck?)")
+        finally:
+            with self._cv:
+                self._draining = False
+
+    def close(self, timeout_s: float = 60.0) -> None:
+        """Drain, stop the flush worker, and reject further submits.
+        Producers must have stopped submitting (close is the shutdown
+        hand-off, not a cancellation)."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+        self.drain(timeout_s=timeout_s)
+        worker = self._worker
+        with self._cv:
+            self._running = False
+            self._cv.notify_all()
+        if worker is not None:
+            worker.join(timeout=timeout_s)
+            if worker.is_alive():
+                raise TimeoutError("close: flush worker did not exit")
+            self._worker = None
+
+    def __enter__(self) -> "Server":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- admission ------------------------------------------------------
+
+    def _admit(self, payload: Any, now: Optional[float] = None,
+               deadline_s: Optional[float] = None) -> Request:
+        """Shed-or-enqueue + counters (the non-blocking piece shared by
+        ``submit`` and the inline open loop).  Caller holds no locks the
+        batcher needs; ``requests`` append is atomic under the GIL."""
+        t = self._clock() if now is None else float(now)
+        if deadline_s is None and self.config.request_timeout_s is not None:
+            deadline_s = t + self.config.request_timeout_s
+        cap = self.config.queue_capacity
+        if (cap and self.config.overload == "shed"
+                and self.batcher.depth >= cap):
+            r = Request(self.batcher.take_rid(), payload, t,
+                        deadline_s=deadline_s)
+            r.status = "shed"
+            r.done.set()
+            self.metrics.record_submit()
+            self.metrics.record_shed()
+        else:
+            r = self.batcher.submit(payload, now=now, deadline_s=deadline_s)
+            self.metrics.record_submit()
+        self.requests.append(r)
+        return r
+
+    def submit(self, payload: Any, *, deadline_s: Optional[float] = None,
+               now: Optional[float] = None) -> Request:
+        """Thread-safe admission: enqueue one request for the flush
+        worker; returns its handle (wait on ``r.done``; ``r.status``
+        lands on served / shed / expired).  Under the ``block`` overload
+        policy a full queue makes this call wait for space — that is the
+        backpressure."""
+        self.start()
+        cfg = self.config
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("submit() on a closed Server")
+            if cfg.queue_capacity and cfg.overload == "block":
+                while (self.batcher.depth >= cfg.queue_capacity
+                       and self._running):
+                    self._cv.wait(0.05)
+            r = self._admit(payload, now=now, deadline_s=deadline_s)
+            self._cv.notify_all()
+        return r
+
+    # -- the flush path (worker-owned in threaded mode) -----------------
+
+    def _finish_expired(self, r: Request) -> None:
+        r.status = "expired"
+        self.metrics.record_expired()
+        r.done.set()
+
+    def _dispatch(self, bucket: int, reqs: List[Request]):
+        """Stage one batch (pad + device_put) and launch its compute
+        asynchronously.  Called back-to-back with a prior in-flight
+        batch, the device_put here overlaps that batch's compute — the
+        double-buffering."""
+        t0 = self._clock()
+        depth = self.batcher.depth
+        staged = self.engine.stage(
+            pad_batch([r.payload for r in reqs], bucket))
+        out = self.engine.run_bucket(bucket, staged)
+        return (bucket, reqs, out, t0, depth)
+
+    def _finalize(self, dispatched) -> None:
+        """Result hand-off: the ONLY place the flush path blocks on
+        device work (np.asarray == block_until_ready)."""
+        bucket, reqs, out, t0, depth = dispatched
+        arr = np.asarray(out)
+        t1 = self._clock()
+        for i, r in enumerate(reqs):
+            r.result = arr[i]
+            r.status = "served"
+            r.done.set()
+        self.metrics.record_flush(
+            bucket, len(reqs), batch_s=t1 - t0,
+            latencies_s=[t1 - r.t_submit for r in reqs],
+            queue_depth=depth)
+
+    def _overloaded_degrade(self) -> bool:
+        cap = self.config.queue_capacity
+        return bool(cap and self.config.overload == "degrade"
+                    and self.batcher.depth >= cap)
+
+    def _flush_ready(self, force: bool = False) -> None:
+        """Inline flush: expire + serve every currently-shippable batch
+        synchronously (the single-threaded open loop's arm — no staging
+        overlap; the threaded pipeline lives in ``_worker_loop``)."""
+        while True:
+            now = self._clock()
+            for r in self.batcher.purge_expired(now):
+                self._finish_expired(r)
+            got = self.batcher.poll(now=now, force=force)
+            if got is None:
+                return
+            self._finalize(self._dispatch(*got))
+
+    def _worker_loop(self) -> None:
+        """The dedicated flush worker: the one consumer of the batcher.
+
+        Keeps at most one batch in flight on device; when a second batch
+        becomes shippable it is staged and launched BEFORE the in-flight
+        one is finalized, so its transfer overlaps the running compute.
+        Exits when the server stops and the queue is drained.
+        """
+        inflight = None
+        while True:
+            with self._cv:
+                now = self._clock()
+                expired = self.batcher.purge_expired(now)
+                eager = (self._draining or not self._running
+                         or self._overloaded_degrade())
+                got = self.batcher.poll(now=now, force=eager)
+                if expired or got:
+                    # queue depth dropped: wake block-policy producers
+                    self._cv.notify_all()
+                if got is None and not expired and inflight is None:
+                    if not self._running and self.batcher.depth == 0:
+                        self._cv.notify_all()
+                        return
+                    dl = self.batcher.next_deadline()
+                    # An injected clock may not advance with real time, so
+                    # cap the real-time cv wait and re-read it frequently.
+                    cap = None if self._real_clock else 0.05
+                    timeout = cap if dl is None else max(dl - now, 0.0)
+                    if cap is not None and timeout is not None:
+                        timeout = min(timeout, cap)
+                    self._cv.wait(timeout)
+                    continue
+            for r in expired:
+                self._finish_expired(r)
+            if got is not None:
+                nxt = self._dispatch(*got)  # stage while inflight computes
+                if inflight is not None:
+                    self.metrics.record_overlap()
+                    self._finalize(inflight)
+                inflight = nxt
+            elif inflight is not None:
+                self._finalize(inflight)
+                inflight = None
+
+    # -- stream drivers -------------------------------------------------
+
+    def run_stream(self, stream: Iterable, *, producers: int = 0) -> ServeMetrics:
+        """Serve an arrival-timed request stream; returns filled metrics.
+
+        ``producers == 0``: the deterministic single-threaded open loop
+        (admit at arrival times on the injected clock, flush size- and
+        deadline-triggered batches inline) — the PR-6 ``serve_stream``
+        semantics, still what the fake-clock tests and the concurrency
+        benchmark's baseline arm drive.  ``producers >= 1``: partition
+        the stream round-robin across that many real producer threads
+        submitting through :meth:`submit` while the flush worker drains.
+        """
+        if producers and producers > 0:
+            return self._run_stream_threaded(stream, int(producers))
+        return self._run_stream_inline(stream)
+
+    def _run_stream_inline(self, stream: Iterable) -> ServeMetrics:
+        cfg = self.config
+        t0 = self._clock()
+        for item in stream:
+            t_arr, payload = float(item[0]), item[1]
+            while self._clock() - t0 < t_arr:
+                deadline = self.batcher.next_deadline()
+                now = self._clock()
+                if deadline is not None and deadline <= now:
+                    self._flush_ready()
+                    continue
+                wait = t0 + t_arr - now
+                if deadline is not None:
+                    wait = min(wait, deadline - now)
+                self._sleep(max(wait, 0.0))
+            if (cfg.queue_capacity and cfg.overload in ("block", "degrade")
+                    and self.batcher.depth >= cfg.queue_capacity):
+                # The inline loop IS the flush worker, so both waiting
+                # for space (block) and eager draining (degrade) mean the
+                # same thing here: ship what is queued, sub-bucket, now.
+                self._flush_ready(force=True)
+            self._admit(payload)
+            self._flush_ready()
+        self._flush_ready(force=True)
+        self.metrics.wall_s = self._clock() - t0
+        self.metrics.requests = self.requests
+        return self.metrics
+
+    def _run_stream_threaded(self, stream: Iterable,
+                             producers: int) -> ServeMetrics:
+        items = list(stream)
+        self.start()
+        t0 = self._clock()
+
+        def producer(k: int) -> None:
+            for item in items[k::producers]:
+                t_arr = float(item[0])
+                while True:
+                    now = self._clock()
+                    if now - t0 >= t_arr:
+                        break
+                    self._sleep(min(t_arr - (now - t0), 0.05))
+                self.submit(item[1])
+
+        threads = [
+            threading.Thread(target=producer, args=(k,),
+                             name=f"serve-producer-{k}", daemon=True)
+            for k in range(producers)
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        self.drain()
+        self.metrics.wall_s = self._clock() - t0
+        self.metrics.requests = list(self.requests)
+        return self.metrics
