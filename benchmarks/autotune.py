@@ -10,7 +10,9 @@ Tunes, through ``repro.engine.autotune`` (DESIGN.md §7):
   table ``benchmarks.run`` times, so the ``tuned`` bench variants run off
   exactly the plans tuned here);
 - their int8 counterparts (``INT8_SHAPES`` — the integer inference lane,
-  where the exact chunked-f32 substrate routinely wins on CPU);
+  where the exact chunked-f32 substrate routinely wins on CPU) and the
+  same shapes on the 5-bit MSR weight lane (``INT5_SHAPES`` — ``w_bits=5``
+  plans with their own ``... w5`` cache keys, DESIGN.md §9.3);
 - the full VGG-16 / AlexNet float model walks plus the smoke-config int8
   walks (full-size int8 oracle measurements take minutes on CPU; pass
   ``--full-int8`` to include them).
@@ -60,6 +62,15 @@ INT8_SHAPES: Tuple = (
     ("wide512_int8", (1, 32, 512, 64), (3, 3, 64, 64), 1, 1),
 )
 
+#: The integer shapes again on the sub-8-bit MSR weight lane: ``w_bits=5``
+#: plans (decompressed operands with |w| <= 31 — DESIGN.md §9.3) get their
+#: own cache keys (``... w5``) because the tightened f32exact chunking
+#: bound changes which schedule wins.
+INT5_SHAPES: Tuple = tuple(
+    (name.replace("_int8", "_int5"), xs, ws, stride, pad)
+    for name, xs, ws, stride, pad in INT8_SHAPES
+)
+
 #: The --smoke search: one small int8 layer, two candidates (oracle vs
 #: f32exact) — a complete tune->persist->reload round-trip in seconds.
 SMOKE_SHAPES: Tuple = (
@@ -67,7 +78,7 @@ SMOKE_SHAPES: Tuple = (
 )
 
 
-def _spec_kw(xs, ws, stride, pad, int8: bool) -> Dict:
+def _spec_kw(xs, ws, stride, pad, int8: bool, w_bits: int = 8) -> Dict:
     """tune_conv_layer kwargs for one shape-table row."""
     return dict(
         stride=stride,
@@ -78,10 +89,12 @@ def _spec_kw(xs, ws, stride, pad, int8: bool) -> Dict:
         in_sz=1 if int8 else 4,
         w_sz=1 if int8 else 4,
         out_sz=1 if int8 else 4,
+        w_bits=w_bits,
     )
 
 
-def _tune_shape(name, xs, ws, stride, pad, *, int8, reps, force, batch=1):
+def _tune_shape(name, xs, ws, stride, pad, *, int8, reps, force, batch=1,
+                w_bits=8):
     from repro.engine import tune_conv_layer
 
     res = tune_conv_layer(
@@ -93,7 +106,7 @@ def _tune_shape(name, xs, ws, stride, pad, *, int8, reps, force, batch=1):
         reps=reps,
         force=force,
         batch=batch,
-        **_spec_kw(xs, ws, stride, pad, int8),
+        **_spec_kw(xs, ws, stride, pad, int8, w_bits),
     )
     return (name if batch == 1 else f"{name}@n{batch}"), res
 
@@ -141,9 +154,10 @@ def tune_cell(
                 CNN_REGISTRY[cell], _policy(), datapath="int8", reps=reps,
                 force=force,
             )
-        rows = [r for r in FUSED_SHAPES + INT8_SHAPES if r[0].startswith(cell)]
+        rows = [r for r in FUSED_SHAPES + INT8_SHAPES + INT5_SHAPES
+                if r[0].startswith(cell)]
     elif cell == "wide512":
-        rows = [r for r in FUSED_SHAPES + INT8_SHAPES
+        rows = [r for r in FUSED_SHAPES + INT8_SHAPES + INT5_SHAPES
                 if r[0].startswith("wide512")]
     elif cell == "smoke":
         rows = list(SMOKE_SHAPES)
@@ -153,8 +167,9 @@ def tune_cell(
         for batch in batches:
             results.append(
                 _tune_shape(name, xs, ws, stride, pad,
-                            int8=name.endswith("int8"), reps=reps,
-                            force=force, batch=int(batch))
+                            int8=name.endswith(("int8", "int5")), reps=reps,
+                            force=force, batch=int(batch),
+                            w_bits=5 if name.endswith("int5") else 8)
             )
     return results
 
@@ -295,14 +310,15 @@ def main(argv: Optional[List[str]] = None) -> int:
         # stash the re-plan arguments for --check (not serialized); batch
         # sweeps suffix names with @n{N}, so match on the base name
         base, _, nsuf = name.partition("@n")
-        if base in {r[0] for r in
-                    FUSED_SHAPES + INT8_SHAPES + SMOKE_SHAPES}:
-            shape = next(r for r in FUSED_SHAPES + INT8_SHAPES + SMOKE_SHAPES
-                         if r[0] == base)
+        tables = FUSED_SHAPES + INT8_SHAPES + INT5_SHAPES + SMOKE_SHAPES
+        if base in {r[0] for r in tables}:
+            shape = next(r for r in tables if r[0] == base)
             _, xs, ws, stride, pad = shape
             row["_args"] = ((xs[1], xs[2]), xs[3], ws[0], ws[3])
             row["_kw"] = dict(
-                _spec_kw(xs, ws, stride, pad, base.endswith("int8")),
+                _spec_kw(xs, ws, stride, pad,
+                         base.endswith(("int8", "int5")),
+                         5 if base.endswith("int5") else 8),
                 batch=int(nsuf) if nsuf else 1,
             )
         rows.append(row)

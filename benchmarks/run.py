@@ -222,8 +222,11 @@ def bench_kernels_fused() -> None:
     The ``*_int8`` records track the integer inference lane the same way
     (metrics ``us_default``/``us_tuned``/``tuned_speedup`` only, so the
     slow integer-oracle default never enters the absolute ``us_fused``
-    gate).  All records carry ``backend`` + ``device_kind`` stamps —
-    ``benchmarks.compare`` skips absolute us gates across device kinds.
+    gate); the ``*_int5`` records repeat those shapes on ``w_bits=5``
+    plans (the MSR weight lane, DESIGN.md §9.3) through the
+    ``run_conv2d`` dispatch seam.  All records carry ``backend`` +
+    ``device_kind`` stamps — ``benchmarks.compare`` skips absolute us
+    gates across device kinds.
     Writes BENCH_kernels.json for the perf trajectory.
     """
     import jax
@@ -235,7 +238,7 @@ def bench_kernels_fused() -> None:
     emu_policy = ExecutionPolicy(emulate_hw=True)
     tuned_policy = ExecutionPolicy(tuning="cached")
 
-    def resolve_plan(xs, ws, stride, pad, policy=None, int8=False):
+    def resolve_plan(xs, ws, stride, pad, policy=None, int8=False, w_bits=8):
         """The resolved plan for one arm — its describe() is recorded so
         bench-gate regressions are attributable to schedule changes."""
         return plan_conv_layer(
@@ -243,11 +246,12 @@ def bench_kernels_fused() -> None:
             relu=True, has_bias=not int8,
             requant_kind="mult_shift" if int8 else None,
             in_sz=1 if int8 else 4, w_sz=1 if int8 else 4,
-            out_sz=1 if int8 else 4,
+            out_sz=1 if int8 else 4, w_bits=w_bits,
             policy=policy or ExecutionPolicy())
 
-    def plan_record(xs, ws, stride, pad, policy=None, int8=False):
-        return resolve_plan(xs, ws, stride, pad, policy, int8).describe()
+    def plan_record(xs, ws, stride, pad, policy=None, int8=False, w_bits=8):
+        return resolve_plan(xs, ws, stride, pad, policy, int8,
+                            w_bits).describe()
 
     backend = jax.default_backend()
     device_kind = jax.devices()[0].device_kind
@@ -342,6 +346,51 @@ def bench_kernels_fused() -> None:
                         "plan": plan_record(xs, ws, stride, pad, int8=True),
                         "plan_tuned": plan_record(xs, ws, stride, pad,
                                                   tuned_policy, int8=True)})
+
+    # Sub-8-bit weight lane: the same integer shapes with MSR-decompressed
+    # int5 operands (|w| <= 31) and the shift folded into the requant pair
+    # (DESIGN.md §9.3).  Timed through run_conv2d on the resolved w_bits=5
+    # plans — the dedicated dispatch seam the serving lane uses — so the
+    # records catch schedule regressions in the tightened f32exact chunking
+    # (w_abs_max=31 widens the lossless channel chunks ~4x on CPU).
+    from repro.engine import run_conv2d
+    print("section,name,us_default,us_tuned,tuned_speedup,backend")
+    for name, xs, ws, stride, pad in INT8_SHAPES:
+        name = name.replace("_int8", "_int5")
+        key = jax.random.PRNGKey(0)
+        x = jax.random.randint(key, xs, 0, 255, jnp.uint8)
+        w = jax.random.randint(jax.random.fold_in(key, 1), ws, -31, 31,
+                               jnp.int8)
+        rq = (jnp.full((ws[-1],), 16384, jnp.int32),
+              jnp.full((ws[-1],), 20, jnp.int32))
+        plan5 = resolve_plan(xs, ws, stride, pad, int8=True, w_bits=5)
+        plan5_t = resolve_plan(xs, ws, stride, pad, tuned_policy,
+                               int8=True, w_bits=5)
+
+        def int5_default():
+            return jax.block_until_ready(
+                run_conv2d(plan5, x, w, None, rq))
+
+        def int5_tuned():
+            return jax.block_until_ready(
+                run_conv2d(plan5_t, x, w, None, rq))
+
+        if plan5 == plan5_t:
+            us_def = _timeit(int5_default, n=2)
+            us_t, tuned_speedup = us_def, 1.0
+        else:
+            us_def, us_t, tuned_speedup = _timeit_pair(
+                int5_default, int5_tuned, n=2)
+        print(f"kernels_fused,{name},{us_def:.0f},{us_t:.0f},"
+              f"{tuned_speedup:.2f},{backend}")
+        records.append({"name": name, "x": list(xs), "w": list(ws),
+                        "stride": stride, "padding": pad,
+                        "us_default": round(us_def, 1),
+                        "us_tuned": round(us_t, 1),
+                        "tuned_speedup": round(tuned_speedup, 2),
+                        **stamp,
+                        "plan": plan5.describe(),
+                        "plan_tuned": plan5_t.describe()})
 
     # Training direction: value+grad through the same dispatcher.
     grad_shapes = [

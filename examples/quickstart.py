@@ -6,6 +6,8 @@
    bit-faithful engine, and the analytical model (Table I numbers).
 2. The TPU-native TrIM conv kernel (Pallas, interpret mode on CPU).
 3. A tiny LM: one train step + greedy decode through the serve path.
+4. The sub-8-bit MSR weight lane: 5-bit packed weights, expect-value
+   compensation, and the 5/8 weight-traffic ratio (DESIGN.md §9.3).
 """
 import numpy as np
 
@@ -88,7 +90,32 @@ def demo_lm():
     print("greedy decode:", [int(t[0]) for t in outs])
 
 
+def demo_int5():
+    from repro.core.trim.model import PAPER_ENGINE, VGG16_LAYERS, \
+        trim_memory_accesses
+    from repro.core.trim.quant import (msr_compress, msr_operand, pack_int5,
+                                       unpack_int5)
+
+    print("=== 4. int5 MSR weight lane (DESIGN.md §9.3) ===")
+    rng = np.random.default_rng(0)
+    w = rng.integers(-127, 128, (3, 3, 8, 16)).astype(np.int8)
+    codes, shifts = msr_compress(w)          # sign + 4-bit MSR, t per channel
+    w5, e = msr_operand(codes, shifts)       # exact w_hat == w5 << e
+    packed = pack_int5(codes)                # 5 bits/weight on the wire
+    assert (unpack_int5(packed, w.size) == codes.reshape(-1)).all()
+    err = np.abs((np.int32(w5) << e) - w.astype(np.int32))
+    print(f"packed {w.size} int8 weights into {packed.nbytes} bytes "
+          f"({8 * packed.nbytes / w.size:.2f} bits/weight), "
+          f"max |w_hat - w| = {int(err.max())}")
+    l = VGG16_LAYERS[0]
+    full = trim_memory_accesses(l, PAPER_ENGINE).weight_reads
+    msr = trim_memory_accesses(l, PAPER_ENGINE, weight_bits=5).weight_reads
+    print(f"{l.name} weight reads: {full:.3f}M (int8) -> {msr:.3f}M "
+          f"(int5, exactly 5/8)")
+
+
 if __name__ == "__main__":
     demo_trim_dataflow()
     demo_kernel()
     demo_lm()
+    demo_int5()

@@ -320,8 +320,17 @@ def trim_input_fetches(layer: ConvLayerSpec, native_k: int = 3) -> float:
 
 def trim_memory_accesses(layer: ConvLayerSpec,
                          eng: TrimEngineConfig = PAPER_ENGINE,
-                         batch: int = 1) -> MemoryAccesses:
-    """First-principles TrIM access model (see module docstring)."""
+                         batch: int = 1,
+                         weight_bits: Optional[int] = None) -> MemoryAccesses:
+    """First-principles TrIM access model (see module docstring).
+
+    ``weight_bits`` models a sub-``B``-bit stored weight lane: accesses are
+    counted in ``B``-bit element units, so storing each weight in
+    ``weight_bits`` bits scales ``weight_reads`` by ``weight_bits / B`` —
+    the int5 MSR lane (DESIGN.md §9.3) ships 5/8 of the int8 lane's weight
+    traffic (its 4-bit magnitude plane alone is exactly half; the sign
+    plane is the remaining 1/8).  ``None`` keeps full-width weights.
+    """
     tiles = _kernel_tiles(layer.K, eng.K) if layer.K > eng.K else 1
     # Every group of P_N filters requires one full pass over the ifmaps
     # (broadcast to all cores); weights are fetched exactly once overall.
@@ -331,6 +340,11 @@ def trim_memory_accesses(layer: ConvLayerSpec,
     passes = math.ceil(layer.N / eng.P_N)
     ifmap_reads = batch * passes * layer.M * trim_input_fetches(layer, eng.K)
     weight_reads = layer.N * layer.M * layer.K * layer.K
+    if weight_bits is not None:
+        if not 0 < weight_bits <= eng.B:
+            raise ValueError(
+                f"weight_bits must be in (0, {eng.B}], got {weight_bits}")
+        weight_reads *= weight_bits / eng.B
     ofmap_writes = batch * layer.N * layer.H_O * layer.W_O
     # Psum-buffer traffic: per (filter-group pass, core): S = ceil(M/P_M)
     # temporal steps; step 1 write-only, steps 2..S-1 read+write, step S
@@ -408,11 +422,16 @@ def eyeriss_rs_memory_accesses(layer: ConvLayerSpec, batch: int = 1,
 
 def network_report(layers: Sequence[ConvLayerSpec],
                    eng: TrimEngineConfig = PAPER_ENGINE,
-                   batch: int = 1) -> List[Dict[str, float]]:
-    """Per-layer model outputs in the shape of the paper's Tables I/II."""
+                   batch: int = 1,
+                   weight_bits: Optional[int] = None) -> List[Dict[str, float]]:
+    """Per-layer model outputs in the shape of the paper's Tables I/II.
+
+    ``weight_bits`` scales the weight-read column for sub-8-bit stored
+    weight lanes (see :func:`trim_memory_accesses`)."""
     rows: List[Dict[str, float]] = []
     for l in layers:
-        acc = trim_memory_accesses(l, eng, batch=batch)
+        acc = trim_memory_accesses(l, eng, batch=batch,
+                                   weight_bits=weight_bits)
         rows.append({
             "name": l.name,
             "ops_G": layer_ops(l) / 1e9,

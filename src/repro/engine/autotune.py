@@ -56,7 +56,10 @@ from repro.kernels.trim_conv2d import _vmem_bytes
 #: warning, so stale winners never silently misconfigure new kernels.
 #: v2: layer keys gained the batch axis ``n{N}`` — a schedule measured at
 #: N=1 is not a winner under a loaded server's batch buckets.
-PLAN_CACHE_VERSION = 2
+#: v3: layer keys gained the weight-width axis ``w{bits}`` — the int5 MSR
+#: lane (DESIGN.md §9.3) shares layer geometry with int8 but widens the
+#: f32exact chunking ~4x, so its winners are measured separately.
+PLAN_CACHE_VERSION = 3
 
 #: The policy fields a persisted schedule may override.
 SCHEDULE_FIELDS = ("substrate", "tile_h", "tile_w", "block_c", "block_f")
@@ -110,13 +113,16 @@ def layer_key(
     out_sz: int,
     emulate_hw: bool,
     batch: int = 1,
+    w_bits: int = 8,
 ) -> str:
     """The layer's plan-cache key: geometry + dtype byte sizes + epilogue.
 
     ``batch`` is the batch size the schedule was measured at — a serving
     bucket runs N images per call, and the winning schedule can differ
     from the N=1 winner (the serving core plans each bucket with its own
-    batch, so each bucket gets its own persisted winner).
+    batch, so each bucket gets its own persisted winner).  ``w_bits`` is
+    the stored weight width (8, or 5 for the MSR lane): the sub-8-bit
+    operands change the f32exact chunk count, so the lanes tune apart.
 
     Backend, device kind, and code version live at the cache-file level
     (:func:`cache_path`, ``PLAN_CACHE_VERSION``) — together they complete
@@ -128,7 +134,7 @@ def layer_key(
     return (
         f"conv2d n{batch} h{x_hw[0]}x{x_hw[1]} c{c_in} k{k} f{c_out} "
         f"s{stride} p{pad} g{groups} ep{epi} "
-        f"sz{in_sz}.{w_sz}.{out_sz} emu{int(emulate_hw)}"
+        f"sz{in_sz}.{w_sz}.{out_sz} emu{int(emulate_hw)} w{w_bits}"
     )
 
 
@@ -404,9 +410,13 @@ def _measure_plan(
     requant_shift = None
     bias = None
     if in_sz == 1:
+        # Sub-8-bit plans are measured with representative small-magnitude
+        # operands: the f32exact substrate's chunk count (its cost) depends
+        # on the |w| bound the plan's w_bits guarantees.
+        wmax = (1 << plan.w_bits) - 1 if plan.w_bits < 8 else 127
         x = jax.random.randint(key, x_shape, 0, 255, jnp.uint8)
         w = jax.random.randint(
-            jax.random.fold_in(key, 1), w_shape, -127, 127, jnp.int8
+            jax.random.fold_in(key, 1), w_shape, -wmax, wmax, jnp.int8
         )
         if plan.requant_kind == "mult_shift":
             requant = (
@@ -529,6 +539,7 @@ def tune_conv_layer(
     in_sz: int = 4,
     w_sz: int = 4,
     out_sz: int = 4,
+    w_bits: int = 8,
     policy: ExecutionPolicy = ExecutionPolicy(),
     batch: int = 1,
     warmup: int = 1,
@@ -558,6 +569,7 @@ def tune_conv_layer(
         in_sz=in_sz,
         w_sz=w_sz,
         out_sz=out_sz,
+        w_bits=w_bits,
     )
     key = layer_key(
         x_hw, c_in, k, c_out, emulate_hw=policy.resolve().emulate_hw, batch=batch, **kw
@@ -685,6 +697,7 @@ def tuned_schedule(
     in_sz: int,
     w_sz: int,
     out_sz: int,
+    w_bits: int = 8,
     policy: ExecutionPolicy,
     batch: int = 1,
 ) -> Optional[Dict[str, object]]:
@@ -705,6 +718,7 @@ def tuned_schedule(
         in_sz=in_sz,
         w_sz=w_sz,
         out_sz=out_sz,
+        w_bits=w_bits,
     )
     key = layer_key(
         x_hw, c_in, k, c_out, emulate_hw=policy.resolve().emulate_hw, batch=batch, **kw
@@ -731,9 +745,10 @@ def tune_model(
     forwards to :func:`tune_conv_layer` (``reps``, ``force``, ``batch`` —
     pass the serving bucket's batch size to tune the model for it, …).
     """
-    if datapath not in ("float", "int8"):
-        raise ValueError(f"datapath {datapath!r} not in ('float', 'int8')")
-    int8 = datapath == "int8"
+    if datapath not in ("float", "int8", "int5"):
+        raise ValueError(
+            f"datapath {datapath!r} not in ('float', 'int8', 'int5')")
+    int8 = datapath in ("int8", "int5")
     pol = policy.resolve()
     results = []
     c = cfg.layers[0].M if c_in is None else int(c_in)
@@ -753,6 +768,7 @@ def tune_model(
             in_sz=1 if int8 else 4,
             w_sz=1 if int8 else 4,
             out_sz=(4 if i == last_i else 1) if int8 else 4,
+            w_bits=5 if datapath == "int5" else 8,
             policy=pol,
             **tune_kw,
         )

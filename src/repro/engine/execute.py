@@ -8,8 +8,9 @@ mode — with the fused epilogue, grouped-conv splitting, the float custom
 VJP, and the ``emulate_hw`` decimation replay all handled here once.
 
 The model-level entry points (:func:`forward`, :func:`loss`,
-:func:`forward_int8`, :func:`calibrate_requant_shifts`,
-:func:`calibrate_requant`) iterate a :class:`~repro.engine.plan.ModelPlan`'s
+:func:`forward_int8`, :func:`forward_int5`,
+:func:`calibrate_requant_shifts`, :func:`calibrate_requant`,
+:func:`calibrate_requant_int5`) iterate a :class:`~repro.engine.plan.ModelPlan`'s
 per-layer plans; they are what ``ConvNet``, the launchers, and the
 benchmarks call — nothing above this layer re-derives kernel kwargs.
 """
@@ -119,15 +120,21 @@ def run_conv2d(
     if plan.substrate in ("oracle", "f32exact"):
         # f32exact: integer convs run exactly on the fast f32 conv path
         # (channel-chunked, bit-identical — ref.conv2d_exact_f32); float
-        # inputs degrade to the plain oracle inside the helper.
+        # inputs degrade to the plain oracle inside the helper.  Sub-8-bit
+        # weight plans tighten the chunking bound: the int5 MSR lane's
+        # decompressed operands satisfy |w| <= 2^w_bits - 1 = 31, widening
+        # the lossless channel chunks ~4x (DESIGN.md §9.3).
         oracle = plan.substrate == "oracle"
-        conv = ref.conv2d_ref if oracle else ref.conv2d_exact_f32
         s = plan.stride
+        kw = dict(padding=plan.padding, groups=plan.groups)
+        if not oracle and plan.w_bits < 8:
+            kw["w_abs_max"] = (1 << plan.w_bits) - 1
+        conv = ref.conv2d_ref if oracle else ref.conv2d_exact_f32
         if plan.decimate:
-            full = conv(x, w, stride=1, padding=plan.padding, groups=plan.groups)
+            full = conv(x, w, stride=1, **kw)
             out = full[:, ::s, ::s, :]
         else:
-            out = conv(x, w, stride=s, padding=plan.padding, groups=plan.groups)
+            out = conv(x, w, stride=s, **kw)
         return apply_epilogue(out, bias, plan.relu, requant_shift, requant)
 
     if plan.groups == 1:
@@ -344,6 +351,97 @@ def calibrate_requant(
     return pairs
 
 
+def forward_int5(
+    plan: ModelPlan,
+    qparams,
+    images_u8: jax.Array,
+    requant: Optional[Sequence[Tuple[jax.Array, jax.Array]]] = None,
+) -> jax.Array:
+    """uint8 images through the MSR-compressed int5 weight lane.
+
+    ``qparams["conv"][i]`` carries ``{"kernel", "shift"}`` from
+    ``nn.conv.quantize_cnn_int5``: the small decompressed operand ``w5``
+    (int8, ``|w5| <= 31``) and the per-output-channel MSR exponent ``e``
+    with ``w_hat == w5 << e`` (``core.trim.quant.msr_operand``).  The conv
+    kernels multiply by ``w5`` unchanged — the exponent is applied
+    losslessly after the fact:
+
+    - calibrated path (``requant`` from :func:`calibrate_requant_int5`):
+      the pairs already absorbed ``e`` via ``fold_shift_into_requant``, so
+      each non-last layer is one fused conv+ReLU+requant pass, same as
+      int8;
+    - dynamic path (no ``requant``): the psums are explicitly left-shifted
+      by ``e`` before the power-of-two requantize (batch-dependent, not
+      servable — mirrors the int8 dynamic path);
+    - the last layer always returns ``psums << e``: full-scale int32
+      features comparable to the int8 lane's output.
+
+    Bit-exactness contract: with calibrated pairs this equals running
+    :func:`forward_int8` on the decompressed weights ``w5 << e`` exactly
+    (DESIGN.md §9.3 has the proof sketch; tests/test_int5.py checks it).
+    """
+    x = images_u8
+    layers = plan.int5.layers
+    n = len(layers)
+    for i, lp in enumerate(layers):
+        p = qparams["conv"][i]
+        w5 = p["kernel"]
+        e = jnp.asarray(p["shift"], jnp.int32)
+        last = i == n - 1
+        if requant is not None and not last:
+            x = run_conv2d(lp, x, w5, None, tuple(requant[i]))
+        else:
+            psum = jnp.left_shift(run_conv2d(lp, x, w5, None, None), e)
+            if last:
+                return psum
+            amax = jnp.maximum(psum.max().astype(jnp.float32), 1.0)
+            shift = jnp.maximum(jnp.ceil(jnp.log2(amax / 255.0)), 0)
+            x = jnp.clip(psum >> shift.astype(jnp.int32), 0, 255).astype(jnp.uint8)
+        if lp.pool:
+            x = max_pool2x2(x)
+    return x
+
+
+def calibrate_requant_int5(
+    plan: ModelPlan, qparams, sample_u8, per_channel: bool = True
+) -> List[Tuple[jax.Array, jax.Array]]:
+    """(mult, shift) calibration for the int5 lane, exponent pre-folded.
+
+    Same procedure as :func:`calibrate_requant` — map each non-last
+    layer's observed full-scale psum range onto [0, 255] — except the
+    psums observed here are ``psum5 << e`` (the MSR exponent restored),
+    and the resulting pairs are returned with ``e`` folded back in
+    (``core.trim.quant.fold_shift_into_requant``), so the fused kernels
+    can consume the raw ``w5`` psums directly:
+    ``requant(psum5, m, s - e) == requant(psum5 << e, m, s)`` exactly.
+    """
+    from repro.core.trim.quant import fold_shift_into_requant
+    from repro.kernels.requant import scale_to_mult_shift
+
+    x = sample_u8
+    pairs: List[Tuple[jax.Array, jax.Array]] = []
+    for i, lp in enumerate(plan.int5.layers[:-1]):
+        p = qparams["conv"][i]
+        w5 = p["kernel"]
+        e = np.asarray(p["shift"], np.int32)
+        psum5 = run_conv2d(lp, x, w5, None, None)
+        full = jnp.left_shift(psum5, jnp.asarray(e))
+        axes = (0, 1, 2) if per_channel else None
+        amax = np.maximum(np.asarray(full.max(axis=axes), np.float64), 1.0)
+        m, s = scale_to_mult_shift(255.0 / amax)
+        F = w5.shape[-1]
+        m = np.broadcast_to(np.asarray(m, np.int32), (F,))
+        s = np.broadcast_to(np.asarray(s, np.int32), (F,))
+        mf, sf = fold_shift_into_requant(m, s, e)
+        mf = jnp.asarray(mf, jnp.int32)
+        sf = jnp.asarray(sf, jnp.int32)
+        pairs.append((mf, sf))
+        x = requant_mult_shift(psum5, mf, sf).astype(jnp.uint8)
+        if lp.pool:
+            x = max_pool2x2(x)
+    return pairs
+
+
 # ---------------------------------------------------------------------------
 # Serving executables: ahead-of-time compiles per (plan, batch, datapath)
 # ---------------------------------------------------------------------------
@@ -389,12 +487,17 @@ def executable_for(plan: ModelPlan, batch: int, datapath: str = "float"):
       per-channel (mult, shift) int32 pairs and is *required*: the
       uncalibrated dynamic-shift path requantizes off ``psum.max()`` over
       the whole batch, so its per-image outputs depend on batch
-      composition and can never be served from padded buckets.
+      composition and can never be served from padded buckets;
+    - ``datapath="int5"``: same signature as int8, but ``qparams`` carries
+      the MSR operand + per-channel exponent pair per layer
+      (``quantize_cnn_int5``) and ``requant`` the exponent-folded pairs
+      from ``calibrate_requant_int5`` (DESIGN.md §9.3).
 
     Cached per (plan, batch, datapath); equal plans share executables.
     """
-    if datapath not in ("float", "int8"):
-        raise ValueError(f"datapath {datapath!r} not in ('float', 'int8')")
+    if datapath not in ("float", "int8", "int5"):
+        raise ValueError(
+            f"datapath {datapath!r} not in ('float', 'int8', 'int5')")
     cfg = plan.cfg
     H, W = cfg.input_hw
     C = plan.layers[0].c_in
@@ -413,14 +516,16 @@ def executable_for(plan: ModelPlan, batch: int, datapath: str = "float"):
             .compile()
         )
     else:
-        # int8 param shapes come straight from the config (quantize_cnn
-        # concretizes scales, so it is not eval_shape-able).
-        qshapes = {
-            "conv": [
-                {"kernel": jax.ShapeDtypeStruct((l.K, l.K, l.M, l.N), jnp.int8)}
-                for l in cfg.layers
-            ]
-        }
+        # Integer param shapes come straight from the config (quantize_cnn
+        # concretizes scales, so it is not eval_shape-able).  The int5 lane
+        # adds the per-channel MSR exponent array next to each kernel.
+        def _qshape(l):
+            d = {"kernel": jax.ShapeDtypeStruct((l.K, l.K, l.M, l.N), jnp.int8)}
+            if datapath == "int5":
+                d["shift"] = jax.ShapeDtypeStruct((l.N,), jnp.int32)
+            return d
+
+        qshapes = {"conv": [_qshape(l) for l in cfg.layers]}
         rshapes = [
             (
                 jax.ShapeDtypeStruct((l.N,), jnp.int32),
@@ -429,9 +534,12 @@ def executable_for(plan: ModelPlan, batch: int, datapath: str = "float"):
             for l in cfg.layers[:-1]
         ]
         img = jax.ShapeDtypeStruct((batch, H, W, C), jnp.uint8)
+        if datapath == "int5":
+            fwd = lambda qp, x, rq: forward_int5(plan, qp, x, requant=rq)  # noqa: E731
+        else:
+            fwd = lambda qp, x, rq: forward_int8(plan, qp, x, requant=rq)  # noqa: E731
         compiled = (
-            jax.jit(lambda qp, x, rq: forward_int8(plan, qp, x, requant=rq),
-                    donate_argnums=_donate_images_argnums())
+            jax.jit(fwd, donate_argnums=_donate_images_argnums())
             .lower(qshapes, img, rshapes)
             .compile()
         )

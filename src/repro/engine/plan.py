@@ -69,6 +69,13 @@ class ConvLayerPlan:
     vmem_budget: int
     epilogue: str
     geom: Conv2DGeom
+    #: Stored weight width in bits. 8 = plain int8 weights; 5 = the MSR
+    #: compressed lane (sign + 4-bit most-significant-run codes,
+    #: ``core.trim.quant.msr_compress`` — DESIGN.md §9.3), whose runtime
+    #: operand is int8 with ``|w| <= 31``, widening the f32exact lossless
+    #: chunks (`run_conv2d` derives the bound from this field).  Part of
+    #: the plan's identity: tuned-plan cache keys carry it.
+    w_bits: int = 8
     #: True when this schedule came from the autotuner's plan cache
     #: (``repro.engine.autotune``, DESIGN.md §7) rather than the policy
     #: defaults.  Metadata, not schedule: ``compare=False`` keeps a tuned
@@ -111,6 +118,8 @@ class ConvLayerPlan:
             "n_wt": self.geom.n_wt,
             "epilogue": self.epilogue,
         }
+        if self.w_bits != 8:
+            d["w_bits"] = self.w_bits
         if self.tuned:
             d["tuned"] = True
         return d
@@ -133,6 +142,7 @@ def plan_conv_layer(
     in_sz: int = 4,
     w_sz: int = 4,
     out_sz: int = 4,
+    w_bits: int = 8,
     policy: ExecutionPolicy = ExecutionPolicy(),
     batch: int = 1,
 ) -> ConvLayerPlan:
@@ -180,6 +190,7 @@ def plan_conv_layer(
             in_sz=in_sz,
             w_sz=w_sz,
             out_sz=out_sz,
+            w_bits=w_bits,
             policy=pol,
             batch=batch,
         )
@@ -240,6 +251,7 @@ def plan_conv_layer(
         vmem_budget=pol.vmem_budget,
         epilogue=epilogue,
         geom=geom,
+        w_bits=w_bits,
         tuned=tuned,
     )
 
@@ -302,6 +314,23 @@ class ModelPlan:
             self, qparams, sample_u8, per_channel=per_channel
         )
 
+    def quantize_int5(self, params, compensate=True):
+        from repro.nn.conv import quantize_cnn_int5
+
+        return quantize_cnn_int5(params, self.cfg, compensate=compensate)
+
+    def forward_int5(self, qparams, images_u8, requant=None):
+        from repro.engine import execute
+
+        return execute.forward_int5(self, qparams, images_u8, requant=requant)
+
+    def calibrate_requant_int5(self, qparams, sample_u8, per_channel=True):
+        from repro.engine import execute
+
+        return execute.calibrate_requant_int5(
+            self, qparams, sample_u8, per_channel=per_channel
+        )
+
     @property
     def int8(self) -> "ModelPlan":
         """This model's integer-datapath sibling plan: same architecture +
@@ -316,6 +345,21 @@ class ModelPlan:
             batch=self.batch,
         )
 
+    @property
+    def int5(self) -> "ModelPlan":
+        """The MSR-compressed weight lane's sibling plan (DESIGN.md §9.3):
+        identical to :attr:`int8` except every layer plan carries
+        ``w_bits=5``, so ``run_conv2d`` widens the f32exact chunk bound for
+        the ``|w| <= 31`` decompressed operands and the autotuner keys the
+        lane separately.  What ``forward_int5`` actually runs."""
+        return plan_model(
+            self.cfg,
+            self.policy,
+            c_in=self.layers[0].c_in,
+            datapath="int5",
+            batch=self.batch,
+        )
+
     def executable_for(self, batch: int, datapath: str = "float"):
         """Ahead-of-time-compiled model forward for one static batch size.
 
@@ -326,7 +370,10 @@ class ModelPlan:
         retrace.  "float" → ``compiled(params, images_f32)``;
         "int8" → ``compiled(qparams, images_u8, requant)`` with calibrated
         per-layer (mult, shift) pairs (the dynamic-shift requant path is
-        batch-dependent and therefore not servable from buckets).
+        batch-dependent and therefore not servable from buckets);
+        "int5" → same signature, ``qparams`` additionally carrying the
+        per-channel MSR exponents and ``requant`` the exponent-folded pairs
+        from ``calibrate_requant_int5`` (DESIGN.md §9.3).
         """
         from repro.engine import execute
 
@@ -352,9 +399,11 @@ def plan_model(
     :class:`ConvLayerPlan` per layer under the policy.  ``c_in``
     overrides the first layer's input channel count (defaults to
     ``cfg.layers[0].M``).  ``datapath`` is "float" (biased conv + fused
-    bias/ReLU, f32 byte sizes) or "int8" (the paper's integer inference
+    bias/ReLU, f32 byte sizes), "int8" (the paper's integer inference
     lane: bias-free, fused mult+shift requant on every non-last layer,
-    uint8/int8 byte sizes — the last layer emits raw int32 psums).
+    uint8/int8 byte sizes — the last layer emits raw int32 psums), or
+    "int5" (the MSR-compressed weight lane: identical layer shapes and
+    epilogues but ``w_bits=5`` on every layer plan — DESIGN.md §9.3).
     ``batch`` selects batch-specific autotuner winners per layer (serving
     buckets plan at their own N); the default 1 keeps historical plans.
 
@@ -370,14 +419,15 @@ def plan_model(
     ``plan_conv_layer`` call resolves it, and tuning only composes with
     ``substrate="auto"`` — resolving here would erase that marker.
     """
-    if datapath not in ("float", "int8"):
-        raise ValueError(f"datapath {datapath!r} not in ('float', 'int8')")
+    if datapath not in ("float", "int8", "int5"):
+        raise ValueError(
+            f"datapath {datapath!r} not in ('float', 'int8', 'int5')")
     if layer_substrates is not None and len(layer_substrates) != len(cfg.layers):
         raise ValueError(
             f"layer_substrates has {len(layer_substrates)} entries for "
             f"{len(cfg.layers)} conv layers"
         )
-    int8 = datapath == "int8"
+    int8 = datapath in ("int8", "int5")
     plans = []
     c = cfg.layers[0].M if c_in is None else int(c_in)
     last_i = len(cfg.layers) - 1
@@ -401,6 +451,7 @@ def plan_model(
                 in_sz=1 if int8 else 4,
                 w_sz=1 if int8 else 4,
                 out_sz=(4 if i == last_i else 1) if int8 else 4,
+                w_bits=5 if datapath == "int5" else 8,
                 policy=lpol,
                 batch=batch,
             )

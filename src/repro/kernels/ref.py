@@ -44,7 +44,8 @@ def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1,
 
 def conv2d_exact_f32(x: jax.Array, w: jax.Array, stride: int = 1,
                      padding: Optional[int] = None,
-                     groups: int = 1) -> jax.Array:
+                     groups: int = 1,
+                     w_abs_max: Optional[int] = None) -> jax.Array:
     """Integer conv oracle evaluated on the f32 conv path — exactly.
 
     XLA's CPU integer convolution lowers to a scalar loop (two orders of
@@ -62,13 +63,24 @@ def conv2d_exact_f32(x: jax.Array, w: jax.Array, stride: int = 1,
     This is the ``substrate="f32exact"`` arm of the execution engine — a
     per-layer schedule choice the autotuner (DESIGN.md §7) can measure
     against the plain oracle and the Pallas kernel.
+
+    ``w_abs_max`` optionally tightens the weight-magnitude term of the
+    exactness budget below the dtype bound.  The int5 MSR lane (DESIGN.md
+    §9.3) stores its decompressed operands in int8 but guarantees
+    ``|w| <= 31``, which widens the lossless channel chunks ~4x — the
+    chunking loop shrinks accordingly.  The caller owns the bound: values
+    exceeding it would silently break exactness.
     """
     if not (jnp.issubdtype(x.dtype, jnp.integer)
             and jnp.issubdtype(w.dtype, jnp.integer)):
         return conv2d_ref(x, w, stride=stride, padding=padding,
                           groups=groups)
+    w_bound = max(abs(int(jnp.iinfo(w.dtype).min)),
+                  int(jnp.iinfo(w.dtype).max))
+    if w_abs_max is not None:
+        w_bound = min(w_bound, int(w_abs_max))
     bound = (max(abs(int(jnp.iinfo(x.dtype).min)), int(jnp.iinfo(x.dtype).max))
-             * max(abs(int(jnp.iinfo(w.dtype).min)), int(jnp.iinfo(w.dtype).max)))
+             * w_bound)
     K = w.shape[0]
     chunk_c = ((1 << 24) // bound) // (K * K) if bound else 0
     if chunk_c < 1:
@@ -80,7 +92,8 @@ def conv2d_exact_f32(x: jax.Array, w: jax.Array, stride: int = 1,
         return jnp.concatenate(
             [conv2d_exact_f32(x[..., g * cg:(g + 1) * cg],
                               w[..., g * fg:(g + 1) * fg],
-                              stride=stride, padding=padding)
+                              stride=stride, padding=padding,
+                              w_abs_max=w_abs_max)
              for g in range(groups)], axis=-1)
     p = K // 2 if padding is None else padding
     xf = x.astype(jnp.float32)

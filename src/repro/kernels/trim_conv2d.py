@@ -20,8 +20,9 @@ hierarchy (DESIGN.md §2, §4):
   and the K*K shifted views decimate *at the slice* (step-S slices), so only
   the H_O x W_O strided outputs are ever computed.  The FPGA instead streams
   the full stride-1 extent and decimates downstream (§V, AlexNet CL1); that
-  behaviour is preserved as the wrapper's ``emulate_hw=True`` mode for
-  honest Table I/II comparisons (see ``ops.trim_conv2d``).
+  behaviour is preserved for honest Table I/II comparisons — request it
+  with ``ExecutionPolicy(emulate_hw=True)`` and plan through
+  ``repro.engine`` (``plan_conv_layer`` / ``plan_model``; DESIGN.md §3).
 - **Width tiling** (DESIGN.md §4): W_O is split into ``n_wt`` tiles of TW
   output columns; each input block is a ``(TH*S, (TW-1)*S + K)`` window
   with K-S halo columns, mirroring the halo-row logic, so maps wider than

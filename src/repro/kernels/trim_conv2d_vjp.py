@@ -24,7 +24,8 @@ epilogue-fused forward (bias + ReLU in the flush): the ReLU mask is
 pre-activation > 0, and relu'(0) = 0 either way), so no pre-activation
 psums are stashed; dbias is the masked cotangent summed over N/H/W.
 Float path only — the integer/requant datapath stays forward-only, as
-does ``emulate_hw`` (see ``ops.trim_conv2d``).
+does the ``ExecutionPolicy(emulate_hw=True)`` decimation replay (the
+planner routes both around the VJP — ``repro.engine.execute``).
 """
 from __future__ import annotations
 

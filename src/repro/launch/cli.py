@@ -2,8 +2,9 @@
 
 One argparse *parent* carries the execution flags both launchers used to
 re-declare (arch selection, ``--substrate`` / the deprecated
-``--force-pallas`` alias, ``--emulate-hw``, ``--int8``, ``--tuning``),
-mapped onto a single :meth:`repro.engine.ExecutionPolicy.from_args`.
+``--force-pallas`` alias, ``--emulate-hw``, ``--int8``, ``--int5``,
+``--tuning``), mapped onto a single
+:meth:`repro.engine.ExecutionPolicy.from_args`.
 """
 
 from __future__ import annotations
@@ -87,6 +88,15 @@ def execution_parent(
         action="store_true",
         help="also run/compile the int8 inference datapath with the fused "
         "arbitrary-scale requant epilogue",
+    )
+    p.add_argument(
+        "--int5",
+        action="store_true",
+        help="the MSR-compressed int5 weight lane (sign + 4-bit "
+        "most-significant-run codes with expect-value compensation, "
+        "DESIGN.md §9.3): same fused epilogues as --int8 off 5-bit-stored "
+        "weights; takes precedence over --int8 where both select a serving "
+        "datapath",
     )
     p.add_argument(
         "--tuning",

@@ -16,7 +16,9 @@ width tile, epilogue kind, tuned flag) is recorded in the emitted JSON —
 with ``--tuning cached`` each layer runs the autotuner's persisted winner
 (DESIGN.md §7).  ``--int8`` additionally
 compiles the integer inference datapath with the arbitrary-scale fused
-requant epilogue (DESIGN.md §4) and emits a second roofline record.
+requant epilogue (DESIGN.md §4) and emits a second roofline record;
+``--int5`` does the same for the MSR-compressed weight lane
+(DESIGN.md §9.3).
 """
 import argparse
 import json
@@ -40,21 +42,29 @@ from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.core.trim.model import layer_ops
 
 
-def _int8_record(cfg, args, mesh, dp, policy):
-    """Compile the int8 inference forward (fused multiplier+shift requant
+def _int_record(cfg, args, mesh, dp, policy, datapath="int8"):
+    """Compile an integer inference forward (fused multiplier+shift requant
     in every non-last layer) and derive its roofline.  Requant constants
     are placeholder calibrations — the dry-run only studies the compiled
-    schedule, not accuracy."""
+    schedule, not accuracy.  ``datapath="int5"`` compiles the MSR weight
+    lane instead (per-channel exponent operands, DESIGN.md §9.3)."""
     H, W = cfg.input_hw
+    int5 = datapath == "int5"
     qshapes = {"conv": [
-        {"kernel": jax.ShapeDtypeStruct((l.K, l.K, l.M, l.N), jnp.int8)}
+        dict({"kernel": jax.ShapeDtypeStruct((l.K, l.K, l.M, l.N),
+                                             jnp.int8)},
+             **({"shift": jax.ShapeDtypeStruct((l.N,), jnp.int32)}
+                if int5 else {}))
         for l in cfg.layers]}
     requant = [(jnp.full((l.N,), 16384, jnp.int32),
                 jnp.full((l.N,), 20, jnp.int32)) for l in cfg.layers[:-1]]
     imgs = jax.ShapeDtypeStruct((args.batch, H, W, cfg.layers[0].M),
                                 jnp.uint8)
+    mplan = plan_model(cfg, policy)
 
     def infer(qp, u8):
+        if int5:
+            return mplan.forward_int5(qp, u8, requant=requant)
         return cnn_forward_int8(qp, u8, cfg, requant=requant, policy=policy)
 
     rep = jax.tree.map(lambda _: NamedSharding(mesh, P()), qshapes)
@@ -72,11 +82,11 @@ def _int8_record(cfg, args, mesh, dp, policy):
     times = {"compute": flops / PEAK_FLOPS_BF16, "memory": byts / HBM_BW,
              "collective": coll / ICI_BW}
     return {
-        "arch": cfg.name, "shape": f"int8_infer_{H}x{W}_b{args.batch}",
-        "kind": "int8_infer", "chips": mesh.size,
+        "arch": cfg.name, "shape": f"{datapath}_infer_{H}x{W}_b{args.batch}",
+        "kind": f"{datapath}_infer", "chips": mesh.size,
         "multi_pod": args.multi_pod,
         "mesh": {ax: int(mesh.shape[ax]) for ax in mesh.axis_names},
-        "plan": list(plan_model(cfg, policy).int8.describe()),
+        "plan": list((mplan.int5 if int5 else mplan.int8).describe()),
         "compile_s": round(time.time() - t0, 1),
         "memory": hbm_bytes_estimate(compiled.memory_analysis()),
         "cost": {"flops": flops, "bytes accessed": byts},
@@ -177,9 +187,13 @@ def main() -> None:
           f"{r['collective_s']*1e3:.1f}ms  useful "
           f"{r['useful_flops_ratio']:.2f}")
 
-    if args.int8:
-        irec = _int8_record(cfg, args, mesh, dp, policy)
-        itag = (f"{args.arch}__cnn_int8__"
+    lanes = ([("int8", args.int8)]
+             + [("int5", getattr(args, "int5", False))])
+    for datapath, wanted in lanes:
+        if not wanted:
+            continue
+        irec = _int_record(cfg, args, mesh, dp, policy, datapath)
+        itag = (f"{args.arch}__cnn_{datapath}__"
                 f"{'multi' if args.multi_pod else 'single'}")
         with open(os.path.join(args.out, itag + ".json"), "w") as f:
             json.dump(irec, f, indent=1)

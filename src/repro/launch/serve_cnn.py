@@ -16,11 +16,13 @@ pad-and-bucket admission with deadline flush — single-threaded inline
 producer threads feeding the dedicated flush worker (double-buffered
 host<->device staging; bounded queue + ``--overload`` policy).
 
-Execution flags (``--substrate`` / ``--int8`` / ``--tuning``) come from
-the shared launcher parent (``launch.cli``) — ``--tuning cached`` plans
-each bucket off its batch-specific persisted autotuner winners; ``--int8``
-serves the fused integer datapath off calibrated per-channel requant
-pairs (the only batch-shape-independent int8 lane).  ``--check`` (the CI
+Execution flags (``--substrate`` / ``--int8`` / ``--int5`` / ``--tuning``)
+come from the shared launcher parent (``launch.cli``) — ``--tuning
+cached`` plans each bucket off its batch-specific persisted autotuner
+winners; ``--int8`` serves the fused integer datapath off calibrated
+per-channel requant pairs (the only batch-shape-independent int8 lane);
+``--int5`` serves the same fused datapath off MSR-compressed 5-bit-stored
+weights (DESIGN.md §9.3).  ``--check`` (the CI
 serve-smoke / serve-stress gate) exits non-zero unless request
 conservation holds (served + shed + expired == submitted, no request
 left pending), metrics are non-empty, no executable compiled more than
@@ -56,22 +58,32 @@ def make_stream(cfg, args, buckets):
         process=args.arrival,
         burst_sizes=tuple(buckets),
         gap_s=4.0 * args.max_delay_ms / 1e3,
-        dtype="uint8" if args.int8 else "float32",
+        dtype="uint8" if (args.int8 or getattr(args, "int5", False))
+        else "float32",
     )
 
 
 def build_server(cfg, policy, serve_config, *, seed=0, calib_batch=8):
-    """ModelPlan -> params (+ int8 quantization/calibration) -> warm
-    Server (every bucket executable compiled before the first request)."""
+    """ModelPlan -> params (+ integer quantization/calibration) -> warm
+    Server (every bucket executable compiled before the first request).
+
+    The integer datapaths quantize the freshly-initialized float params
+    (int8: symmetric per-tensor weights; int5: the MSR-compressed lane,
+    DESIGN.md §9.3) and calibrate per-channel requant pairs on a sample
+    burst — both requirements of bit-faithful padded-bucket serving."""
     plan = plan_model(cfg, policy)
     params = plan.init(jax.random.PRNGKey(seed))
-    if serve_config.datapath != "int8":
+    if serve_config.datapath == "float":
         return Server.from_plan(plan, params, serve_config)
-    qparams, _ = plan.quantize(params)
     sample = SyntheticRequestStream(
         hw=cfg.input_hw, channels=cfg.layers[0].M, n_classes=cfg.n_classes,
         seed=seed, dtype="uint8").sample_batch(calib_batch)
-    requant = plan.calibrate_requant(qparams, sample)
+    if serve_config.datapath == "int5":
+        qparams, _ = plan.quantize_int5(params)
+        requant = plan.calibrate_requant_int5(qparams, sample)
+    else:
+        qparams, _ = plan.quantize(params)
+        requant = plan.calibrate_requant(qparams, sample)
     return Server.from_plan(plan, qparams, serve_config, requant=requant)
 
 

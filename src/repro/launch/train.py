@@ -58,6 +58,23 @@ def _int8_check(model, params, batch) -> None:
         raise SystemExit("[train] FAIL: non-finite int8 feature map")
 
 
+def _int5_check(model, params, batch) -> None:
+    """Quantize to the MSR-compressed int5 lane (DESIGN.md §9.3), calibrate
+    the exponent-folded requant pairs, and run the fused datapath once."""
+    qp, _ = model.quantize_int5(params)
+    imgs = np.asarray(batch["images"])
+    lo, hi = float(imgs.min()), float(imgs.max())
+    u8 = jnp.asarray(np.clip((imgs - lo) / max(hi - lo, 1e-6) * 255,
+                             0, 255).astype(np.uint8))
+    pairs = model.calibrate_requant_int5(qp, u8)
+    feat = model.forward_int5(qp, u8, requant=pairs)
+    finite = bool(np.isfinite(np.asarray(feat, np.float64)).all())
+    print(f"[train] int5 datapath: output {feat.shape} dtype {feat.dtype} "
+          f"finite={finite} (MSR weights, exponent-folded requant)")
+    if not finite:
+        raise SystemExit("[train] FAIL: non-finite int5 feature map")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(parents=[execution_parent(
         arch_required=True)])
@@ -141,6 +158,13 @@ def main() -> None:
         else:
             b = ds.batch_at(0)
             _int8_check(model, out["state"]["params"],
+                        {"images": jnp.asarray(b["images"])})
+    if getattr(args, "int5", False):
+        if not is_cnn:
+            print("[train] --int5 ignored: LM arch has no int5 conv path")
+        else:
+            b = ds.batch_at(0)
+            _int5_check(model, out["state"]["params"],
                         {"images": jnp.asarray(b["images"])})
 
 

@@ -22,6 +22,9 @@ engine in ``repro.core.trim.engine`` (tests assert this); calibrated
 ``requant_shifts`` (power-of-two) or ``requant`` (arbitrary-scale
 multiplier+shift, per-channel capable) fuse the whole epilogue into the
 kernel so int32 psums never round-trip through HBM (DESIGN.md §2, §4).
+``quantize_cnn_int5`` compresses the int8 weights further to the 5-bit
+MSR lane (sign + 4-bit most-significant-run codes with expect-value
+compensation; DESIGN.md §9.3) consumed by ``ModelPlan.forward_int5``.
 """
 from __future__ import annotations
 
@@ -150,6 +153,42 @@ def quantize_cnn(params: Params, cfg: CNNConfig,
         qw = jnp.clip(jnp.round(w / s), -127, 127).astype(jnp.int8)
         qp["conv"].append({"kernel": qw})
         scales.append(float(s))
+    return qp, scales
+
+
+def quantize_cnn_int5(params: Params, cfg: CNNConfig, compensate: bool = True,
+                      ) -> Tuple[Params, List[float]]:
+    """Float conv weights -> the MSR-compressed int5 lane's runtime params.
+
+    Quantizes to int8 exactly like :func:`quantize_cnn`, then compresses
+    each kernel to sign + 4-bit most-significant-run codes with one shared
+    shift per output channel (``core.trim.quant.msr_compress`` —
+    DESIGN.md §9.3).  Each returned conv entry carries the *decompressed
+    runtime operand pair*:
+
+    - ``"kernel"``: int8 operand ``w5`` with ``|w5| <= 31`` (the
+      expect-value compensation bit already folded in when
+      ``compensate=True``; plain truncation otherwise — the ablation);
+    - ``"shift"``: per-output-channel int32 exponent ``e``, with the
+      decompressed weight ``w_hat == w5 << e`` exactly.
+
+    The 5-bit packed storage form is ``quant.pack_int5(codes)`` — what a
+    weight DMA would ship; ``forward_int5`` consumes the operand pair.
+    Returns ``(qparams5, scales)`` with the same per-layer float scales as
+    the int8 lane (MSR reuses them — the codes approximate the int8
+    integers, not the floats).
+    """
+    import numpy as np
+
+    from repro.core.trim.quant import msr_compress, msr_operand
+
+    qp8, scales = quantize_cnn(params, cfg)
+    qp: Params = {"conv": []}
+    for entry in qp8["conv"]:
+        codes, shifts = msr_compress(np.asarray(entry["kernel"]))
+        w5, e = msr_operand(codes, shifts, compensate=compensate)
+        qp["conv"].append({"kernel": jnp.asarray(w5),
+                           "shift": jnp.asarray(e, jnp.int32)})
     return qp, scales
 
 

@@ -10,8 +10,9 @@ one mapping instead of threading ad-hoc kwargs.
 
 ``ServeConfig.from_args`` is THE mapping from the shared launcher CLI
 flags (``launch.cli.serving_parent``: ``--buckets`` / ``--max-delay-ms`` /
-``--queue-capacity`` / ``--overload`` / ``--int8``) onto a config, the
-same pattern ``ExecutionPolicy.from_args`` set for the execution flags.
+``--queue-capacity`` / ``--overload`` / ``--int8`` / ``--int5``) onto a
+config, the same pattern ``ExecutionPolicy.from_args`` set for the
+execution flags.
 """
 
 from __future__ import annotations
@@ -60,9 +61,9 @@ class ServeConfig:
         if self.overload not in OVERLOAD_POLICIES:
             raise ValueError(
                 f"overload {self.overload!r} not in {OVERLOAD_POLICIES}")
-        if self.datapath not in ("float", "int8"):
+        if self.datapath not in ("float", "int8", "int5"):
             raise ValueError(
-                f"datapath {self.datapath!r} not in ('float', 'int8')")
+                f"datapath {self.datapath!r} not in ('float', 'int8', 'int5')")
         if int(self.queue_capacity) < 0:
             raise ValueError(
                 f"queue_capacity must be >= 0, got {self.queue_capacity!r}")
@@ -94,7 +95,9 @@ class ServeConfig:
             max_delay_ms=float(args.max_delay_ms),
             queue_capacity=int(args.queue_capacity),
             overload=args.overload,
-            datapath="int8" if getattr(args, "int8", False) else "float",
+            datapath=("int5" if getattr(args, "int5", False)
+                      else "int8" if getattr(args, "int8", False)
+                      else "float"),
         )
         if getattr(args, "request_timeout_ms", None) is not None:
             kw["request_timeout_ms"] = float(args.request_timeout_ms)

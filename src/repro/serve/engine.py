@@ -109,22 +109,25 @@ class ServeEngine:
     ) -> "ServeEngine":
         """A serving engine for one :class:`~repro.engine.ModelPlan`.
 
-        ``params`` are the float params ("float") or the quantized int8
-        params ("int8").  The int8 lane *requires* calibrated ``requant``
-        (per-layer (mult, shift) pairs from ``plan.calibrate_requant``):
+        ``params`` are the float params ("float"), the quantized int8
+        params ("int8"), or the MSR operand+exponent params from
+        ``plan.quantize_int5`` ("int5" — DESIGN.md §9.3).  Both integer
+        lanes *require* calibrated ``requant`` (per-layer (mult, shift)
+        pairs from ``plan.calibrate_requant`` / ``calibrate_requant_int5``):
         the uncalibrated dynamic-shift path requantizes off the whole
         batch's ``psum.max()``, so a padded bucket would change per-image
         outputs — exactly what serving must never do.  ``warm=True``
         compiles every bucket's executable up front (production default:
         all compilation happens before the first request).
         """
-        if datapath not in ("float", "int8"):
-            raise ValueError(f"datapath {datapath!r} not in ('float', 'int8')")
-        if datapath == "int8" and requant is None:
+        if datapath not in ("float", "int8", "int5"):
             raise ValueError(
-                "int8 serving requires calibrated requant pairs: the dynamic "
-                "(uncalibrated) requant path depends on batch composition and "
-                "cannot serve padded buckets bit-faithfully"
+                f"datapath {datapath!r} not in ('float', 'int8', 'int5')")
+        if datapath in ("int8", "int5") and requant is None:
+            raise ValueError(
+                f"{datapath} serving requires calibrated requant pairs: the "
+                "dynamic (uncalibrated) requant path depends on batch "
+                "composition and cannot serve padded buckets bit-faithfully"
             )
         eng = cls(name=f"{plan.cfg.name}.{datapath}", buckets=buckets)
         eng._plan = plan

@@ -1,0 +1,40 @@
+"""The docs gate's static half runs inside tier-1 (tools/check_docs.py).
+
+CI's docs lane additionally executes examples/quickstart.py; here we keep
+to the fast checks — broken markdown links and dangling ``DESIGN.md §N``
+citations anywhere in the tree fail the suite, not just the docs lane.
+"""
+import importlib.util
+import os
+
+_TOOLS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tools", "check_docs.py")
+_spec = importlib.util.spec_from_file_location("check_docs", _TOOLS)
+check_docs = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_docs)
+
+
+def test_markdown_links_resolve():
+    errors = []
+    check_docs.check_links(errors)
+    assert not errors, errors
+
+
+def test_design_section_citations_exist():
+    errors = []
+    check_docs.check_section_refs(errors)
+    assert not errors, errors
+
+
+def test_checker_catches_dangling_subsection():
+    """The §-reference regex and section index must actually disagree on a
+    bogus citation — guards the guard."""
+    sections = check_docs.design_sections()
+    # assemble the bogus citation at runtime so the tree-wide scan in
+    # check_section_refs doesn't flag this very file
+    bogus = "DESIGN.md §" + "42.7"
+    refs = check_docs.SECTION_REF_RE.findall(
+        f"per DESIGN.md §9.3; but {bogus} is fiction")
+    assert refs == ["9.3", "42.7"]
+    assert "9.3" in sections and "42.7" not in sections and \
+        "42" not in sections

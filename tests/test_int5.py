@@ -1,0 +1,352 @@
+"""The sub-8-bit MSR weight lane (DESIGN.md §9.3).
+
+Covers: the MSR codec against a pure-Python per-weight oracle
+(compress/decompress, the ``w_hat == w5 << e`` operand factorization, the
+5-bit pack/unpack byte stream), the requant fold theorem
+(``requant(psum << e, m, s) == requant(psum, m, s - e)`` — exact on the
+int64 reference), the planned lane end-to-end (``forward_int5`` with
+calibrated pairs bit-identical to ``forward_int8`` run on the decompressed
+weights, across substrates and through the AOT serving executable), the
+plan/tuner plumbing (``w_bits=5`` plans, the ``... w5`` cache-key axis),
+the emulate_hw access model (int5 weight traffic == exactly 5/8 of int8),
+and the accuracy smoke: a small trained CNN where the compensated int5
+lane's top-1 must stay within a fixed margin of the int8 lane's.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trim.model import (PAPER_ENGINE, VGG16_LAYERS, ConvLayerSpec,
+                                   trim_memory_accesses)
+from repro.core.trim.quant import (MSR_CODE_BITS, MSR_OPERAND_MAX,
+                                   MSR_STORAGE_BITS, fold_shift_into_requant,
+                                   msr_compress, msr_decompress, msr_operand,
+                                   pack_int5, packed_nbytes, unpack_int5)
+from repro.engine import ExecutionPolicy, executable_for, execute, plan_model
+from repro.engine.autotune import layer_key
+from repro.kernels.requant import requant_ref_int64
+from repro.nn.conv import CNNConfig
+
+# A tiny stack that still exercises pooling, grouped towers, and stride-2.
+# (No pool after the last layer: the integer forwards return the final
+# int32 psums pre-pool, and the accuracy smoke compares features.)
+INT5_CNN = CNNConfig(
+    "int5-smoke",
+    layers=(
+        ConvLayerSpec("CL1", 12, 12, 3, 3, 8, stride=1, pad=1),
+        ConvLayerSpec("CL2", 6, 6, 3, 4, 8, stride=1, pad=1),   # groups=2
+        ConvLayerSpec("CL3", 6, 6, 3, 8, 8, stride=2, pad=1),
+    ),
+    pool_after=(0,), classifier=(16,), n_classes=4, input_hw=(12, 12))
+
+
+def _rand_w(shape, seed=0, lo=-127, hi=127):
+    return np.random.default_rng(seed).integers(lo, hi + 1, shape
+                                                ).astype(np.int8)
+
+
+# ---------------------------------------------------------------------------
+# codec vs the pure-Python oracle
+# ---------------------------------------------------------------------------
+
+
+def _msr_oracle(w):
+    """Per-weight Python ints only — the contract, restated independently."""
+    w = np.asarray(w, np.int64)
+    flat = w.reshape(-1, w.shape[-1])
+    shifts, codes = [], np.zeros_like(flat)
+    for c in range(flat.shape[1]):
+        t = max(0, int(np.abs(flat[:, c]).max()).bit_length() - MSR_CODE_BITS)
+        shifts.append(t)
+        for r in range(flat.shape[0]):
+            v = int(flat[r, c])
+            codes[r, c] = (1 if v > 0 else -1 if v < 0 else 0) * (abs(v) >> t)
+    return (codes.reshape(w.shape).astype(np.int8),
+            np.asarray(shifts, np.int32))
+
+
+def _pack_oracle(codes):
+    """Bit-string packing oracle: sign bit + 4 magnitude bits, MSB-first."""
+    bits = ""
+    for v in np.asarray(codes, np.int64).reshape(-1):
+        bits += "1" if v < 0 else "0"
+        bits += format(abs(int(v)), f"0{MSR_CODE_BITS}b")
+    bits += "0" * (-len(bits) % 8)
+    return np.asarray([int(bits[i:i + 8], 2) for i in range(0, len(bits), 8)],
+                      np.uint8)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_msr_compress_matches_python_oracle(seed):
+    w = _rand_w((3, 3, 4, 8), seed)
+    codes, shifts = msr_compress(w)
+    ocodes, oshifts = _msr_oracle(w)
+    np.testing.assert_array_equal(codes, ocodes)
+    np.testing.assert_array_equal(shifts, oshifts)
+    assert int(np.abs(codes).max()) < (1 << MSR_CODE_BITS)
+    assert shifts.min() >= 0 and shifts.max() <= 8 - MSR_CODE_BITS - 1
+
+
+def test_msr_compress_small_channels_are_lossless():
+    """Channels whose magnitudes already fit 4 bits keep t=0 and survive
+    the round trip exactly, compensated or not."""
+    w = _rand_w((3, 3, 2, 4), 3, lo=-15, hi=15)
+    codes, shifts = msr_compress(w)
+    np.testing.assert_array_equal(shifts, 0)
+    for comp in (True, False):
+        np.testing.assert_array_equal(msr_decompress(codes, shifts, comp), w)
+
+
+@pytest.mark.parametrize("compensate", [True, False])
+def test_msr_decompress_matches_python_oracle(compensate):
+    w = _rand_w((5, 5, 3, 6), 4)
+    codes, shifts = msr_compress(w)
+    w_hat = msr_decompress(codes, shifts, compensate)
+    for c in range(w.shape[-1]):
+        t = int(shifts[c])
+        for v, vh in zip(codes[..., c].reshape(-1).tolist(),
+                         w_hat[..., c].reshape(-1).tolist()):
+            mag = abs(v) << t
+            if compensate and v != 0 and t > 0:
+                mag |= 1 << (t - 1)
+            assert vh == (1 if v > 0 else -1 if v < 0 else 0) * mag
+    # compensation never leaves the int8 domain: |code| <= 15 so
+    # (15 << 3) | 4 == 124 <= 127
+    assert int(np.abs(w_hat.astype(np.int32)).max()) <= 127
+
+
+@pytest.mark.parametrize("compensate", [True, False])
+def test_msr_operand_factorization_is_exact(compensate):
+    w = _rand_w((3, 3, 8, 16), 5)
+    codes, shifts = msr_compress(w)
+    w5, e = msr_operand(codes, shifts, compensate)
+    w_hat = msr_decompress(codes, shifts, compensate)
+    np.testing.assert_array_equal(w5.astype(np.int32) << e, w_hat)
+    assert int(np.abs(w5.astype(np.int32)).max()) <= MSR_OPERAND_MAX
+
+
+@pytest.mark.parametrize("n", [1, 7, 8, 9, 1152])
+def test_pack_unpack_roundtrip_and_oracle(n):
+    codes = np.random.default_rng(n).integers(-15, 16, n).astype(np.int8)
+    packed = pack_int5(codes)
+    assert packed.nbytes == packed_nbytes(n) == (n * MSR_STORAGE_BITS + 7) // 8
+    np.testing.assert_array_equal(packed, _pack_oracle(codes))
+    np.testing.assert_array_equal(unpack_int5(packed, n), codes)
+
+
+def test_pack_rejects_out_of_range_codes():
+    with pytest.raises(ValueError):
+        pack_int5(np.asarray([16], np.int8))
+
+
+# ---------------------------------------------------------------------------
+# the requant fold theorem
+# ---------------------------------------------------------------------------
+
+
+def test_fold_shift_into_requant_is_exact():
+    psum = np.random.default_rng(0).integers(-(1 << 20), 1 << 20, 4096)
+    for m, s, e in [(16384, 20, 0), (16384, 20, 2), (123, 7, 2),
+                    (32767, 9, 3), (1, 31, 3)]:
+        mf, sf = fold_shift_into_requant(np.asarray(m), np.asarray(s),
+                                         np.asarray(e))
+        np.testing.assert_array_equal(
+            requant_ref_int64(psum << e, m, s),
+            requant_ref_int64(psum, int(mf), int(sf)))
+
+
+def test_fold_shift_saturates_at_domain_bounds():
+    """When s - e < 1 the residue moves into the multiplier, saturating at
+    the int16 bound; the returned pair stays in the kernel's domain."""
+    mf, sf = fold_shift_into_requant(np.asarray(30000), np.asarray(2),
+                                     np.asarray(3))
+    assert int(mf) == 32767 and int(sf) == 1
+
+
+# ---------------------------------------------------------------------------
+# the planned lane, end-to-end
+# ---------------------------------------------------------------------------
+
+
+def _quantized(plan, seed=0, compensate=True):
+    params = plan.init(jax.random.PRNGKey(seed))
+    imgs = jnp.asarray(np.random.default_rng(seed).integers(
+        0, 256, (4, 12, 12, 3), np.uint8))
+    qp5, _ = plan.quantize_int5(params, compensate=compensate)
+    return params, imgs, qp5
+
+
+@pytest.mark.parametrize("substrate", ["oracle", "f32exact"])
+def test_forward_int5_matches_decompressed_int8(substrate):
+    """The int5 lane with e folded into the calibrated pairs must be
+    bit-identical to the int8 lane run on the decompressed weights
+    w_hat = w5 << e with the exponent left on the requant shift."""
+    plan = plan_model(INT5_CNN, ExecutionPolicy(substrate=substrate))
+    _, imgs, qp5 = _quantized(plan)
+    pairs5 = plan.calibrate_requant_int5(qp5, imgs)
+    out5 = plan.forward_int5(qp5, imgs, requant=pairs5)
+
+    qp8 = {"conv": []}
+    pairs8 = []
+    for i, p in enumerate(qp5["conv"]):
+        e = np.asarray(p["shift"])
+        qp8["conv"].append({"kernel": jnp.asarray(
+            np.asarray(p["kernel"], np.int32) << e).astype(jnp.int8)})
+        if i < len(qp5["conv"]) - 1:
+            m, s = pairs5[i]
+            pairs8.append((m, s + jnp.asarray(e, jnp.int32)))
+    out8 = plan.forward_int8(qp8, imgs, requant=pairs8)
+    # identical final full-scale psums: forward_int5's last layer restores
+    # the exponent (psum5 << e == conv(x, w5 << e)) before returning
+    np.testing.assert_array_equal(np.asarray(out5), np.asarray(out8))
+
+
+def test_forward_int5_dynamic_requant_runs():
+    plan = plan_model(INT5_CNN, ExecutionPolicy())
+    _, imgs, qp5 = _quantized(plan)
+    out = plan.forward_int5(qp5, imgs)
+    assert out.dtype == jnp.int32 and np.isfinite(np.asarray(out)).all()
+
+
+def test_executable_for_int5_bit_identical():
+    """The AOT serving executable (datapath="int5") reproduces the direct
+    forward_int5 bit-for-bit."""
+    plan = plan_model(INT5_CNN, ExecutionPolicy())
+    _, imgs, qp5 = _quantized(plan)
+    pairs = plan.calibrate_requant_int5(qp5, imgs)
+    ex = executable_for(plan, 4, "int5")
+    np.testing.assert_array_equal(
+        np.asarray(ex(qp5, imgs, pairs)),
+        np.asarray(plan.forward_int5(qp5, imgs, requant=pairs)))
+
+
+def test_plan_model_int5_carries_w_bits():
+    plan5 = plan_model(INT5_CNN, ExecutionPolicy(), datapath="int5")
+    plan8 = plan_model(INT5_CNN, ExecutionPolicy(), datapath="int8")
+    for lp5, lp8 in zip(plan5.layers, plan8.layers):
+        assert lp5.w_bits == 5 and lp8.w_bits == 8
+        assert lp5.describe()["w_bits"] == 5
+        assert "w_bits" not in lp8.describe()
+    # the int5 sibling property agrees with the explicit datapath
+    assert plan_model(INT5_CNN, ExecutionPolicy()).int5.layers == plan5.layers
+
+
+def test_layer_key_has_w_bits_axis():
+    kw = dict(stride=1, padding=1, groups=1, relu=True, has_bias=False,
+              requant_kind="mult_shift", in_sz=1, w_sz=1, out_sz=1,
+              emulate_hw=False)
+    k8 = layer_key((12, 12), 8, 3, 8, **kw)
+    k5 = layer_key((12, 12), 8, 3, 8, w_bits=5, **kw)
+    assert k8.endswith(" w8") and k5.endswith(" w5") and k8 != k5
+
+
+def test_emulate_hw_int5_weight_traffic_is_five_eighths():
+    """The access model counts in B-bit element units, so the 5-bit stored
+    lane ships exactly 5/8 of the int8 lane's weight reads — and identical
+    ifmap/ofmap traffic (MSR touches only weight storage)."""
+    for layer in (VGG16_LAYERS[0], VGG16_LAYERS[7], INT5_CNN.layers[1]):
+        base = trim_memory_accesses(layer, PAPER_ENGINE)
+        msr = trim_memory_accesses(layer, PAPER_ENGINE, weight_bits=5)
+        assert msr.weight_reads == base.weight_reads * 5 / 8
+        assert msr.ifmap_reads == base.ifmap_reads
+        assert msr.ofmap_writes == base.ofmap_writes
+    with pytest.raises(ValueError):
+        trim_memory_accesses(VGG16_LAYERS[0], PAPER_ENGINE, weight_bits=9)
+
+
+# ---------------------------------------------------------------------------
+# accuracy smoke: fp32 vs fused-int8 vs int5 (compensated + truncated)
+# ---------------------------------------------------------------------------
+
+
+def _head(params, feat):
+    x = feat
+    for j, fc in enumerate(params["fc"]):
+        x = x @ fc["kernel"] + fc["bias"]
+        if j < len(params["fc"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _conv_features(plan, params, imgs):
+    x = imgs
+    for i, lp in enumerate(plan.layers):
+        x = execute.run_conv_layer(lp, params["conv"][i], x)
+    return x.reshape(x.shape[0], -1)
+
+
+def _int_top1(plan, params, qp, requant, imgs_u8, feat_float, eval_u8,
+              forward):
+    """Top-1 of an integer lane: fit one scalar gain from the calibration
+    batch's integer features onto the float features (least squares), then
+    reuse the trained FC head."""
+    feat_cal = np.asarray(forward(qp, imgs_u8, requant=requant)
+                          ).reshape(imgs_u8.shape[0], -1).astype(np.float64)
+    g = float((feat_cal * feat_float).sum() / (feat_float ** 2).sum())
+    feat = np.asarray(forward(qp, eval_u8, requant=requant)
+                      ).reshape(eval_u8.shape[0], -1) / g
+    return _head(params, jnp.asarray(feat, jnp.float32))
+
+
+def test_int5_accuracy_within_margin_of_int8():
+    """Train the tiny CNN on the synthetic image stream (inputs pre-mapped
+    to exact u8 grid points so input quantization is lossless), then
+    compare top-1 across the lanes.  The compensated int5 lane must stay
+    within a fixed margin of int8; the truncation ablation runs for free
+    as the compensate=False arm."""
+    from repro.data import SyntheticImageDataset
+
+    ds = SyntheticImageDataset(hw=(12, 12), channels=3, n_classes=4,
+                               global_batch=64)
+
+    def u8_batch(step):
+        b = ds.batch_at(step)
+        u8 = np.round(np.clip((b["images"] + 2.0) * 63.75, 0, 255))
+        return u8.astype(np.uint8), b["labels"]
+
+    plan = plan_model(INT5_CNN, ExecutionPolicy())
+    params = plan.init(jax.random.PRNGKey(0))
+
+    @jax.jit
+    def step(p, batch):
+        (ce, _), g = jax.value_and_grad(plan.loss, has_aux=True)(p, batch)
+        return jax.tree_util.tree_map(lambda x, dx: x - 0.05 * dx, p, g), ce
+
+    for s in range(120):
+        u8, labels = u8_batch(s)
+        batch = {"images": jnp.asarray(u8, jnp.float32) / 255.0,
+                 "labels": jnp.asarray(labels)}
+        params, ce = step(params, batch)
+
+    cal_u8, _ = u8_batch(200)
+    eval_u8, eval_labels = u8_batch(300)
+    cal_u8, eval_u8 = jnp.asarray(cal_u8), jnp.asarray(eval_u8)
+    feat_float = np.asarray(_conv_features(
+        plan, params, cal_u8.astype(jnp.float32) / 255.0)).astype(np.float64)
+
+    logits_f = plan.forward(params, eval_u8.astype(jnp.float32) / 255.0)
+    acc = {"fp32": float((np.asarray(logits_f).argmax(-1) == eval_labels
+                          ).mean())}
+
+    qp8, _ = plan.quantize(params)
+    rq8 = plan.calibrate_requant(qp8, cal_u8)
+    logits = _int_top1(plan, params, qp8, rq8, cal_u8, feat_float, eval_u8,
+                       plan.forward_int8)
+    acc["int8"] = float((np.asarray(logits).argmax(-1) == eval_labels).mean())
+
+    for name, comp in (("int5", True), ("int5_trunc", False)):
+        qp5, _ = plan.quantize_int5(params, compensate=comp)
+        rq5 = plan.calibrate_requant_int5(qp5, cal_u8)
+        logits = _int_top1(plan, params, qp5, rq5, cal_u8, feat_float,
+                           eval_u8, plan.forward_int5)
+        acc[name] = float((np.asarray(logits).argmax(-1) == eval_labels
+                           ).mean())
+
+    print("accuracy smoke:", acc)
+    assert acc["fp32"] >= 0.75, acc
+    assert acc["int8"] >= acc["fp32"] - 0.20, acc
+    # the lane under test: expect-value compensation keeps the 5-bit lane
+    # within a fixed margin of the full int8 lane
+    assert acc["int5"] >= acc["int8"] - 0.15, acc

@@ -4,7 +4,7 @@ Covers: the BucketBatcher state machine on a fake clock (size flush,
 deadline flush, drain, the submit-timestamp clamp), pad_batch, the
 synthetic request stream's determinism and arrival processes, the serving
 bit-identity property (padded-and-bucketed output == unbatched N=1
-output, float AND fused-int8 lanes), the compile-once guarantee
+output, float AND the fused int8/int5 lanes), the compile-once guarantee
 (compile_counts and the engine-level EXECUTABLE_COMPILES ledger), the
 calibrated-requant requirement on the int8 lane, the Server facade —
 inline open loop on a fake clock, overload policies (block/shed/degrade),
@@ -73,6 +73,15 @@ def _int8_server(buckets=(1, 4), **cfgkw):
     requant = plan.calibrate_requant(
         qparams, _stream(dtype="uint8").sample_batch(4))
     cfg = ServeConfig(buckets=buckets, datapath="int8", **cfgkw)
+    return Server.from_plan(plan, qparams, cfg, requant=requant)
+
+
+def _int5_server(buckets=(1, 4), **cfgkw):
+    plan, params = _float_plan_params()
+    qparams, _ = plan.quantize_int5(params)
+    requant = plan.calibrate_requant_int5(
+        qparams, _stream(dtype="uint8").sample_batch(4))
+    cfg = ServeConfig(buckets=buckets, datapath="int5", **cfgkw)
     return Server.from_plan(plan, qparams, cfg, requant=requant)
 
 
@@ -272,15 +281,17 @@ def test_stream_uint8_dtype_for_int8_lane():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("datapath", ["float", "int8"])
+@pytest.mark.parametrize("datapath", ["float", "int8", "int5"])
 @pytest.mark.parametrize("n", [1, 3, 4])
 def test_bucketed_equals_unbatched_bitwise(datapath, n):
     """Padded-and-bucketed inference is bit-identical, per image, to the
     unbatched N=1 path — on the float lane (per-image FC head via
-    serve_forward) and the fused-int8 lane (calibrated requant)."""
-    srv = _float_server() if datapath == "float" else _int8_server()
+    serve_forward) and the fused integer lanes (calibrated requant; int5
+    is the MSR weight lane, DESIGN.md §9.3)."""
+    srv = {"float": _float_server, "int8": _int8_server,
+           "int5": _int5_server}[datapath]()
     eng = srv.engine
-    imgs = _stream(dtype="uint8" if datapath == "int8" else "float32"
+    imgs = _stream(dtype="float32" if datapath == "float" else "uint8"
                    ).sample_batch(n)
     batched = eng.infer(imgs)
     assert batched.shape[0] == n
