@@ -9,6 +9,7 @@
 4. The sub-8-bit MSR weight lane: 5-bit packed weights, expect-value
    compensation, and the 5/8 weight-traffic ratio (DESIGN.md §9.3).
 """
+
 import numpy as np
 
 import jax
@@ -18,32 +19,40 @@ import jax.numpy as jnp
 def demo_trim_dataflow():
     from repro.core.trim.slice_sim import simulate_slice, padding_overhead
     from repro.core.trim.engine import TrimEngine, reference_conv_layer
-    from repro.core.trim.model import (VGG16_LAYERS, PAPER_ENGINE,
-                                       network_gops)
+    from repro.core.trim.model import VGG16_LAYERS, PAPER_ENGINE, network_gops
 
     print("=== 1. TrIM dataflow (the paper) ===")
     rng = np.random.default_rng(0)
     x = rng.integers(0, 256, (12, 12)).astype(np.int64)
     w = rng.integers(-8, 8, (3, 3))
     r = simulate_slice(x, w)
-    print(f"slice sim: {r.external_fetches} external fetches "
-          f"(= padded elements, fetched ONCE), fifo_ok={r.fifo_order_ok}")
-    print(f"224x224 input-fetch overhead: "
-          f"{100 * padding_overhead(224, 224, 3):.2f}%  (paper: ~1.8%)")
+    print(
+        f"slice sim: {r.external_fetches} external fetches "
+        f"(= padded elements, fetched ONCE), fifo_ok={r.fifo_order_ok}"
+    )
+    print(
+        f"224x224 input-fetch overhead: "
+        f"{100 * padding_overhead(224, 224, 3):.2f}%  (paper: ~1.8%)"
+    )
 
     xs = rng.integers(0, 256, (8, 14, 14), dtype=np.uint8)
     ws = rng.integers(-128, 128, (4, 8, 3, 3)).astype(np.int8)
     out, trace = TrimEngine().run_layer(xs, ws)
     ok = (out == reference_conv_layer(xs, ws)).all()
-    print(f"engine: int8 conv bit-exact={bool(ok)}, "
-          f"steps={trace.steps}, psum accesses={trace.psum_buffer_accesses}")
-    print(f"peak: {PAPER_ENGINE.peak_gops} GOPs/s; VGG-16 sustained "
-          f"{network_gops(VGG16_LAYERS):.0f} GOPs/s (paper: 391)")
+    print(
+        f"engine: int8 conv bit-exact={bool(ok)}, "
+        f"steps={trace.steps}, psum accesses={trace.psum_buffer_accesses}"
+    )
+    print(
+        f"peak: {PAPER_ENGINE.peak_gops} GOPs/s; VGG-16 sustained "
+        f"{network_gops(VGG16_LAYERS):.0f} GOPs/s (paper: 391)"
+    )
 
 
 def demo_kernel():
     from repro.engine import ExecutionPolicy, plan_conv_layer
     from repro.kernels.ops import trim_conv2d
+
     print("\n=== 2. TrIM Pallas kernel (interpret mode) ===")
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (1, 16, 16, 8))
@@ -52,30 +61,39 @@ def demo_kernel():
     # "pallas" runs the TrIM kernels everywhere — interpret mode off-TPU.
     out = trim_conv2d(x, w, policy=ExecutionPolicy(substrate="pallas"))
     ref = trim_conv2d(x, w)  # auto policy: CPU oracle off-TPU
-    print(f"conv2d {x.shape} * {w.shape} -> {out.shape}; "
-          f"max err vs oracle: {float(jnp.abs(out - ref).max()):.2e}")
-    plan = plan_conv_layer((16, 16), 8, 3, 16, relu=True, has_bias=True,
-                           policy=ExecutionPolicy(substrate="pallas"))
+    print(
+        f"conv2d {x.shape} * {w.shape} -> {out.shape}; "
+        f"max err vs oracle: {float(jnp.abs(out - ref).max()):.2e}"
+    )
+    plan = plan_conv_layer(
+        (16, 16),
+        8,
+        3,
+        16,
+        relu=True,
+        has_bias=True,
+        policy=ExecutionPolicy(substrate="pallas"),
+    )
     print(f"layer plan (compiled once, DESIGN.md §3): {plan.describe()}")
 
 
 def demo_lm():
     from repro.configs import get_smoke
     from repro.nn.models import build_model
-    from repro.distributed import (StepConfig, make_train_state,
-                                   make_train_step)
+    from repro.distributed import StepConfig, make_train_state, make_train_step
+
     print("\n=== 3. Tiny LM: train step + decode ===")
     cfg = get_smoke("granite-3-2b")
     model = build_model(cfg)
     state = make_train_state(model, jax.random.PRNGKey(0))
-    step = jax.jit(make_train_step(model, StepConfig(total_steps=10,
-                                                     warmup_steps=1)))
+    step = jax.jit(make_train_step(model, StepConfig(total_steps=10, warmup_steps=1)))
     rng = np.random.default_rng(0)
-    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 33)),
-                                   jnp.int32)}
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 33)), jnp.int32)}
     state, metrics = step(state, batch)
-    print(f"train step: loss={float(metrics['loss']):.3f} "
-          f"grad_norm={float(metrics['grad_norm']):.3f}")
+    print(
+        f"train step: loss={float(metrics['loss']):.3f} "
+        f"grad_norm={float(metrics['grad_norm']):.3f}"
+    )
 
     cache = model.init_cache(2, 16, dtype=jnp.float32)
     prompt = batch["tokens"][:, :8]
@@ -83,35 +101,36 @@ def demo_lm():
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
     outs = [tok]
     for i in range(4):
-        logits, cache = model.decode_step(state["params"], tok, cache,
-                                          jnp.int32(8 + i))
+        logits, cache = model.decode_step(state["params"], tok, cache, jnp.int32(8 + i))
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         outs.append(tok)
     print("greedy decode:", [int(t[0]) for t in outs])
 
 
 def demo_int5():
-    from repro.core.trim.model import PAPER_ENGINE, VGG16_LAYERS, \
-        trim_memory_accesses
-    from repro.core.trim.quant import (msr_compress, msr_operand, pack_int5,
-                                       unpack_int5)
+    from repro.core.trim.model import PAPER_ENGINE, VGG16_LAYERS, trim_memory_accesses
+    from repro.core.trim.quant import msr_compress, msr_operand, pack_int5, unpack_int5
 
     print("=== 4. int5 MSR weight lane (DESIGN.md §9.3) ===")
     rng = np.random.default_rng(0)
     w = rng.integers(-127, 128, (3, 3, 8, 16)).astype(np.int8)
-    codes, shifts = msr_compress(w)          # sign + 4-bit MSR, t per channel
-    w5, e = msr_operand(codes, shifts)       # exact w_hat == w5 << e
-    packed = pack_int5(codes)                # 5 bits/weight on the wire
+    codes, shifts = msr_compress(w)  # sign + 4-bit MSR, t per channel
+    w5, e = msr_operand(codes, shifts)  # exact w_hat == w5 << e
+    packed = pack_int5(codes)  # 5 bits/weight on the wire
     assert (unpack_int5(packed, w.size) == codes.reshape(-1)).all()
     err = np.abs((np.int32(w5) << e) - w.astype(np.int32))
-    print(f"packed {w.size} int8 weights into {packed.nbytes} bytes "
-          f"({8 * packed.nbytes / w.size:.2f} bits/weight), "
-          f"max |w_hat - w| = {int(err.max())}")
+    print(
+        f"packed {w.size} int8 weights into {packed.nbytes} bytes "
+        f"({8 * packed.nbytes / w.size:.2f} bits/weight), "
+        f"max |w_hat - w| = {int(err.max())}"
+    )
     l = VGG16_LAYERS[0]
     full = trim_memory_accesses(l, PAPER_ENGINE).weight_reads
     msr = trim_memory_accesses(l, PAPER_ENGINE, weight_bits=5).weight_reads
-    print(f"{l.name} weight reads: {full:.3f}M (int8) -> {msr:.3f}M "
-          f"(int5, exactly 5/8)")
+    print(
+        f"{l.name} weight reads: {full:.3f}M (int8) -> {msr:.3f}M "
+        f"(int5, exactly 5/8)"
+    )
 
 
 if __name__ == "__main__":

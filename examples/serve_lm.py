@@ -4,6 +4,7 @@ continuations through the KV/SSM-cache path.
   PYTHONPATH=src python examples/serve_lm.py --arch mamba2-130m --gen 24
   PYTHONPATH=src python examples/serve_lm.py --arch granite-3-2b --smoke
 """
+
 import argparse
 import time
 
@@ -32,7 +33,8 @@ def main():
 
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32
+    )
 
     cache = model.init_cache(args.batch, max_len, dtype=jnp.float32)
     t0 = time.perf_counter()
@@ -45,18 +47,19 @@ def main():
     generated = [tok]
     t0 = time.perf_counter()
     for i in range(args.gen - 1):
-        logits, cache = decode(params, tok, cache,
-                               jnp.int32(args.prompt_len + i))
+        logits, cache = decode(params, tok, cache, jnp.int32(args.prompt_len + i))
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         generated.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.perf_counter() - t0
 
     gen = np.stack([np.asarray(t) for t in generated], 1)
-    print(f"[serve] {cfg.name}: prefill {args.batch}x{args.prompt_len} in "
-          f"{t_prefill*1e3:.0f} ms; decode "
-          f"{args.batch * (args.gen - 1)} tokens in {t_decode*1e3:.0f} ms "
-          f"({args.batch * (args.gen - 1) / max(t_decode, 1e-9):.1f} tok/s)")
+    print(
+        f"[serve] {cfg.name}: prefill {args.batch}x{args.prompt_len} in "
+        f"{t_prefill*1e3:.0f} ms; decode "
+        f"{args.batch * (args.gen - 1)} tokens in {t_decode*1e3:.0f} ms "
+        f"({args.batch * (args.gen - 1) / max(t_decode, 1e-9):.1f} tok/s)"
+    )
     print(f"[serve] continuation[0]: {gen[0].tolist()}")
 
 

@@ -10,6 +10,7 @@ inference datapath all run off the same ``ModelPlan``.  Accuracy on the
 class-structured synthetic set rises well above chance within ~50 steps on
 CPU; afterwards the float/int8 agreement is reported.
 """
+
 import argparse
 
 import jax
@@ -28,18 +29,24 @@ def main():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--arch", default="vgg16", choices=["vgg16", "alexnet"])
-    ap.add_argument("--substrate", default="auto",
-                    choices=["auto", "pallas", "oracle", "interpret"],
-                    help="kernel substrate (ExecutionPolicy)")
+    ap.add_argument(
+        "--substrate",
+        default="auto",
+        choices=["auto", "pallas", "oracle", "interpret"],
+        help="kernel substrate (ExecutionPolicy)",
+    )
     args = ap.parse_args()
 
     cfg = CNN_SMOKES[args.arch]
     # The plan is the whole execution story: substrate + per-layer schedule,
     # resolved once — no kernel kwargs thread through the training step.
     plan = plan_model(cfg, ExecutionPolicy(substrate=args.substrate))
-    ds = SyntheticImageDataset(hw=cfg.input_hw, channels=cfg.layers[0].M,
-                               n_classes=cfg.n_classes,
-                               global_batch=args.batch)
+    ds = SyntheticImageDataset(
+        hw=cfg.input_hw,
+        channels=cfg.layers[0].M,
+        n_classes=cfg.n_classes,
+        global_batch=args.batch,
+    )
     params = plan.init(jax.random.PRNGKey(0))
     opt = adamw_init(params)
     ocfg = AdamWConfig(weight_decay=0.01)
@@ -47,31 +54,31 @@ def main():
     @jax.jit
     def step(params, opt, batch):
         (loss, mets), g = jax.value_and_grad(
-            lambda p: plan.loss(p, batch), has_aux=True)(params)
+            lambda p: plan.loss(p, batch), has_aux=True
+        )(params)
         params, opt, _ = adamw_update(g, opt, params, args.lr, ocfg)
         return params, opt, loss, mets["acc"]
 
     for s in range(args.steps):
         b = ds.batch_at(s)
-        batch = {"images": jnp.asarray(b["images"]),
-                 "labels": jnp.asarray(b["labels"])}
+        batch = {"images": jnp.asarray(b["images"]), "labels": jnp.asarray(b["labels"])}
         params, opt, loss, acc = step(params, opt, batch)
         if s % 10 == 0 or s == args.steps - 1:
-            print(f"step {s:3d}  loss {float(loss):.3f}  "
-                  f"acc {float(acc):.2f}")
+            print(f"step {s:3d}  loss {float(loss):.3f}  acc {float(acc):.2f}")
 
     # integer datapath (paper §III-A precision), same plan: quantize,
     # calibrate the per-channel fused requant, run fully fused.
     qp, scales = plan.quantize(params)
     b = ds.batch_at(0)
     imgs = np.asarray(b["images"])
-    u8 = np.clip((imgs - imgs.min())
-                 / max(float(imgs.max() - imgs.min()), 1e-6) * 255, 0,
-                 255).astype(np.uint8)
+    lo, hi = float(imgs.min()), float(imgs.max())
+    u8 = np.clip((imgs - lo) / max(hi - lo, 1e-6) * 255, 0, 255).astype(np.uint8)
     pairs = plan.calibrate_requant(qp, jnp.asarray(u8))
     feat = plan.forward_int8(qp, jnp.asarray(u8), requant=pairs)
-    print(f"int8 TrIM datapath: output {feat.shape} dtype {feat.dtype} "
-          f"(int32 psums, fused per-channel requant, bit-exact per tests)")
+    print(
+        f"int8 TrIM datapath: output {feat.shape} dtype {feat.dtype} "
+        f"(int32 psums, fused per-channel requant, bit-exact per tests)"
+    )
 
 
 if __name__ == "__main__":

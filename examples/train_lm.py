@@ -9,6 +9,7 @@ synthetic Markov stream with checkpointing + auto-resume; the default is a
 core. On a real slice this script runs unchanged under
 jax.distributed.initialize() with the production mesh.
 """
+
 import argparse
 
 import jax
@@ -16,8 +17,13 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.data import SyntheticLMDataset
-from repro.distributed import (StepConfig, TrainLoopConfig, make_train_state,
-                               make_train_step, train_loop)
+from repro.distributed import (
+    StepConfig,
+    TrainLoopConfig,
+    make_train_state,
+    make_train_step,
+    train_loop,
+)
 from repro.nn.models import build_model
 
 
@@ -27,35 +33,47 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--full", action="store_true",
-                    help="the real mamba2-130m config (slow on CPU)")
+    ap.add_argument(
+        "--full", action="store_true", help="the real mamba2-130m config (slow on CPU)"
+    )
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
     args = ap.parse_args()
 
-    cfg = get_config("mamba2-130m").with_overrides(
-        dtype=jnp.float32, remat="none")
+    cfg = get_config("mamba2-130m").with_overrides(dtype=jnp.float32, remat="none")
     if not args.full:
-        cfg = cfg.with_overrides(d_model=256, n_layers=8, vocab=8192,
-                                 ssm_chunk=64, name="mamba2-15m-demo")
+        cfg = cfg.with_overrides(
+            d_model=256, n_layers=8, vocab=8192, ssm_chunk=64, name="mamba2-15m-demo"
+        )
     model = build_model(cfg)
     n_params = cfg.param_count_estimate()
-    print(f"[train_lm] {cfg.name}: ~{n_params/1e6:.0f}M params, "
-          f"{cfg.n_layers}L d={cfg.d_model}")
+    print(
+        f"[train_lm] {cfg.name}: ~{n_params/1e6:.0f}M params, "
+        f"{cfg.n_layers}L d={cfg.d_model}"
+    )
 
     state = make_train_state(model, jax.random.PRNGKey(0))
-    step = jax.jit(make_train_step(model, StepConfig(
-        peak_lr=args.lr, warmup_steps=max(args.steps // 10, 5),
-        total_steps=args.steps)), donate_argnums=(0,))
-    ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=args.seq + 1,
-                            global_batch=args.batch)
-    out = train_loop(step, state, ds, TrainLoopConfig(
-        total_steps=args.steps, ckpt_every=max(args.steps // 4, 10),
-        ckpt_dir=args.ckpt_dir, log_every=10))
+    scfg = StepConfig(
+        peak_lr=args.lr,
+        warmup_steps=max(args.steps // 10, 5),
+        total_steps=args.steps,
+    )
+    step = jax.jit(make_train_step(model, scfg), donate_argnums=(0,))
+    ds = SyntheticLMDataset(
+        vocab=cfg.vocab, seq_len=args.seq + 1, global_batch=args.batch
+    )
+    loop_cfg = TrainLoopConfig(
+        total_steps=args.steps,
+        ckpt_every=max(args.steps // 4, 10),
+        ckpt_dir=args.ckpt_dir,
+        log_every=10,
+    )
+    out = train_loop(step, state, ds, loop_cfg)
     losses = [h["loss"] for h in out["history"]]
-    print(f"[train_lm] loss {losses[0]:.3f} -> {losses[-1]:.3f} over "
-          f"{len(losses)} steps"
-          + (f" (resumed from {out['resumed_from']})"
-             if out["resumed_from"] else ""))
+    print(
+        f"[train_lm] loss {losses[0]:.3f} -> {losses[-1]:.3f} over "
+        f"{len(losses)} steps"
+        + (f" (resumed from {out['resumed_from']})" if out["resumed_from"] else "")
+    )
 
 
 if __name__ == "__main__":

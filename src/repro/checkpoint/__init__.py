@@ -1,3 +1,8 @@
 """Sharded checkpointing with async write and elastic restore."""
-from repro.checkpoint.manager import (CheckpointManager, latest_step,
-                                      save_pytree, restore_pytree)
+
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    latest_step,
+    save_pytree,
+    restore_pytree,
+)

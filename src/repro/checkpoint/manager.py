@@ -16,6 +16,7 @@ On a real multi-host pod each host writes only the shards it owns
 degenerates to full arrays, but the manifest format and the commit protocol
 are the multi-host ones.
 """
+
 from __future__ import annotations
 
 import hashlib
@@ -30,14 +31,15 @@ import ml_dtypes
 import numpy as np
 
 #: dtypes numpy can't natively serialize -> (view dtype, restore dtype)
-_EXOTIC = {"bfloat16": (np.uint16, ml_dtypes.bfloat16),
-           "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
-           "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2)}
+_EXOTIC = {
+    "bfloat16": (np.uint16, ml_dtypes.bfloat16),
+    "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
+    "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2),
+}
 
 
 def _path_str(path) -> str:
-    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                    for p in path)
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
 
 
 def _leaf_file(path_str: str) -> str:
@@ -57,9 +59,9 @@ def save_pytree(tree, directory: str) -> None:
         if dtype_name in _EXOTIC:
             arr = arr.view(_EXOTIC[dtype_name][0])
         np.save(os.path.join(directory, fname), arr)
-        manifest["leaves"].append({
-            "path": ps, "file": fname, "shape": list(arr.shape),
-            "dtype": dtype_name})
+        manifest["leaves"].append(
+            {"path": ps, "file": fname, "shape": list(arr.shape), "dtype": dtype_name}
+        )
     with open(os.path.join(directory, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     # atomic commit marker — written last
@@ -76,8 +78,11 @@ def restore_pytree(template, directory: str, shardings=None):
     by_path = {l["path"]: l for l in manifest["leaves"]}
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
-    shard_flat = (jax.tree_util.tree_leaves(shardings)
-                  if shardings is not None else [None] * len(flat))
+    shard_flat = (
+        jax.tree_util.tree_leaves(shardings)
+        if shardings is not None
+        else [None] * len(flat)
+    )
     out: List[Any] = []
     for (path, leaf), shd in zip(flat, shard_flat):
         ps = _path_str(path)
@@ -89,13 +94,13 @@ def restore_pytree(template, directory: str, shardings=None):
             arr = arr.view(_EXOTIC[entry["dtype"]][1])
         want_shape = tuple(np.shape(leaf))
         if tuple(arr.shape) != want_shape:
-            raise ValueError(f"{ps}: checkpoint shape {arr.shape} != "
-                             f"template {want_shape}")
+            raise ValueError(
+                f"{ps}: checkpoint shape {arr.shape} != template {want_shape}"
+            )
         want_dtype = getattr(leaf, "dtype", None)
         if want_dtype is not None and arr.dtype != want_dtype:
             arr = arr.astype(want_dtype)
-        out.append(jax.device_put(arr, shd) if shd is not None
-                   else jax.device_put(arr))
+        out.append(jax.device_put(arr, shd) if shd is not None else jax.device_put(arr))
     return treedef.unflatten(out)
 
 
@@ -118,8 +123,7 @@ def latest_step(base_dir: str) -> Optional[int]:
 class CheckpointManager:
     """Async (background-thread) checkpoint writer with retention."""
 
-    def __init__(self, base_dir: str, keep_last: int = 3,
-                 async_write: bool = True):
+    def __init__(self, base_dir: str, keep_last: int = 3, async_write: bool = True):
         self.base_dir = base_dir
         self.keep_last = keep_last
         self.async_write = async_write
@@ -135,17 +139,18 @@ class CheckpointManager:
             self._thread = None
 
     def _gc(self) -> None:
-        steps = sorted(s for s in (
-            int(n.split("_", 1)[1]) for n in os.listdir(self.base_dir)
-            if n.startswith("step_")))
-        for s in steps[:-self.keep_last] if self.keep_last else []:
+        steps = sorted(
+            int(n.split("_", 1)[1])
+            for n in os.listdir(self.base_dir)
+            if n.startswith("step_")
+        )
+        for s in steps[: -self.keep_last] if self.keep_last else []:
             shutil.rmtree(self._dir(s), ignore_errors=True)
 
     def save(self, tree, step: int) -> None:
         """Snapshot to host memory synchronously, write to disk async."""
         self.wait()
-        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
-                                 tree)
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def work():
             save_pytree(host_tree, self._dir(step))
@@ -157,8 +162,7 @@ class CheckpointManager:
         else:
             work()
 
-    def restore_latest(self, template, shardings=None,
-                       ) -> Tuple[Optional[int], Any]:
+    def restore_latest(self, template, shardings=None) -> Tuple[Optional[int], Any]:
         step = latest_step(self.base_dir)
         if step is None:
             return None, template

@@ -1,3 +1,7 @@
 """Deterministic sharded data pipeline."""
-from repro.data.pipeline import (SyntheticLMDataset, SyntheticImageDataset,
-                                 FileTokenDataset)  # noqa: F401
+
+from repro.data.pipeline import (  # noqa: F401
+    SyntheticLMDataset,
+    SyntheticImageDataset,
+    FileTokenDataset,
+)

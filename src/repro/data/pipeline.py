@@ -11,6 +11,7 @@ token history) — cheap, deterministic, and with enough structure that a
 ~100M model visibly learns (loss drops well below uniform entropy), which
 the examples/tests rely on.
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -23,7 +24,8 @@ def _philox(seed: int, counters: np.ndarray) -> np.ndarray:
     """Counter-based uniform uint32s (stateless splitmix-style mix)."""
     # fold counters through a splitmix-style mix (vectorized, stateless)
     x = counters.astype(np.uint64) + np.uint64(
-        (seed * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF)
+        (seed * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    )
     x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
     x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
     x = x ^ (x >> np.uint64(31))
@@ -44,7 +46,7 @@ class SyntheticLMDataset:
     """
 
     vocab: int
-    seq_len: int              # tokens per example INCLUDING the label shift
+    seq_len: int  # tokens per example INCLUDING the label shift
     global_batch: int
     seed: int = 0
     n_hosts: int = 1
@@ -59,15 +61,16 @@ class SyntheticLMDataset:
 
     def batch_at(self, step: int) -> Dict[str, np.ndarray]:
         B = self.per_host_batch
-        rows = (np.arange(B) + self.host_id * B
-                + step * self.global_batch).astype(np.uint64)
+        rows = (np.arange(B) + self.host_id * B + step * self.global_batch).astype(
+            np.uint64
+        )
         toks = np.zeros((B, self.seq_len), np.int64)
         for t in range(self.seq_len):
             if t < self.period:
                 toks[:, t] = _philox(self.seed + 3 + t, rows) % self.vocab
             else:
-                flip = (_philox(self.seed + 101 + t, rows) % 10_000
-                        ) < self.noise * 10_000
+                u = _philox(self.seed + 101 + t, rows) % 10_000
+                flip = u < self.noise * 10_000
                 rand = _philox(self.seed + 211 + t, rows) % self.vocab
                 toks[:, t] = np.where(flip, rand, toks[:, t - self.period])
         return {"tokens": toks.astype(np.int32)}
@@ -98,20 +101,26 @@ class SyntheticImageDataset:
 
     def batch_at(self, step: int) -> Dict[str, np.ndarray]:
         B = self.per_host_batch
-        rows = (np.arange(B) + self.host_id * B
-                + step * self.global_batch).astype(np.uint64)
+        rows = (np.arange(B) + self.host_id * B + step * self.global_batch).astype(
+            np.uint64
+        )
         labels = (_philox(self.seed, rows) % self.n_classes).astype(np.int32)
         H, W = self.hw
-        yy, xx = np.meshgrid(np.linspace(0, 1, H), np.linspace(0, 1, W),
-                             indexing="ij")
+        yy, xx = np.meshgrid(np.linspace(0, 1, H), np.linspace(0, 1, W), indexing="ij")
         freq = 1 + labels[:, None, None] % 4
-        phase = (labels[:, None, None] * 2.399)
-        base = np.sin(2 * np.pi * freq * yy[None] + phase) \
-            * np.cos(2 * np.pi * freq * xx[None])
+        phase = labels[:, None, None] * 2.399
+        base = np.sin(2 * np.pi * freq * yy[None] + phase) * np.cos(
+            2 * np.pi * freq * xx[None]
+        )
         noise_seed = _philox(self.seed + 7, rows)
-        noise = np.stack([
-            np.random.Generator(np.random.Philox(key=int(s))).normal(
-                0, 0.3, (H, W)) for s in noise_seed])
+        noise = np.stack(
+            [
+                np.random.Generator(np.random.Philox(key=int(s))).normal(
+                    0, 0.3, (H, W)
+                )
+                for s in noise_seed
+            ]
+        )
         img = (base + noise)[..., None].repeat(self.channels, -1)
         return {"images": img.astype(np.float32), "labels": labels}
 
@@ -160,8 +169,12 @@ class SyntheticRequestStream:
 
     def _images(self) -> SyntheticImageDataset:
         return SyntheticImageDataset(
-            hw=self.hw, channels=self.channels, n_classes=self.n_classes,
-            global_batch=1, seed=self.seed)
+            hw=self.hw,
+            channels=self.channels,
+            n_classes=self.n_classes,
+            global_batch=1,
+            seed=self.seed,
+        )
 
     def image_at(self, i: int) -> Tuple[np.ndarray, int]:
         """Request ``i``'s (image, label) — pure in (seed, i)."""
@@ -181,8 +194,8 @@ class SyntheticRequestStream:
         if self.process == "uniform":
             return np.arange(n) / self.rate_hz
         if self.process == "poisson":
-            u = (_philox(self.seed + 31, np.arange(n).astype(np.uint64))
-                 .astype(np.float64) + 1.0) / 2.0**32
+            counters = np.arange(n).astype(np.uint64)
+            u = (_philox(self.seed + 31, counters).astype(np.float64) + 1.0) / 2.0**32
             t = np.cumsum(-np.log(u) / self.rate_hz)
             return t - t[0]
         times: list = []
@@ -229,8 +242,6 @@ class FileTokenDataset:
         stride = self.stride or self.seq_len
         n_windows = max(1, (len(arr) - self.seq_len) // stride)
         B = self.per_host_batch
-        idx = (np.arange(B) + self.host_id * B
-               + step * self.global_batch) % n_windows
-        toks = np.stack([arr[i * stride: i * stride + self.seq_len]
-                         for i in idx])
+        idx = (np.arange(B) + self.host_id * B + step * self.global_batch) % n_windows
+        toks = np.stack([arr[i * stride : i * stride + self.seq_len] for i in idx])
         return {"tokens": toks.astype(np.int32)}

@@ -1,4 +1,10 @@
 """Optimizers, schedules, clipping, gradient accumulation."""
-from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
-                               global_norm, clip_by_global_norm)
+
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    clip_by_global_norm,
+)
 from repro.optim.schedules import warmup_cosine, warmup_linear  # noqa: F401

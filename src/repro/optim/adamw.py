@@ -4,6 +4,7 @@ Optimizer moments are kept in f32 regardless of the param dtype; with the
 ZeRO-1 sharding spec (``distributed.sharding.zero1_pspec``) the moments are
 additionally sharded over the data axes.
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -21,21 +22,21 @@ class AdamWConfig:
     weight_decay: float = 0.1
     clip_norm: Optional[float] = 1.0
     # params whose path matches any of these fragments skip weight decay
-    no_decay_fragments: Tuple[str, ...] = ("norm", "bias", "A_log", "dt_bias",
-                                           "/D")
+    no_decay_fragments: Tuple[str, ...] = ("norm", "bias", "A_log", "dt_bias", "/D")
 
 
 def global_norm(tree) -> jax.Array:
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
 
 
 def clip_by_global_norm(tree, max_norm: float):
     norm = global_norm(tree)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
-    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
-                                   ).astype(g.dtype), tree), norm
+    clipped = jax.tree.map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree
+    )
+    return clipped, norm
 
 
 def adamw_init(params) -> Dict[str, Any]:
@@ -50,12 +51,12 @@ def adamw_init(params) -> Dict[str, Any]:
 
 
 def _path_str(path) -> str:
-    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                    for p in path)
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
 
 
-def adamw_update(grads, opt_state, params, lr, cfg: AdamWConfig = AdamWConfig(),
-                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+def adamw_update(
+    grads, opt_state, params, lr, cfg: AdamWConfig = AdamWConfig()
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
     """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
     metrics: Dict[str, jax.Array] = {}
     if cfg.clip_norm is not None:
@@ -71,15 +72,18 @@ def adamw_update(grads, opt_state, params, lr, cfg: AdamWConfig = AdamWConfig(),
         v_new = cfg.b2 * v + (1 - cfg.b2) * gf * gf
         update = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + cfg.eps)
         ps = _path_str(path)
-        if cfg.weight_decay and not any(f in ps for f in
-                                        cfg.no_decay_fragments):
+        if cfg.weight_decay and not any(f in ps for f in cfg.no_decay_fragments):
             update = update + cfg.weight_decay * p.astype(jnp.float32)
         p_new = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
         return p_new, m_new, v_new
 
     flat = jax.tree_util.tree_map_with_path(
         lambda path, p, g, m, v: upd(path, p, g, m, v),
-        params, grads, opt_state["m"], opt_state["v"])
+        params,
+        grads,
+        opt_state["m"],
+        opt_state["v"],
+    )
     # unzip the (p, m, v) triples
     treedef = jax.tree_util.tree_structure(params)
     triples = treedef.flatten_up_to(flat)

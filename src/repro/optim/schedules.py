@@ -1,23 +1,31 @@
 """LR schedules as jnp-traceable functions of the step counter."""
+
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def warmup_cosine(step, *, peak_lr: float, warmup_steps: int,
-                  total_steps: int, min_ratio: float = 0.1):
+def warmup_cosine(
+    step,
+    *,
+    peak_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    min_ratio: float = 0.1,
+):
     step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
     warm = peak_lr * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
-    frac = jnp.clip((step - warmup_steps)
-                    / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    frac = jnp.clip(
+        (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
     cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
     return jnp.where(step < warmup_steps, warm, peak_lr * cos)
 
 
-def warmup_linear(step, *, peak_lr: float, warmup_steps: int,
-                  total_steps: int):
+def warmup_linear(step, *, peak_lr: float, warmup_steps: int, total_steps: int):
     step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
     warm = peak_lr * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
-    frac = jnp.clip((step - warmup_steps)
-                    / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    frac = jnp.clip(
+        (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
     return jnp.where(step < warmup_steps, warm, peak_lr * (1 - frac))

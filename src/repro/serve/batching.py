@@ -72,7 +72,8 @@ class BucketBatcher:
 
     @property
     def depth(self) -> int:
-        return len(self._q)
+        with self._lock:
+            return len(self._q)
 
     def bucket_for(self, n: int) -> int:
         """Smallest bucket covering ``n`` requests (the pad target); ``n``
@@ -85,7 +86,8 @@ class BucketBatcher:
     def take_rid(self) -> int:
         """Allocate one request id from the batcher's counter (so shed
         requests that never enter the queue still get unique rids)."""
-        return next(self._rid)
+        with self._lock:
+            return next(self._rid)
 
     def submit(self, payload: Any, now: Optional[float] = None,
                deadline_s: Optional[float] = None) -> Request:

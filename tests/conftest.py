@@ -25,7 +25,53 @@ except ModuleNotFoundError:
 import numpy as np
 import pytest
 
+# Repo root on sys.path: tests import the stdlib-only static-analysis
+# package (tools.analysis) the same way ``python -m tools.analysis`` does.
+_REPO = str(pathlib.Path(__file__).resolve().parent.parent)
+if _REPO not in sys.path:
+    sys.path.insert(0, _REPO)
+
 
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+class RetraceSentinel:
+    """Asserts ``EXECUTABLE_COMPILES`` never grows outside warmup.
+
+    Usage: run the warmup (server start / first request), call ``arm()``,
+    run the load; the fixture's teardown fails the test if any serving
+    executable (re)compiled after arming.  ``check()`` may also be called
+    mid-test for a tighter window.
+    """
+
+    def __init__(self):
+        self._baseline = None
+
+    def arm(self):
+        from repro.engine import execute
+
+        self._baseline = dict(execute.EXECUTABLE_COMPILES)
+
+    def check(self):
+        from repro.engine import execute
+
+        if self._baseline is None:
+            return
+        grown = {
+            key: (self._baseline.get(key, 0), n)
+            for key, n in execute.EXECUTABLE_COMPILES.items()
+            if n > self._baseline.get(key, 0)
+        }
+        assert not grown, (
+            "retrace outside warmup: executables compiled after "
+            f"retrace_sentinel.arm(): { {k[1:]: v for k, v in grown.items()} }"
+        )
+
+
+@pytest.fixture
+def retrace_sentinel():
+    sentinel = RetraceSentinel()
+    yield sentinel
+    sentinel.check()

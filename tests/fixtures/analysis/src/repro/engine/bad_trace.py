@@ -1,0 +1,30 @@
+"""Corpus: the four trace-safety violations, one each (never run)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("flavor",))
+def truthy(x, flavor="relu"):
+    if x:  # SEED trace-truthiness: truthiness on a traced parameter
+        return jnp.maximum(x, 0.0)
+    return x
+
+
+@jax.jit
+def concretizing(x):
+    return jnp.full((4,), float(x))  # SEED trace-concretize: float(traced)
+
+
+@functools.lru_cache(maxsize=None)
+def cached_on_array(x: jnp.ndarray, scale: float):
+    # SEED trace-lru-array: lru_cache keyed on an array argument
+    return x * scale
+
+
+@functools.partial(jax.jit, static_argnames=("shape",))
+def mutable_static(x, shape, pads=[0, 0]):
+    # SEED trace-mutable-default: list default on a jitted function
+    return jnp.pad(x, pads), shape

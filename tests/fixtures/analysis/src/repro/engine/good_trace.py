@@ -1,0 +1,32 @@
+"""Corpus: trace-safe counterparts — none of these may be flagged."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("flavor", "relu"))
+def static_branching(x, bias=None, flavor="relu", relu=True):
+    if flavor == "relu":  # truthiness on a STATIC is the point of statics
+        x = jnp.maximum(x, 0.0)
+    if bias is not None:  # `is None` checks resolve at trace time
+        x = x + bias
+    if relu:  # bare truthiness on a static parameter
+        x = jnp.maximum(x, 0.0)
+    return x
+
+
+@functools.lru_cache(maxsize=None)
+def cached_on_statics(stride: int, padding: int, relu: bool):
+    return (stride, padding, relu)
+
+
+@functools.partial(jax.jit, static_argnames=("shape",))
+def tuple_default(x, shape=(1, 1)):
+    return jnp.reshape(x, shape)
+
+
+def host_side(x):
+    # concretization OUTSIDE any jitted/kernel body is host code: fine.
+    return float(x)

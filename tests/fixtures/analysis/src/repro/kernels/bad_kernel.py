@@ -1,0 +1,26 @@
+"""Corpus: the three Pallas-contract violations, one each (never run)."""
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+state = []
+
+
+def _bad_kernel(x_ref, o_ref):
+    # SEED pallas-int64: int64 dtype inside a kernel body
+    o_ref[...] = x_ref[...].astype(jnp.int64)
+
+
+def bad_call(x):
+    return pl.pallas_call(
+        _bad_kernel,
+        grid=(4,),
+        in_specs=[
+            # SEED pallas-index-map: the map calls into mutable state
+            pl.BlockSpec((8, 8), index_map=lambda i: (state.pop(), 0)),
+        ],
+        out_specs=pl.BlockSpec((8, 8), index_map=lambda i: (i, 0)),
+        # SEED pallas-scratch-shape: an array value, not a declaration
+        scratch_shapes=[jnp.zeros((8, 8), jnp.float32)],
+        out_shape=jnp.zeros((8, 8), jnp.float32),
+    )(x)

@@ -1,0 +1,42 @@
+"""Corpus: contract-clean Pallas counterpart in the repo's idiom — all
+three index-map spellings (inline lambda, named def, factory-returned
+lambda), declaration-style scratch, int32-only kernel arithmetic."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT32_MASK = 2**31 - 1  # the largest int32 literal a kernel may carry
+
+
+def _good_kernel(x_ref, o_ref, acc_ref):
+    acc_ref[...] = (x_ref[...] & INT32_MASK).astype(jnp.int32)
+    o_ref[...] = acc_ref[...]
+
+
+def _out_idx(i, j):
+    return (i, j)
+
+
+def _shifted_idx(dh):
+    """Factory in the trim_conv2d style: closes over a static offset."""
+    return lambda i, j: (i + dh, j)
+
+
+def _scratch(shape, dtype):
+    """Declaration-style scratch helper (the trim_conv2d idiom): names a
+    shape+dtype, builds no array."""
+    return pl.BlockSpec(shape, None), dtype
+
+
+def good_call(x):
+    return pl.pallas_call(
+        _good_kernel,
+        grid=(4, 4),
+        in_specs=[
+            pl.BlockSpec((8, 8), index_map=_shifted_idx(1)),
+        ],
+        out_specs=pl.BlockSpec((8, 8), index_map=_out_idx),
+        scratch_shapes=[_scratch((8, 8), jnp.int32)],
+        out_shape=jax.ShapeDtypeStruct((32, 32), jnp.int32),
+    )(x)

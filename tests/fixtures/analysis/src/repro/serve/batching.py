@@ -1,0 +1,23 @@
+"""Corpus: clean lock-discipline counterpart (no findings expected)."""
+
+import threading
+
+
+class BucketBatcher:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._q = []
+        self._last_t = 0.0
+        self._n_deadlined = 0
+        self._rid = iter(range(1 << 30))
+
+    @property
+    def depth(self):
+        with self._lock:
+            return len(self._q)
+
+    def submit(self, payload, now):
+        with self._lock:
+            self._last_t = max(self._last_t, now)
+            self._q.append(payload)
+            return next(self._rid)

@@ -1,0 +1,36 @@
+"""Corpus: the three lock-ownership violations, one each (never run)."""
+
+import threading
+import time
+
+
+class Server:
+    """Mirrors the real Server's lock contract (cls/lock_attr match the
+    DEFAULT_LOCK_MAP so the corpus runs under the default Config)."""
+
+    def __init__(self):
+        self._cv = threading.Condition()
+        self._running = False
+        self._draining = False
+        self._closed = False
+        self._worker = None
+        self.requests = []
+
+    def is_running(self):
+        return self._running  # SEED lock-guarded-attr: read outside the cv
+
+    def wait_once(self):
+        with self._cv:
+            self._cv.wait(0.1)  # SEED lock-wait-while: no enclosing while
+
+    def stall(self):
+        with self._cv:
+            time.sleep(0.1)  # SEED lock-blocking-call: sleep under the cv
+
+    def good_paths(self):
+        """The disciplined versions of all three — must NOT be flagged."""
+        with self._cv:
+            while not self._running:
+                self._cv.wait(0.1)
+            self._draining = True
+        time.sleep(0.0)  # blocking OUTSIDE the cv is fine

@@ -1,0 +1,28 @@
+"""Corpus: deprecation-shim hygiene, one seeded violation.
+
+The dangling docs citation also lives here: DESIGN.md §99 names a section
+the corpus DESIGN.md does not have (SEED docs-section-ref).
+"""
+
+import warnings
+
+
+def old_entry_point(*args, **kwargs):
+    """Deprecated: use ``new_entry_point``."""
+    # SEED hygiene-deprecation-warns: documented Deprecated, never warns
+    return new_entry_point(*args, **kwargs)
+
+
+def good_shim(*args, **kwargs):
+    """Deprecated: use ``new_entry_point`` (correct shim — not flagged)."""
+    warnings.warn(
+        "good_shim is deprecated; use new_entry_point",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return new_entry_point(*args, **kwargs)
+
+
+def new_entry_point(*args, **kwargs):
+    """The replacement (see DESIGN.md §1 for the corpus architecture)."""
+    return (args, tuple(sorted(kwargs)))

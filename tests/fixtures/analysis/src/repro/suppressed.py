@@ -1,0 +1,20 @@
+"""Corpus: the suppression mechanism itself, one seeded violation.
+
+``quiet_shim`` omits its DeprecationWarning but carries a REASONED
+suppression directly above the def — the hygiene rule must stay silent.
+``reasonless`` carries a reason-free disable, which is itself the
+seeded finding (suppress-needs-reason); there is deliberately no other
+violation near it, so this file contributes exactly one finding.
+"""
+
+
+# trimcheck: disable=hygiene-deprecation-warns -- corpus fixture: shows a
+# reasoned suppression silencing the rule at the def it covers.
+def quiet_shim(x):
+    """Deprecated: kept only for the corpus."""
+    return x
+
+
+def reasonless(x):
+    # trimcheck: disable=lock-guarded-attr
+    return x

@@ -1,0 +1,288 @@
+"""trimcheck — the repo-native static-analysis suite (DESIGN.md §10).
+
+Covers: the clean-tree guarantee (``python -m tools.analysis`` finds
+nothing in this repo), the seeded-violation census (the corpus under
+tests/fixtures/analysis yields EXACTLY one finding per rule), a
+triggering + non-triggering fixture assertion for every rule, the
+suppression mechanism (reasoned disables silence; reasonless disables
+are themselves findings and silence nothing), the JSON/CLI contract, and
+the runtime sanitizers (lock-order cycle detection, unguarded-attribute
+access, retrace sentinel) on purpose-built violations.
+
+The analyzer is stdlib-only; only the retrace-sentinel test touches jax.
+"""
+import json
+import os
+import pathlib
+import threading
+
+import pytest
+
+from tools.analysis import RULES, SUPPRESS_RE
+from tools.analysis.core import Config, LockSpec, run_analysis
+from tools.analysis.runtime import (InstrumentedRLock, LockRegistry,
+                                    sanitize_server)
+
+REPO = str(pathlib.Path(__file__).resolve().parent.parent)
+CORPUS = os.path.join(REPO, "tests", "fixtures", "analysis")
+
+
+def corpus_findings(**overrides):
+    return run_analysis(Config(root=CORPUS, **overrides))
+
+
+def rules_of(findings):
+    return sorted(f.rule for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# the two headline guarantees: clean tree, one seeded finding per rule
+# ---------------------------------------------------------------------------
+
+
+def test_full_tree_is_clean():
+    """The acceptance bar: the default run over THIS repo finds nothing.
+    Any new finding is either a real violation (fix it) or an intentional
+    exception (suppress it with a reason)."""
+    findings = run_analysis(Config(root=REPO))
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_corpus_census_one_finding_per_rule():
+    findings = corpus_findings()
+    by_rule = {}
+    for f in findings:
+        by_rule.setdefault(f.rule, []).append(f)
+    dupes = {r: fs for r, fs in by_rule.items() if len(fs) != 1}
+    assert not dupes, f"rules with != 1 seeded finding: {dupes}"
+    assert set(by_rule) == set(RULES), (
+        f"missing seeds: {set(RULES) - set(by_rule)}; "
+        f"unknown rules: {set(by_rule) - set(RULES)}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-rule triggering + non-triggering fixtures
+# ---------------------------------------------------------------------------
+
+#: rule -> (file that must trigger it, file that exercises the same
+#: construct correctly and must NOT trigger it).
+RULE_FIXTURES = {
+    "lock-guarded-attr": ("src/repro/serve/server.py",
+                          "src/repro/serve/batching.py"),
+    "lock-wait-while": ("src/repro/serve/server.py",
+                        "src/repro/serve/batching.py"),
+    "lock-blocking-call": ("src/repro/serve/server.py",
+                           "src/repro/serve/batching.py"),
+    "trace-truthiness": ("src/repro/engine/bad_trace.py",
+                         "src/repro/engine/good_trace.py"),
+    "trace-concretize": ("src/repro/engine/bad_trace.py",
+                         "src/repro/engine/good_trace.py"),
+    "trace-lru-array": ("src/repro/engine/bad_trace.py",
+                        "src/repro/engine/good_trace.py"),
+    "trace-mutable-default": ("src/repro/engine/bad_trace.py",
+                              "src/repro/engine/good_trace.py"),
+    "pallas-index-map": ("src/repro/kernels/bad_kernel.py",
+                         "src/repro/kernels/good_kernel.py"),
+    "pallas-scratch-shape": ("src/repro/kernels/bad_kernel.py",
+                             "src/repro/kernels/good_kernel.py"),
+    "pallas-int64": ("src/repro/kernels/bad_kernel.py",
+                     "src/repro/kernels/good_kernel.py"),
+    "hygiene-deprecation-warns": ("src/repro/shims.py",
+                                  "src/repro/suppressed.py"),
+    "docs-link": ("DESIGN.md", "ROADMAP.md"),
+    "docs-section-ref": ("src/repro/shims.py", "ROADMAP.md"),
+    "suppress-needs-reason": ("src/repro/suppressed.py",
+                              "src/repro/shims.py"),
+}
+
+
+def test_every_rule_has_fixture_pair():
+    assert set(RULE_FIXTURES) == set(RULES)
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_rule_triggers_on_bad_and_not_on_good(rule):
+    bad, good = RULE_FIXTURES[rule]
+    findings = corpus_findings(select=(rule,))
+    assert [f.path for f in findings] == [bad], (
+        f"{rule}: expected exactly one finding in {bad}, got "
+        f"{[(f.path, f.line) for f in findings]}"
+    )
+    assert not [f for f in findings if f.path == good]
+
+
+def test_good_fixture_files_are_totally_clean():
+    """The non-triggering counterparts are clean under EVERY rule, not
+    just their own — good fixtures must not cross-trip other passes."""
+    goods = {good for _, good in RULE_FIXTURES.values()}
+    goods -= {bad for bad, _ in RULE_FIXTURES.values()}
+    dirty = [f for f in corpus_findings() if f.path in goods]
+    assert dirty == [], dirty
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_reasoned_suppression_silences_rule():
+    """suppressed.py's quiet_shim omits its DeprecationWarning but carries
+    a reasoned disable — the hygiene rule stays silent there."""
+    findings = corpus_findings(select=("hygiene-deprecation-warns",))
+    assert all(f.path != "src/repro/suppressed.py" for f in findings)
+
+
+def test_reasonless_suppression_is_a_finding_and_suppresses_nothing():
+    findings = [
+        f
+        for f in corpus_findings(select=("suppress-needs-reason",))
+        if f.path == "src/repro/suppressed.py"
+    ]
+    assert len(findings) == 1
+    # a reasonless disable cannot silence its own finding
+    assert findings[0].rule == "suppress-needs-reason"
+
+
+def test_suppress_regex_shape():
+    m = SUPPRESS_RE.search(
+        "x = 1  # trimcheck: disable=lock-guarded-attr,pallas-int64 -- why"
+    )
+    assert m and m.group(1) == "lock-guarded-attr,pallas-int64"
+    assert m.group(2) == "why"
+    m2 = SUPPRESS_RE.search("# trimcheck: disable=pallas-int64")
+    assert m2 and m2.group(2) is None
+
+
+# ---------------------------------------------------------------------------
+# CLI contract
+# ---------------------------------------------------------------------------
+
+
+def test_cli_json_output_and_exit_codes(capsys):
+    from tools.analysis.__main__ import main
+
+    rc = main(["--root", CORPUS, "--json"])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert out["count"] == len(out["findings"]) == len(RULES)
+    sample = out["findings"][0]
+    assert set(sample) == {"rule", "path", "line", "message"}
+    # selection narrows; an unknown rule is a usage error
+    assert main(["--root", CORPUS, "--select", "pallas-int64"]) == 1
+    assert main(["--root", CORPUS, "--select", "no-such-rule"]) == 2
+    capsys.readouterr()
+
+
+def test_cli_clean_tree_exits_zero(capsys):
+    from tools.analysis.__main__ import main
+
+    assert main(["--root", REPO]) == 0
+    assert "0 findings" in capsys.readouterr().out
+
+
+def test_lock_map_is_config_overridable(tmp_path):
+    """The guarded-attribute map is data, not code: pointing the pass at
+    a different map flags a different attribute set."""
+    src = tmp_path / "thing.py"
+    src.write_text(
+        "class Thing:\n"
+        "    def peek(self):\n"
+        "        return self._depth\n"
+    )
+    findings = run_analysis(
+        Config(
+            root=str(tmp_path),
+            lock_map={
+                "thing.py": (LockSpec("Thing", "_mu", ("_depth",)),)
+            },
+            trace_dirs=(),
+            pallas_dirs=(),
+            hygiene_dirs=(),
+            docs=False,
+        )
+    )
+    assert rules_of(findings) == ["lock-guarded-attr"]
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizers
+# ---------------------------------------------------------------------------
+
+
+def test_lock_registry_detects_order_inversion():
+    reg = LockRegistry()
+    a = InstrumentedRLock("A", reg)
+    b = InstrumentedRLock("B", reg)
+    with a:
+        with b:
+            pass
+    assert reg.errors == []
+    with b:
+        with a:  # closes the A->B / B->A cycle
+            pass
+    assert any("cycle" in e for e in reg.errors)
+
+
+def test_lock_registry_consistent_order_is_clean():
+    reg = LockRegistry()
+    a = InstrumentedRLock("A", reg)
+    b = InstrumentedRLock("B", reg)
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    assert reg.errors == []
+
+
+def test_instrumented_lock_backs_a_condition():
+    """cv.wait() releases and reacquires through the wrapper — the
+    registry's held-stack stays consistent and records no errors."""
+    reg = LockRegistry()
+    cv = threading.Condition(InstrumentedRLock("cv", reg))
+    with cv:
+        cv.wait(timeout=0.01)
+    assert reg.errors == []
+    assert reg._stack() == []
+
+
+class _FakeBatcher:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+
+class _FakeServer:
+    def __init__(self):
+        self._cv = threading.Condition()
+        self.batcher = _FakeBatcher()
+        self._running = False
+        self._worker = None
+
+
+def test_sanitizer_catches_unguarded_access():
+    srv = _FakeServer()
+    reg = sanitize_server(srv)
+    with srv._cv:
+        srv._running = True  # guarded write under the cv: clean
+        assert srv._running
+    assert reg.errors == []
+    if srv._running:  # SIC: unguarded read — must be recorded
+        pass
+    srv._worker = None  # unguarded write — must be recorded
+    assert len(reg.errors) == 2
+    assert all("unguarded" in e for e in reg.errors)
+
+
+def test_retrace_sentinel_detects_ledger_growth(retrace_sentinel):
+    from repro.engine import execute
+
+    key = ("trimcheck-selftest", 0, "float")
+    retrace_sentinel.arm()
+    retrace_sentinel.check()  # no growth yet
+    execute.EXECUTABLE_COMPILES[key] = 1
+    try:
+        with pytest.raises(AssertionError, match="retrace outside warmup"):
+            retrace_sentinel.check()
+    finally:
+        del execute.EXECUTABLE_COMPILES[key]
+    retrace_sentinel.check()  # restored: teardown must pass too

@@ -109,6 +109,25 @@ def test_plan_jit_closure_no_retrace():
     np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
 
 
+def test_executable_ledger_holds_after_warmup(retrace_sentinel):
+    """``executable_for`` is the serving compile seam: after warmup,
+    rebuilt-equal plans and repeat calls must hit the lru — the
+    EXECUTABLE_COMPILES ledger may not grow once the sentinel is armed."""
+    from repro.engine import execute
+
+    cfg = CNN_SMOKES["vgg16"]
+    plan = plan_model(cfg, ExecutionPolicy())
+    compiled = execute.executable_for(plan, 2)          # warmup
+    retrace_sentinel.arm()
+    rebuilt = plan_model(dataclasses.replace(cfg), ExecutionPolicy())
+    assert execute.executable_for(rebuilt, 2) is compiled
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    H, W = cfg.input_hw
+    imgs = jnp.zeros((2, H, W, plan.layers[0].c_in), jnp.float32)
+    np.asarray(compiled(params, imgs))                  # runs, no compile
+    retrace_sentinel.check()
+
+
 def test_paper_shapes_keep_single_wblock_schedule():
     """VGG-16 and AlexNet full-size plans keep the degenerate single-W-block
     schedule (n_wt == 1, tile covers W_O) — the paper shapes never tile."""

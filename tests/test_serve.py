@@ -30,6 +30,7 @@ from repro.engine import ExecutionPolicy, execute, plan_model
 from repro.serve import (BucketBatcher, Request, ServeConfig, ServeEngine,
                          ServeMetrics, Server, pad_batch, serve_stream,
                          stamp_payload)
+from tools.analysis.runtime import sanitize_server
 
 CFG = CNN_SMOKES["vgg16"]
 
@@ -476,13 +477,17 @@ def test_request_timeout_expires_queued_work():
 # ---------------------------------------------------------------------------
 
 
-def test_threaded_submit_conserves_requests(deadlock_guard):
+def test_threaded_submit_conserves_requests(deadlock_guard, retrace_sentinel):
     """Property: N producer threads submitting concurrently conserve
     requests exactly — served + shed + expired == submitted, every
     request terminal, no duplicate rids — under a bounded queue with the
-    shed policy (real clock, real flush worker)."""
+    shed policy (real clock, real flush worker).  Runs under the runtime
+    sanitizer: lock-order cycles or unguarded cv-state access anywhere in
+    the producer/worker interleaving fail the test."""
     srv = _float_server(buckets=(1, 4), max_delay_ms=2.0,
                         queue_capacity=8, overload="shed")
+    registry = sanitize_server(srv)
+    retrace_sentinel.arm()          # engine warmed at construction
     n_threads, per_thread = 4, 12
     results = [[] for _ in range(n_threads)]
 
@@ -515,6 +520,7 @@ def test_threaded_submit_conserves_requests(deadlock_guard):
     rids = [r.rid for r in reqs]
     assert len(set(rids)) == len(rids), "duplicate request ids"
     assert all(v == 1 for v in srv.engine.compile_counts.values())
+    assert registry.errors == [], registry.errors
     # served results are the bit-exact unbatched answers
     for k in range(n_threads):
         imgs = _stream(n=per_thread, seed=k).sample_batch(per_thread)
@@ -524,13 +530,17 @@ def test_threaded_submit_conserves_requests(deadlock_guard):
                     r.result, srv.engine.infer(imgs[i:i + 1])[0])
 
 
-def test_threaded_run_stream_serves_all_and_overlaps(deadlock_guard):
+def test_threaded_run_stream_serves_all_and_overlaps(deadlock_guard,
+                                                     retrace_sentinel):
     """Saturating load through producer threads: everything is served
     (block policy), compile-once holds, and the flush worker's
     double-buffered staging actually overlapped transfers with compute
     (overlapped > 0 — with a deep queue every non-first dispatch finds a
-    prior bucket still in flight)."""
+    prior bucket still in flight).  Sanitized: the saturating block-policy
+    path exercises the cv-wait/notify edges hardest."""
     srv = _float_server(buckets=(1, 4), max_delay_ms=5.0)
+    registry = sanitize_server(srv)
+    retrace_sentinel.arm()
     stream = _stream(n=48, process="bursts", burst_sizes=(48,), gap_s=0.0)
     metrics = srv.run_stream(stream, producers=4)
     srv.close()
@@ -540,12 +550,15 @@ def test_threaded_run_stream_serves_all_and_overlaps(deadlock_guard):
     assert tot["overlapped"] >= 1
     assert all(v == 1 for v in srv.engine.compile_counts.values())
     assert metrics.wall_s and metrics.wall_s > 0
+    assert registry.errors == [], registry.errors
 
 
 def test_threaded_expiry_and_closed_submit(deadlock_guard):
     """The worker expires pre-expired queued work instead of serving it,
-    and a closed Server rejects new submissions."""
+    and a closed Server rejects new submissions.  Sanitized: close() walks
+    the full drain/join/teardown edge of the lock protocol."""
     srv = _float_server(buckets=(4,), max_delay_ms=1.0)
+    registry = sanitize_server(srv)
     srv.start()
     r = srv.submit(_stream().sample_batch(1)[0], deadline_s=-1.0)
     assert r.done.wait(30), "expiry never delivered"
@@ -553,6 +566,7 @@ def test_threaded_expiry_and_closed_submit(deadlock_guard):
     srv.close()
     with pytest.raises(RuntimeError, match="closed"):
         srv.submit(_stream().sample_batch(1)[0])
+    assert registry.errors == [], registry.errors
 
 
 # ---------------------------------------------------------------------------

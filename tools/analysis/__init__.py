@@ -1,0 +1,74 @@
+"""trimcheck — repo-native static analysis for TrIM's invariants.
+
+Run as ``python -m tools.analysis`` (see ``--help``).  DESIGN.md §10 is
+the narrative rule catalog; this table is the executable one.
+"""
+
+from tools.analysis.core import (  # noqa: F401
+    Config,
+    Finding,
+    LockSpec,
+    SUPPRESS_RE,
+    TRIMCHECK_VERSION,
+    run_analysis,
+)
+
+#: rule name -> one-line contract.  ``python -m tools.analysis --list``
+#: prints this; DESIGN.md §10 explains the why behind each.
+RULES = {
+    "lock-guarded-attr": (
+        "declared cv/lock-guarded attributes must be read and written "
+        "inside `with self.<lock>` (map: tools.analysis.locks)"
+    ),
+    "lock-wait-while": (
+        "Condition.wait()/wait_for-less waits must sit inside a `while` "
+        "that re-checks the predicate (spurious wakeups)"
+    ),
+    "lock-blocking-call": (
+        "no blocking work (device compute, sleeps, host transfers, thread "
+        "joins) while holding a serve lock"
+    ),
+    "trace-truthiness": (
+        "no Python `if`/`while`/`not` on traced parameters inside jitted "
+        "or Pallas-kernel bodies (is/is-None checks are fine)"
+    ),
+    "trace-concretize": (
+        "no int()/float()/bool()/.item() on traced parameters inside "
+        "jitted or kernel bodies"
+    ),
+    "trace-lru-array": (
+        "functools.lru_cache must not wrap functions whose signature "
+        "accepts arrays (unbounded cache keyed on array identity)"
+    ),
+    "trace-mutable-default": (
+        "jitted callables must not carry mutable default arguments "
+        "(unhashable as static args; shared across traces)"
+    ),
+    "pallas-index-map": (
+        "pl.pallas_call index maps must be pure functions of grid "
+        "indices and static closure (no self.*, no calls)"
+    ),
+    "pallas-scratch-shape": (
+        "scratch_shapes entries must be static shape declarations, not "
+        "jnp/jax array values"
+    ),
+    "pallas-int64": (
+        "kernel bodies must stay int32-clean: no int64/uint64 dtypes or "
+        "literals beyond 2**31-1 (TPU Pallas has no int64)"
+    ),
+    "hygiene-deprecation-warns": (
+        "a shim documented as Deprecated must emit DeprecationWarning "
+        "(and any 'deprecated' warn must pass that category)"
+    ),
+    "docs-link": (
+        "relative markdown links in the tracked docs set must resolve"
+    ),
+    "docs-section-ref": (
+        "every `DESIGN.md §N[.M]` citation (docs and source) must name a "
+        "real DESIGN.md heading"
+    ),
+    "suppress-needs-reason": (
+        "`# trimcheck: disable=<rule>` requires `-- <reason>`; a "
+        "reasonless disable is itself a finding and cannot be suppressed"
+    ),
+}

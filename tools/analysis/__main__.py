@@ -1,0 +1,108 @@
+"""``python -m tools.analysis`` — run trimcheck over the repo.
+
+Exit codes: 0 clean, 1 findings, 2 usage error.
+
+Examples::
+
+    python -m tools.analysis                      # all passes, human output
+    python -m tools.analysis --json               # machine-readable (CI)
+    python -m tools.analysis --select lock-guarded-attr,lock-wait-while
+    python -m tools.analysis --paths src/repro/serve
+    python -m tools.analysis --list               # print the rule catalog
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Optional
+
+from tools.analysis import RULES, TRIMCHECK_VERSION
+from tools.analysis.core import Config, run_analysis
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="trimcheck: repo-native static analysis "
+        "(lock-ownership, trace-safety, pallas-contract, api-hygiene).",
+    )
+    ap.add_argument(
+        "--root",
+        default=None,
+        help="repo root to analyze (default: the repo containing tools/)",
+    )
+    ap.add_argument(
+        "--select",
+        default=None,
+        metavar="RULE[,RULE...]",
+        help="only report these rules",
+    )
+    ap.add_argument(
+        "--paths",
+        default=None,
+        metavar="PREFIX[,PREFIX...]",
+        help="only report findings under these path prefixes",
+    )
+    ap.add_argument(
+        "--json", action="store_true", help="machine-readable output"
+    )
+    ap.add_argument(
+        "--list", action="store_true", help="print the rule catalog and exit"
+    )
+    args = ap.parse_args(argv)
+
+    if args.list:
+        width = max(len(r) for r in RULES)
+        for rule, desc in RULES.items():
+            print(f"{rule.ljust(width)}  {desc}")
+        return 0
+
+    select = None
+    if args.select:
+        select = tuple(r.strip() for r in args.select.split(",") if r.strip())
+        unknown = [r for r in select if r not in RULES]
+        if unknown:
+            print(
+                f"trimcheck: unknown rule(s): {', '.join(unknown)} "
+                f"(see --list)",
+                file=sys.stderr,
+            )
+            return 2
+    paths = None
+    if args.paths:
+        paths = tuple(p.strip() for p in args.paths.split(",") if p.strip())
+
+    root = args.root or os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+    findings = run_analysis(Config(root=root, select=select, paths=paths))
+
+    if args.json:
+        print(
+            json.dumps(
+                {
+                    "version": TRIMCHECK_VERSION,
+                    "root": root,
+                    "count": len(findings),
+                    "findings": [f.to_dict() for f in findings],
+                },
+                indent=2,
+            )
+        )
+    else:
+        for f in findings:
+            print(str(f))
+        n = len(findings)
+        label = "finding" if n == 1 else "findings"
+        print(
+            f"trimcheck: {n} {label} across {len(RULES)} rules"
+            + ("" if n else " — clean")
+        )
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

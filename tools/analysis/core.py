@@ -1,0 +1,312 @@
+"""trimcheck core: findings, suppressions, source files, and the driver.
+
+The analysis framework is deliberately stdlib-only (``ast`` + ``re``): the
+CI ``static-analysis`` lane and the tier-1 ``tests/test_analysis.py`` run
+it without importing jax, so a broken accelerator install can never mask a
+source-level invariant violation.
+
+Vocabulary:
+
+- A **rule** is one named invariant (``lock-guarded-attr``,
+  ``pallas-int64``, ...).  ``tools.analysis.RULES`` is the catalog
+  (DESIGN.md §10 documents each rule's rationale).
+- A **pass** is a group of rules sharing one traversal (lock-ownership,
+  trace-safety, pallas-contract, api-hygiene).
+- A **Finding** is one violation at one source line.  ``python -m
+  tools.analysis`` exits non-zero when any finding survives suppression.
+- A **suppression** is an inline ``# trimcheck: disable=<rule>[,...] --
+  <reason>`` comment on the offending line (or the line directly above
+  it).  The reason is REQUIRED: a reasonless disable is itself a finding
+  (``suppress-needs-reason``) — intentional exceptions must say why.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+#: Bumped when finding semantics / JSON schema change.
+TRIMCHECK_VERSION = 1
+
+#: ``# trimcheck: disable=rule-a,rule-b -- why this is fine``
+SUPPRESS_RE = re.compile(
+    r"#\s*trimcheck:\s*disable=([A-Za-z0-9_,-]+)\s*(?:--\s*(\S.*))?$"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str
+    path: str  # repo-relative, "/"-separated
+    line: int  # 1-based
+    message: str
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "message": self.message,
+        }
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+class SourceFile:
+    """A parsed Python source file plus parent links for ancestor walks."""
+
+    def __init__(self, root: str, relpath: str):
+        self.root = root
+        self.path = relpath.replace(os.sep, "/")
+        self.abspath = os.path.join(root, relpath)
+        with open(self.abspath, encoding="utf-8") as f:
+            self.text = f.read()
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=self.path)
+        self._parents: Optional[Dict[ast.AST, ast.AST]] = None
+
+    @property
+    def parents(self) -> Dict[ast.AST, ast.AST]:
+        if self._parents is None:
+            self._parents = {}
+            for node in ast.walk(self.tree):
+                for child in ast.iter_child_nodes(node):
+                    self._parents[child] = node
+        return self._parents
+
+    def ancestors(self, node: ast.AST) -> Iterable[ast.AST]:
+        """Walk from ``node``'s parent up to the module node."""
+        parents = self.parents
+        cur = parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = parents.get(cur)
+
+    def finding(self, rule: str, node_or_line, message: str) -> Finding:
+        line = (
+            node_or_line
+            if isinstance(node_or_line, int)
+            else getattr(node_or_line, "lineno", 0)
+        )
+        return Finding(rule=rule, path=self.path, line=line, message=message)
+
+
+def attr_chain(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` -> "a.b.c" for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def terminal_name(func: ast.AST) -> Optional[str]:
+    """The last path segment of a call target: ``np.asarray`` -> "asarray",
+    ``sleep`` -> "sleep"."""
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+
+def scan_suppressions(
+    sf: SourceFile,
+) -> Tuple[Dict[int, Set[str]], List[Finding]]:
+    """Parse ``# trimcheck: disable=...`` comments.
+
+    Returns (line -> suppressed rule names, findings for reasonless
+    disables).  A trailing suppression covers its own line; a standalone
+    comment covers itself, any immediately following comment-only lines
+    (the reason may wrap), and the first code line after them.
+    """
+    by_line: Dict[int, Set[str]] = {}
+    findings: List[Finding] = []
+    for i, text in enumerate(sf.lines, start=1):
+        m = SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        reason = (m.group(2) or "").strip()
+        if not reason:
+            findings.append(
+                sf.finding(
+                    "suppress-needs-reason",
+                    i,
+                    "trimcheck: disable without a reason — append "
+                    "'-- <why this exception is sound>'",
+                )
+            )
+            continue
+        by_line.setdefault(i, set()).update(rules)
+        if text.lstrip().startswith("#"):
+            # Standalone comment: cover through the wrapped-reason comment
+            # block and the first code line that follows it.
+            j = i + 1
+            while j <= len(sf.lines) and sf.lines[j - 1].lstrip().startswith("#"):
+                by_line.setdefault(j, set()).update(rules)
+                j += 1
+            by_line.setdefault(j, set()).update(rules)
+    return by_line, findings
+
+
+def apply_suppressions(
+    findings: Sequence[Finding],
+    suppressed: Dict[str, Dict[int, Set[str]]],
+) -> List[Finding]:
+    """Drop findings covered by a (path, line) suppression for their rule
+    (or for ``all``).  ``suppress-needs-reason`` findings are never
+    droppable — the reasonless comment itself is the defect."""
+    out = []
+    for f in findings:
+        if f.rule != "suppress-needs-reason":
+            rules = suppressed.get(f.path, {}).get(f.line, set())
+            if f.rule in rules or "all" in rules:
+                continue
+        out.append(f)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Config + driver
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LockSpec:
+    """One declared lock-ownership contract: inside class ``cls`` (in the
+    mapped file), reads/writes of ``guarded`` attributes must happen under
+    ``with self.<lock_attr>``.  THE guarded-attribute map — the single
+    source of truth DESIGN.md §8 defers to — lives in
+    ``tools.analysis.locks.DEFAULT_LOCK_MAP``."""
+
+    cls: str
+    lock_attr: str
+    guarded: Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """What to analyze.  The zero-arg default is THE repo contract: the
+    committed lock map, the engine/kernels trace scope, and the markdown
+    set — ``python -m tools.analysis`` runs exactly this."""
+
+    root: str = "."
+    #: path -> LockSpecs for the lock-ownership pass.
+    lock_map: Optional[Dict[str, Tuple[LockSpec, ...]]] = None
+    #: directories (repo-relative) scanned by the trace-safety pass.
+    trace_dirs: Tuple[str, ...] = ("src/repro/engine", "src/repro/kernels")
+    #: directories scanned by the pallas-contract pass.
+    pallas_dirs: Tuple[str, ...] = ("src/repro/kernels",)
+    #: directories scanned by the api-hygiene (deprecation) pass.
+    hygiene_dirs: Tuple[str, ...] = ("src/repro",)
+    #: run the repo-level docs rules (markdown links + §-citations).
+    docs: bool = True
+    #: restrict to these rules (None = all).
+    select: Optional[Tuple[str, ...]] = None
+    #: restrict findings to paths carrying one of these prefixes.
+    paths: Optional[Tuple[str, ...]] = None
+
+
+def iter_py_files(root: str, rel_dirs: Sequence[str]) -> Iterable[str]:
+    seen = set()
+    for d in rel_dirs:
+        base = os.path.join(root, d)
+        if os.path.isfile(base) and d.endswith(".py"):
+            if d not in seen:
+                seen.add(d)
+                yield d
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [x for x in dirnames if x != "__pycache__"]
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                rel = os.path.relpath(os.path.join(dirpath, fn), root)
+                rel = rel.replace(os.sep, "/")
+                if rel not in seen:
+                    seen.add(rel)
+                    yield rel
+
+
+def load_source(root: str, rel: str) -> Optional[SourceFile]:
+    try:
+        return SourceFile(root, rel)
+    except (OSError, SyntaxError):
+        return None
+
+
+def run_analysis(cfg: Optional[Config] = None) -> List[Finding]:
+    """Run every selected pass under ``cfg``; returns surviving findings."""
+    from tools.analysis import docs, hygiene, locks, pallas_pass, trace
+
+    cfg = cfg or Config()
+    lock_map = cfg.lock_map if cfg.lock_map is not None else locks.DEFAULT_LOCK_MAP
+
+    raw: List[Finding] = []
+    suppressed: Dict[str, Dict[int, Set[str]]] = {}
+    scanned: Dict[str, SourceFile] = {}
+
+    def get(rel: str) -> Optional[SourceFile]:
+        if rel not in scanned:
+            sf = load_source(cfg.root, rel)
+            if sf is None:
+                return None
+            scanned[rel] = sf
+            sup, sup_findings = scan_suppressions(sf)
+            suppressed[sf.path] = sup
+            raw.extend(sup_findings)
+        return scanned[rel]
+
+    # Lock-ownership pass: only the declared files.
+    for rel, specs in sorted(lock_map.items()):
+        sf = get(rel)
+        if sf is not None:
+            raw.extend(locks.check(sf, specs))
+
+    # Trace-safety pass.
+    for rel in iter_py_files(cfg.root, cfg.trace_dirs):
+        sf = get(rel)
+        if sf is not None:
+            raw.extend(trace.check(sf))
+
+    # Pallas kernel-contract pass.
+    for rel in iter_py_files(cfg.root, cfg.pallas_dirs):
+        sf = get(rel)
+        if sf is not None:
+            raw.extend(pallas_pass.check(sf))
+
+    # API-hygiene pass (deprecation shims).
+    for rel in iter_py_files(cfg.root, cfg.hygiene_dirs):
+        sf = get(rel)
+        if sf is not None:
+            raw.extend(hygiene.check(sf))
+
+    # Repo-level docs rules (absorbed tools/check_docs.py static half).
+    if cfg.docs:
+        raw.extend(docs.check(cfg.root))
+
+    findings = apply_suppressions(raw, suppressed)
+    if cfg.select is not None:
+        keep = set(cfg.select)
+        findings = [f for f in findings if f.rule in keep]
+    if cfg.paths is not None:
+        findings = [
+            f for f in findings if any(f.path.startswith(p) for p in cfg.paths)
+        ]
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings

@@ -1,0 +1,135 @@
+"""Docs rules (docs-link / docs-section-ref) — the static half of the old
+``tools/check_docs.py``, absorbed into the api-hygiene pass.
+
+``tools/check_docs.py`` remains as a thin CLI shim (it adds the
+quickstart execution check, which needs a subprocess and jax and so does
+not belong in the pure-AST analyzer).  The regexes and file sets here are
+the single copy; the shim re-exports them.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import Iterable, List, Set
+
+from tools.analysis.core import Finding
+
+MARKDOWN_FILES = ["README.md", "DESIGN.md", "ROADMAP.md", "benchmarks/README.md"]
+
+#: ``[text](target)`` — good enough for our docs; skips images/autolinks.
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+#: A section citation: "DESIGN.md §9.3", "DESIGN.md §4", "(§7)", "§9.2's".
+SECTION_REF_RE = re.compile(r"DESIGN\.md[^§\n]{0,20}§(\d+(?:\.\d+)?)")
+HEADING_RE = re.compile(r"^#{2,3}\s+§(\d+(?:\.\d+)?)\b", re.M)
+#: Source globs scanned for DESIGN.md citations.
+SOURCE_DIRS = ["src", "tests", "benchmarks", "examples", "tools"]
+#: The seeded-violation corpus contains deliberately-broken docs repos;
+#: they are analyzed with an explicit root by the tests, never implicitly.
+SKIP_MARKER = "fixtures/analysis"
+
+
+def design_sections(root: str) -> Set[str]:
+    path = os.path.join(root, "DESIGN.md")
+    if not os.path.exists(path):
+        return set()
+    with open(path, encoding="utf-8") as f:
+        return set(HEADING_RE.findall(f.read()))
+
+
+def iter_source_files(root: str) -> Iterable[str]:
+    for d in SOURCE_DIRS:
+        base = os.path.join(root, d)
+        for dirpath, dirnames, files in os.walk(base):
+            dirnames[:] = [x for x in dirnames if x != "__pycache__"]
+            for f in sorted(files):
+                if f.endswith((".py", ".md", ".yml")):
+                    rel = os.path.relpath(os.path.join(dirpath, f), root)
+                    rel = rel.replace(os.sep, "/")
+                    if SKIP_MARKER in rel:
+                        continue
+                    yield rel
+
+
+def check_links(root: str) -> List[Finding]:
+    findings: List[Finding] = []
+    for md in MARKDOWN_FILES:
+        path = os.path.join(root, md)
+        if not os.path.exists(path):
+            findings.append(
+                Finding("docs-link", md, 1, "tracked markdown file missing")
+            )
+            continue
+        with open(path, encoding="utf-8") as f:
+            lines = f.read().splitlines()
+        for i, line in enumerate(lines, start=1):
+            for target in LINK_RE.findall(line):
+                if "://" in target or target.startswith(("mailto:", "#")):
+                    continue
+                rel = target.split("#")[0]
+                if not rel:
+                    continue
+                resolved = os.path.normpath(
+                    os.path.join(root, os.path.dirname(md), rel)
+                )
+                if not os.path.exists(resolved):
+                    findings.append(
+                        Finding(
+                            "docs-link", md, i, f"broken link -> {target}"
+                        )
+                    )
+    return findings
+
+
+def check_section_refs(root: str) -> List[Finding]:
+    findings: List[Finding] = []
+    sections = design_sections(root)
+    if not sections:
+        findings.append(
+            Finding(
+                "docs-section-ref",
+                "DESIGN.md",
+                1,
+                "no §-numbered headings found",
+            )
+        )
+        return findings
+    targets = list(MARKDOWN_FILES) + list(iter_source_files(root))
+    seen = set()
+    for rel in targets:
+        if rel in seen:
+            continue
+        seen.add(rel)
+        path = os.path.join(root, rel)
+        if not os.path.exists(path):
+            continue
+        with open(path, encoding="utf-8", errors="replace") as f:
+            lines = f.read().splitlines()
+        for i, line in enumerate(lines, start=1):
+            for ref in SECTION_REF_RE.findall(line):
+                top = ref.split(".")[0]
+                if ref not in sections and top not in sections:
+                    findings.append(
+                        Finding(
+                            "docs-section-ref",
+                            rel,
+                            i,
+                            f"cites DESIGN.md §{ref} but DESIGN.md has no "
+                            f"such heading",
+                        )
+                    )
+                elif ref not in sections and "." in ref:
+                    findings.append(
+                        Finding(
+                            "docs-section-ref",
+                            rel,
+                            i,
+                            f"cites DESIGN.md §{ref}; §{top} exists but "
+                            f"the subsection heading does not",
+                        )
+                    )
+    return findings
+
+
+def check(root: str) -> List[Finding]:
+    return check_links(root) + check_section_refs(root)

@@ -1,0 +1,88 @@
+"""API-hygiene pass (rule hygiene-deprecation-warns).
+
+Two complementary checks on deprecation shims:
+
+1. A function whose docstring begins with "Deprecated" promises callers a
+   migration signal — its body must contain
+   ``warnings.warn(..., DeprecationWarning)`` (``FutureWarning`` also
+   accepted: it is the louder, user-facing variant).
+2. Conversely, any ``warnings.warn`` whose message mentions
+   "deprecated" must pass one of those categories — the default
+   ``UserWarning`` is invisible to ``-W error::DeprecationWarning`` test
+   rigs, so the shim would rot silently.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.analysis.core import Finding, SourceFile, attr_chain
+
+_OK_CATEGORIES = {"DeprecationWarning", "FutureWarning", "PendingDeprecationWarning"}
+
+
+def _warn_category(call: ast.Call) -> str:
+    """Category name passed to warnings.warn, or 'UserWarning' default."""
+    cat = None
+    if len(call.args) >= 2:
+        cat = call.args[1]
+    for kw in call.keywords:
+        if kw.arg == "category":
+            cat = kw.value
+    if cat is None:
+        return "UserWarning"
+    chain = attr_chain(cat)
+    return chain.split(".")[-1] if chain else "<expr>"
+
+
+def _is_warn(call: ast.Call) -> bool:
+    chain = attr_chain(call.func)
+    return chain in ("warnings.warn", "warn")
+
+
+def _msg_mentions_deprecated(call: ast.Call) -> bool:
+    if not call.args:
+        return False
+    msg = call.args[0]
+    for sub in ast.walk(msg):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            if "deprecat" in sub.value.lower():
+                return True
+    return False
+
+
+def check(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    for fn in ast.walk(sf.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        doc = ast.get_docstring(fn) or ""
+        documented_deprecated = doc.lstrip().lower().startswith("deprecated")
+        warned_ok = False
+        for sub in ast.walk(fn):
+            if not (isinstance(sub, ast.Call) and _is_warn(sub)):
+                continue
+            cat = _warn_category(sub)
+            if cat in _OK_CATEGORIES:
+                warned_ok = True
+            elif _msg_mentions_deprecated(sub):
+                findings.append(
+                    sf.finding(
+                        "hygiene-deprecation-warns",
+                        sub,
+                        f"{fn.name}: warns about deprecation with category "
+                        f"{cat} — pass DeprecationWarning so -W filters "
+                        f"and test rigs can see it",
+                    )
+                )
+        if documented_deprecated and not warned_ok:
+            findings.append(
+                sf.finding(
+                    "hygiene-deprecation-warns",
+                    fn,
+                    f"{fn.name}: docstring says Deprecated but the body "
+                    f"never emits DeprecationWarning — silent shims rot",
+                )
+            )
+    return findings

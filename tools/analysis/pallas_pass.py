@@ -1,0 +1,178 @@
+"""Pallas kernel-contract pass (rules pallas-index-map /
+pallas-scratch-shape / pallas-int64).
+
+Every ``pl.pallas_call`` site is located syntactically and three
+contracts are checked:
+
+1. **Index-map purity.**  BlockSpec index maps must be pure functions of
+   the grid indices and static closure.  The repo writes them three
+   ways — inline lambdas, module/function-level ``def``s, and factory
+   functions returning lambdas (``x_idx(dh, dw)``); all three are
+   resolved.  Inside the map body we flag ``self.*`` access and any
+   call: both are how mutable state sneaks into what XLA assumes is a
+   replayable pure function.
+2. **Static scratch shapes.**  ``scratch_shapes`` entries declare VMEM
+   allocations; an entry rooted at ``jnp.``/``jax.`` is an array value,
+   not a shape declaration, and would bake a traced value into the
+   allocation.
+3. **int32-only arithmetic.**  TPU Pallas has no int64 (the constraint
+   behind the hi/lo-split requant, DESIGN.md §6): kernel bodies must not
+   reference int64/uint64 dtypes (attribute, string, or np.dtype form)
+   or integer literals outside int32 range.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from tools.analysis.core import Finding, SourceFile, attr_chain, terminal_name
+from tools.analysis.trace import kernel_functions
+
+INT32_MAX = 2**31 - 1
+INT32_MIN = -(2**31)
+
+
+def _resolve_index_map(
+    node: ast.AST, defs: Dict[str, ast.FunctionDef]
+) -> Optional[ast.AST]:
+    """Lambda | Name-of-def | factory-call-returning-lambda -> map body."""
+    if isinstance(node, ast.Lambda):
+        return node
+    if isinstance(node, ast.Name) and node.id in defs:
+        return defs[node.id]
+    if isinstance(node, ast.Call):
+        callee = terminal_name(node.func)
+        fn = defs.get(callee or "")
+        if fn is not None:
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Return) and isinstance(
+                    sub.value, ast.Lambda
+                ):
+                    return sub.value
+    return None
+
+
+def _check_map_body(
+    sf: SourceFile, site: ast.AST, body: ast.AST, findings: List[Finding]
+) -> None:
+    for sub in ast.walk(body):
+        if isinstance(sub, ast.Attribute) and isinstance(sub.value, ast.Name):
+            if sub.value.id == "self":
+                findings.append(
+                    sf.finding(
+                        "pallas-index-map",
+                        site,
+                        f"index map closes over self.{sub.attr} — instance "
+                        f"state is mutable; pass it in as a static instead",
+                    )
+                )
+        elif isinstance(sub, ast.Call):
+            findings.append(
+                sf.finding(
+                    "pallas-index-map",
+                    site,
+                    f"index map body calls "
+                    f"{terminal_name(sub.func) or '<expr>'}() — maps must "
+                    f"be pure arithmetic over grid indices",
+                )
+            )
+
+
+def _int64ish(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute) and node.attr in ("int64", "uint64"):
+        return f".{node.attr}"
+    if isinstance(node, ast.Constant):
+        if isinstance(node.value, int) and not isinstance(node.value, bool):
+            if node.value > INT32_MAX or node.value < INT32_MIN:
+                return f"literal {node.value}"
+        if isinstance(node.value, str) and node.value in ("int64", "uint64"):
+            return f'dtype string "{node.value}"'
+    return None
+
+
+def check(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    defs = {
+        n.name: n for n in ast.walk(sf.tree) if isinstance(n, ast.FunctionDef)
+    }
+
+    for node in ast.walk(sf.tree):
+        if not (
+            isinstance(node, ast.Call)
+            and terminal_name(node.func) == "pallas_call"
+        ):
+            continue
+        for kw in node.keywords:
+            if kw.arg in ("in_specs", "out_specs"):
+                specs = (
+                    kw.value.elts
+                    if isinstance(kw.value, (ast.List, ast.Tuple))
+                    else [kw.value]
+                )
+                for spec in specs:
+                    if not (
+                        isinstance(spec, ast.Call)
+                        and terminal_name(spec.func) == "BlockSpec"
+                    ):
+                        continue
+                    im = None
+                    for skw in spec.keywords:
+                        if skw.arg == "index_map":
+                            im = skw.value
+                    if im is None and len(spec.args) >= 2:
+                        im = spec.args[1]
+                    if im is None:
+                        continue
+                    body = _resolve_index_map(im, defs)
+                    if body is None:
+                        findings.append(
+                            sf.finding(
+                                "pallas-index-map",
+                                spec,
+                                "index map is not a lambda, named def, or "
+                                "factory-returned lambda resolvable in "
+                                "this module — purity cannot be verified",
+                            )
+                        )
+                    else:
+                        _check_map_body(sf, spec, body, findings)
+            elif kw.arg == "scratch_shapes":
+                shapes = (
+                    kw.value.elts
+                    if isinstance(kw.value, (ast.List, ast.Tuple))
+                    else [kw.value]
+                )
+                for sh in shapes:
+                    for sub in ast.walk(sh):
+                        chain = attr_chain(sub) or ""
+                        if isinstance(sub, ast.Call) and (
+                            (attr_chain(sub.func) or "").split(".")[0]
+                            in ("jnp", "jax", "np", "numpy")
+                        ):
+                            findings.append(
+                                sf.finding(
+                                    "pallas-scratch-shape",
+                                    sh,
+                                    f"scratch_shapes entry builds an array "
+                                    f"via {attr_chain(sub.func)}() — must "
+                                    f"be a static shape declaration",
+                                )
+                            )
+                            break
+                        del chain
+
+    # int32-only discipline inside kernel bodies (and same-file callees).
+    for name, fn in sorted(kernel_functions(sf).items()):
+        for sub in ast.walk(fn):
+            why = _int64ish(sub)
+            if why is not None:
+                findings.append(
+                    sf.finding(
+                        "pallas-int64",
+                        sub,
+                        f"{name}: {why} inside a kernel body — TPU Pallas "
+                        f"has no int64 (hi/lo-split instead, DESIGN.md §6)",
+                    )
+                )
+    return findings

@@ -1,0 +1,200 @@
+"""Runtime sanitizers — the dynamic counterpart to the static lock pass.
+
+Static analysis proves the *lexical* discipline; these hooks check the
+*actual* execution under the threaded serve tests:
+
+- :class:`LockRegistry` + :class:`InstrumentedRLock` record every lock
+  acquisition per thread and maintain a global lock-order graph.  An
+  acquisition that would close a cycle (lock A held while taking B after
+  some thread took B while holding A) is recorded as a potential
+  deadlock — the classic two-lock inversion no single-threaded test can
+  reproduce deterministically.
+- :func:`sanitize_server` swaps a ``Server``'s condition variable and
+  its batcher's lock for instrumented ones and subclasses the instance
+  so every read/write of the cv-guarded attributes verifies, at access
+  time, that the current thread owns the cv.
+
+Violations are RECORDED, not raised: raising inside a flush worker or a
+producer would change the very interleaving being tested.  Tests assert
+``registry.errors == []`` after the run.
+
+Unlike the rest of tools.analysis this module imports ``threading`` but
+still no jax — it wraps objects it is handed, so it stays importable
+everywhere.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Set, Tuple
+
+#: Runtime-checked guarded attributes for Server.  ``requests`` is in the
+#: static map but carries audited GIL-atomic suppressions (server.py), so
+#: the runtime check sticks to the strictly cv-owned state machine.
+SERVER_GUARDED = ("_running", "_draining", "_closed", "_worker")
+
+
+class LockRegistry:
+    """Process-wide (per test) acquisition-order graph + violation log."""
+
+    def __init__(self) -> None:
+        self._graph_lock = threading.Lock()
+        #: edge a -> b: some thread acquired b while holding a.
+        self.edges: Dict[str, Set[str]] = {}
+        self.errors: List[str] = []
+        self._held = threading.local()
+
+    # -- held-stack bookkeeping (per thread) ---------------------------
+
+    def _stack(self) -> List[str]:
+        if not hasattr(self._held, "stack"):
+            self._held.stack = []
+        return self._held.stack
+
+    def note_acquired(self, name: str) -> None:
+        stack = self._stack()
+        with self._graph_lock:
+            for held in stack:
+                if held == name:
+                    continue
+                self.edges.setdefault(held, set()).add(name)
+                if self._reaches(name, held):
+                    self.errors.append(
+                        f"lock-order cycle: acquired {name!r} while "
+                        f"holding {held!r}, but {name!r} -> {held!r} "
+                        f"already observed"
+                    )
+        stack.append(name)
+
+    def note_released(self, name: str) -> None:
+        stack = self._stack()
+        if name in stack:
+            # remove the innermost occurrence (release order may not be
+            # strictly LIFO across cv waits).
+            for i in range(len(stack) - 1, -1, -1):
+                if stack[i] == name:
+                    del stack[i]
+                    break
+
+    def _reaches(self, src: str, dst: str) -> bool:
+        seen = set()
+        frontier = [src]
+        while frontier:
+            cur = frontier.pop()
+            if cur == dst:
+                return True
+            if cur in seen:
+                continue
+            seen.add(cur)
+            frontier.extend(self.edges.get(cur, ()))
+        return False
+
+
+class InstrumentedRLock:
+    """An RLock that reports acquisitions to a :class:`LockRegistry`.
+
+    Implements the full ``Condition``-compatibility surface
+    (``_is_owned`` / ``_release_save`` / ``_acquire_restore``) so it can
+    back ``threading.Condition`` — a ``cv.wait()`` then shows up in the
+    registry as a release + reacquire, exactly what really happens.
+    """
+
+    def __init__(self, name: str, registry: LockRegistry) -> None:
+        self.name = name
+        self.registry = registry
+        self._inner = threading.RLock()
+        self._owner: Optional[int] = None
+        self._count = 0
+
+    # -- lock protocol -------------------------------------------------
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            if self._count == 0:
+                self._owner = threading.get_ident()
+                self.registry.note_acquired(self.name)
+            self._count += 1
+        return got
+
+    def release(self) -> None:
+        if self._owner != threading.get_ident():
+            self.registry.errors.append(
+                f"{self.name}: release() by a thread that does not own it"
+            )
+        self._count -= 1
+        if self._count == 0:
+            self._owner = None
+            self.registry.note_released(self.name)
+        self._inner.release()
+
+    __enter__ = acquire
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    # -- Condition compatibility ---------------------------------------
+
+    def _is_owned(self) -> bool:
+        return self._owner == threading.get_ident()
+
+    def _release_save(self) -> Tuple[int, object]:
+        count = self._count
+        self._count = 0
+        self._owner = None
+        self.registry.note_released(self.name)
+        return (count, self._inner._release_save())
+
+    def _acquire_restore(self, state: Tuple[int, object]) -> None:
+        count, inner_state = state
+        self._inner._acquire_restore(inner_state)
+        self._owner = threading.get_ident()
+        self._count = count
+        self.registry.note_acquired(self.name)
+
+
+def _sanitized_subclass(cls, guarded: Tuple[str, ...], registry: LockRegistry):
+    """A subclass of ``cls`` whose guarded-attribute accesses verify cv
+    ownership at runtime.  Built per sanitize call so the registry and
+    guard set ride on the class, not the instance (keeps ``__setattr__``
+    out of its own way)."""
+
+    guarded_set = frozenset(guarded)
+
+    def _check(self, name: str, mode: str) -> None:
+        cv = object.__getattribute__(self, "_cv")
+        lock = getattr(cv, "_lock", None)
+        owned = lock._is_owned() if hasattr(lock, "_is_owned") else False
+        if not owned:
+            fn = threading.current_thread().name
+            registry.errors.append(
+                f"unguarded {mode} of {name} (thread {fn}) — cv not held"
+            )
+
+    class Sanitized(cls):
+        def __getattribute__(self, name):
+            if name in guarded_set:
+                _check(self, name, "read")
+            return super().__getattribute__(name)
+
+        def __setattr__(self, name, value):
+            if name in guarded_set:
+                _check(self, name, "write")
+            super().__setattr__(name, value)
+
+    Sanitized.__name__ = f"Sanitized{cls.__name__}"
+    Sanitized.__qualname__ = Sanitized.__name__
+    return Sanitized
+
+
+def sanitize_server(server, registry: Optional[LockRegistry] = None,
+                    guarded: Tuple[str, ...] = SERVER_GUARDED) -> LockRegistry:
+    """Instrument a ``Server`` (before ``start()``): swap its cv and its
+    batcher's lock for registry-backed ones and enable runtime
+    guarded-attribute checks.  Returns the registry; assert
+    ``registry.errors == []`` when the test's threads are done."""
+    reg = registry if registry is not None else LockRegistry()
+    server._cv = threading.Condition(InstrumentedRLock("Server._cv", reg))
+    server.batcher._lock = InstrumentedRLock("BucketBatcher._lock", reg)
+    server.__class__ = _sanitized_subclass(type(server), guarded, reg)
+    return reg

@@ -1,0 +1,253 @@
+"""Trace-safety pass (rules trace-truthiness / trace-concretize /
+trace-lru-array / trace-mutable-default).
+
+Scope: the engine's jitted entry points and the Pallas kernel bodies.
+"Traced parameter" means a parameter of a jitted function that is NOT
+named in ``static_argnames`` (we read it straight out of the
+``functools.partial(jax.jit, static_argnames=...)`` decorator), or any
+parameter of a kernel body other than scratch/ref conventions — at trace
+time those are abstract values, and Python-level control flow on them
+either retraces per value or crashes outright.
+
+What is deliberately NOT flagged:
+
+- ``if x is None`` / ``is not None``: identity checks against None are
+  resolved at trace time and are the repo's idiom for optional operands
+  (``run_conv2d``'s bias).
+- truthiness on *static* parameters (named in static_argnames) — that's
+  exactly what statics are for.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set
+
+from tools.analysis.core import Finding, SourceFile, attr_chain, terminal_name
+
+#: annotation substrings that mark a parameter as an array.
+ARRAYISH = ("Array", "ndarray")
+
+CONCRETIZERS = {"int", "float", "bool"}
+
+
+def _decorator_chains(fn: ast.AST) -> List[ast.AST]:
+    return list(getattr(fn, "decorator_list", []))
+
+
+def _jit_static_argnames(dec: ast.AST) -> Optional[Set[str]]:
+    """If ``dec`` is a jit decorator, return its static_argnames (possibly
+    empty); else None."""
+    chain = attr_chain(dec)
+    if chain in ("jax.jit", "jit"):
+        return set()
+    if not isinstance(dec, ast.Call):
+        return None
+    head = attr_chain(dec.func)
+    statics: Set[str] = set()
+    target = None
+    if head in ("jax.jit", "jit"):
+        target = dec
+    elif head in ("functools.partial", "partial") and dec.args:
+        inner = attr_chain(dec.args[0])
+        if inner in ("jax.jit", "jit"):
+            target = dec
+    if target is None:
+        return None
+    for kw in target.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            statics |= _const_strings(kw.value)
+    return statics
+
+
+def _const_strings(node: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        out.add(node.value)
+    elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for el in node.elts:
+            out |= _const_strings(el)
+    return out
+
+
+def _is_lru_decorator(dec: ast.AST) -> bool:
+    chain = attr_chain(dec)
+    if chain in ("functools.lru_cache", "lru_cache", "functools.cache", "cache"):
+        return True
+    if isinstance(dec, ast.Call):
+        return attr_chain(dec.func) in (
+            "functools.lru_cache",
+            "lru_cache",
+            "functools.cache",
+            "cache",
+        )
+    return False
+
+
+def _params(fn) -> List[ast.arg]:
+    a = fn.args
+    return list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+
+
+def kernel_functions(sf: SourceFile) -> Dict[str, ast.FunctionDef]:
+    """Functions handed to ``pl.pallas_call`` as the kernel, plus their
+    same-file transitive callees — everything that runs inside a trace."""
+    defs = {
+        n.name: n
+        for n in ast.walk(sf.tree)
+        if isinstance(n, ast.FunctionDef)
+    }
+    roots: List[str] = []
+    for node in ast.walk(sf.tree):
+        if not (
+            isinstance(node, ast.Call)
+            and terminal_name(node.func) == "pallas_call"
+            and node.args
+        ):
+            continue
+        k = node.args[0]
+        if isinstance(k, ast.Call) and terminal_name(k.func) == "partial":
+            k = k.args[0] if k.args else k
+        name = k.id if isinstance(k, ast.Name) else None
+        if name and name in defs:
+            roots.append(name)
+    # BFS into same-file callees (e.g. requant helpers called from the body).
+    out: Dict[str, ast.FunctionDef] = {}
+    queue = list(roots)
+    while queue:
+        name = queue.pop()
+        if name in out or name not in defs:
+            continue
+        out[name] = defs[name]
+        for sub in ast.walk(defs[name]):
+            if isinstance(sub, ast.Call):
+                callee = terminal_name(sub.func)
+                if callee in defs and callee not in out:
+                    queue.append(callee)
+    return out
+
+
+def _bare_param(node: ast.AST, traced: Set[str]) -> Optional[str]:
+    if isinstance(node, ast.Name) and node.id in traced:
+        return node.id
+    return None
+
+
+def _check_traced_body(
+    sf: SourceFile,
+    fn: ast.FunctionDef,
+    traced: Set[str],
+    kind: str,
+    findings: List[Finding],
+) -> None:
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.If, ast.While)):
+            test = node.test
+            name = _bare_param(test, traced)
+            if name is None and isinstance(test, ast.UnaryOp) and isinstance(
+                test.op, ast.Not
+            ):
+                name = _bare_param(test.operand, traced)
+            if name is not None:
+                findings.append(
+                    sf.finding(
+                        "trace-truthiness",
+                        node,
+                        f"{fn.name}: Python truthiness on traced "
+                        f"parameter {name!r} inside a {kind} body — use "
+                        f"jnp.where / static args instead",
+                    )
+                )
+        elif isinstance(node, ast.Call):
+            tname = terminal_name(node.func)
+            if tname in CONCRETIZERS and len(node.args) == 1:
+                name = _bare_param(node.args[0], traced)
+                if name is not None:
+                    findings.append(
+                        sf.finding(
+                            "trace-concretize",
+                            node,
+                            f"{fn.name}: {tname}() concretizes traced "
+                            f"parameter {name!r} inside a {kind} body",
+                        )
+                    )
+            elif (
+                tname == "item"
+                and isinstance(node.func, ast.Attribute)
+                and _bare_param(node.func.value, traced) is not None
+            ):
+                findings.append(
+                    sf.finding(
+                        "trace-concretize",
+                        node,
+                        f"{fn.name}: .item() concretizes traced parameter "
+                        f"{node.func.value.id!r} inside a {kind} body",
+                    )
+                )
+
+
+def _mutable_default(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return True
+    if isinstance(node, ast.Call) and terminal_name(node.func) in (
+        "list",
+        "dict",
+        "set",
+        "bytearray",
+    ):
+        return True
+    return False
+
+
+def check(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    kernels = kernel_functions(sf)
+
+    for fn in ast.walk(sf.tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        statics: Optional[Set[str]] = None
+        is_jitted = False
+        for dec in _decorator_chains(fn):
+            s = _jit_static_argnames(dec)
+            if s is not None:
+                statics = s
+                is_jitted = True
+            if _is_lru_decorator(dec):
+                for p in _params(fn):
+                    ann = ast.unparse(p.annotation) if p.annotation else ""
+                    if any(tag in ann for tag in ARRAYISH):
+                        findings.append(
+                            sf.finding(
+                                "trace-lru-array",
+                                fn,
+                                f"{fn.name}: functools.lru_cache on a "
+                                f"function taking array parameter "
+                                f"{p.arg!r} ({ann}) — cache keys on array "
+                                f"identity and never evicts",
+                            )
+                        )
+        if is_jitted:
+            traced = {p.arg for p in _params(fn)} - (statics or set())
+            _check_traced_body(sf, fn, traced, "jitted", findings)
+            defaults = fn.args.defaults + [
+                d for d in fn.args.kw_defaults if d is not None
+            ]
+            for d in defaults:
+                if _mutable_default(d):
+                    findings.append(
+                        sf.finding(
+                            "trace-mutable-default",
+                            d,
+                            f"{fn.name}: mutable default argument on a "
+                            f"jitted function — unhashable as a static, "
+                            f"shared across traces",
+                        )
+                    )
+        if fn.name in kernels:
+            # Every non-ref parameter of a kernel body is traced; _ref /
+            # _scratch suffixed names follow the repo convention for
+            # memory references (indexable, but still not Python values).
+            traced = {p.arg for p in _params(fn)}
+            _check_traced_body(sf, fn, traced, "kernel", findings)
+    return findings

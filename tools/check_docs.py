@@ -1,19 +1,13 @@
-"""Docs consistency gate (CI ``docs`` lane).
+"""Docs consistency gate — thin shim over trimcheck's docs rules.
 
-Three checks, all rooted at the repo top:
+The static checks (markdown links, `DESIGN.md §N` citations) live in
+``tools.analysis.docs`` and run via ``python -m tools.analysis`` and the
+tier-1 suite; this CLI keeps the historical entry point and adds the one
+check that needs a subprocess and jax:
 
-1. **Markdown links.**  Every relative ``[text](target)`` in the tracked
-   markdown set (README.md, DESIGN.md, ROADMAP.md, benchmarks/README.md)
-   must point at a file or directory that exists (anchors are stripped;
-   absolute URLs are ignored).
-2. **Section references.**  Every ``DESIGN.md §N[.M]`` citation — in the
-   markdown set AND in the source tree's docstrings/comments — must name
-   a section heading that actually exists in DESIGN.md (``## §N ...`` /
-   ``### §N.M ...``).  This is what keeps code like ``run_conv2d``'s
-   "DESIGN.md §9.3" pointers honest as sections move.
-3. **The quickstart executes** (skippable via ``--skip-examples``):
-   ``examples/quickstart.py`` runs to completion on CPU with
-   ``PYTHONPATH=src`` — the README's first command must never rot.
+**The quickstart executes** (skippable via ``--skip-examples``):
+``examples/quickstart.py`` runs to completion on CPU with
+``PYTHONPATH=src`` — the README's first command must never rot.
 
 Exit codes: 0 ok, 1 any check failed.
 """
@@ -22,99 +16,61 @@ from __future__ import annotations
 
 import argparse
 import os
-import re
 import subprocess
 import sys
 from typing import List
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
 
-MARKDOWN_FILES = ["README.md", "DESIGN.md", "ROADMAP.md",
-                  "benchmarks/README.md"]
+from tools.analysis import docs as _docs  # noqa: E402
 
-#: ``[text](target)`` — good enough for our docs; skips images/autolinks.
-LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
-#: A section citation: "DESIGN.md §9.3", "DESIGN.md §4", "(§7)", "§9.2's".
-SECTION_REF_RE = re.compile(r"DESIGN\.md[^§\n]{0,20}§(\d+(?:\.\d+)?)")
-HEADING_RE = re.compile(r"^#{2,3}\s+§(\d+(?:\.\d+)?)\b", re.M)
-#: Source globs scanned for DESIGN.md citations.
-SOURCE_DIRS = ["src", "tests", "benchmarks", "examples", "tools"]
-
-
-def check_links(errors: List[str]) -> None:
-    for md in MARKDOWN_FILES:
-        path = os.path.join(REPO, md)
-        if not os.path.exists(path):
-            errors.append(f"{md}: tracked markdown file missing")
-            continue
-        text = open(path, encoding="utf-8").read()
-        for target in LINK_RE.findall(text):
-            if "://" in target or target.startswith(("mailto:", "#")):
-                continue
-            rel = target.split("#")[0]
-            if not rel:
-                continue
-            resolved = os.path.normpath(
-                os.path.join(REPO, os.path.dirname(md), rel))
-            if not os.path.exists(resolved):
-                errors.append(f"{md}: broken link -> {target}")
+MARKDOWN_FILES = _docs.MARKDOWN_FILES
+LINK_RE = _docs.LINK_RE
+SECTION_REF_RE = _docs.SECTION_REF_RE
+HEADING_RE = _docs.HEADING_RE
+SOURCE_DIRS = _docs.SOURCE_DIRS
 
 
 def design_sections() -> set:
-    text = open(os.path.join(REPO, "DESIGN.md"), encoding="utf-8").read()
-    return set(HEADING_RE.findall(text))
+    return _docs.design_sections(REPO)
 
 
-def iter_source_files():
-    for d in SOURCE_DIRS:
-        for root, _dirs, files in os.walk(os.path.join(REPO, d)):
-            for f in files:
-                if f.endswith((".py", ".md", ".yml")):
-                    yield os.path.join(root, f)
+def check_links(errors: List[str]) -> None:
+    for f in _docs.check_links(REPO):
+        errors.append(f"{f.path}: {f.message}")
 
 
 def check_section_refs(errors: List[str]) -> None:
-    sections = design_sections()
-    if not sections:
-        errors.append("DESIGN.md: no §-numbered headings found")
-        return
-    targets = [os.path.join(REPO, m) for m in MARKDOWN_FILES]
-    targets += list(iter_source_files())
-    for path in targets:
-        if not os.path.exists(path):
-            continue
-        text = open(path, encoding="utf-8", errors="replace").read()
-        for ref in SECTION_REF_RE.findall(text):
-            top = ref.split(".")[0]
-            if ref not in sections and top not in sections:
-                rel = os.path.relpath(path, REPO)
-                errors.append(
-                    f"{rel}: cites DESIGN.md §{ref} but DESIGN.md has no "
-                    f"such heading")
-            elif ref not in sections and "." in ref:
-                rel = os.path.relpath(path, REPO)
-                errors.append(
-                    f"{rel}: cites DESIGN.md §{ref}; §{top} exists but the "
-                    f"subsection heading does not")
+    for f in _docs.check_section_refs(REPO):
+        errors.append(f"{f.path}: {f.message}")
 
 
 def check_quickstart(errors: List[str]) -> None:
-    env = dict(os.environ,
-               PYTHONPATH=os.path.join(REPO, "src"),
-               JAX_PLATFORMS="cpu")
+    env = dict(
+        os.environ, PYTHONPATH=os.path.join(REPO, "src"), JAX_PLATFORMS="cpu"
+    )
     proc = subprocess.run(
         [sys.executable, os.path.join(REPO, "examples", "quickstart.py")],
-        env=env, cwd=REPO, capture_output=True, text=True, timeout=600)
+        env=env,
+        cwd=REPO,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
     if proc.returncode != 0:
         tail = "\n".join((proc.stdout + proc.stderr).splitlines()[-15:])
-        errors.append(
-            f"examples/quickstart.py exited {proc.returncode}:\n{tail}")
+        errors.append(f"examples/quickstart.py exited {proc.returncode}:\n{tail}")
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--skip-examples", action="store_true",
-                    help="only run the static link/§-reference checks")
+    ap.add_argument(
+        "--skip-examples",
+        action="store_true",
+        help="only run the static link/§-reference checks",
+    )
     args = ap.parse_args(argv)
 
     errors: List[str] = []
@@ -127,9 +83,11 @@ def main(argv=None) -> int:
         print(f"[check_docs] FAIL: {e}", file=sys.stderr)
     if not errors:
         n = len(MARKDOWN_FILES)
-        print(f"[check_docs] OK: links + §-references across {n} markdown "
-              f"files and the source tree"
-              + ("" if args.skip_examples else "; quickstart ran clean"))
+        print(
+            f"[check_docs] OK: links + §-references across {n} markdown "
+            f"files and the source tree (via tools.analysis)"
+            + ("" if args.skip_examples else "; quickstart ran clean")
+        )
     return 1 if errors else 0
 
 
