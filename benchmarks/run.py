@@ -453,7 +453,8 @@ def _serve_round(engine, serve_config, items, producers):
     finally:
         srv.close()
     tot = metrics.snapshot()["totals"]
-    if tot["images"] + tot["shed"] + tot["expired"] != tot["submitted"]:
+    if (tot["images"] + tot["shed"] + tot["expired"]
+            + tot.get("failed", 0)) != tot["submitted"]:
         raise RuntimeError(f"serve bench conservation violated: {tot}")
     return metrics
 
@@ -479,8 +480,13 @@ def bench_serve() -> None:
     inline open loop — in adjacent rounds, and gate the drift-robust
     median per-round wall ratio (``repro.engine.autotune.aggregate_pair``)
     as ``concurrent_speedup`` (compare.py --floor: threaded admission must
-    not lose throughput at equal offered load).  A shed-policy record
-    exercises the bounded queue (``shed_rate``).  Knobs:
+    not lose throughput at equal offered load).  The
+    ``serve_fault_overhead`` record replays the same load through a
+    Server whose ``FaultPlan`` is armed but carries zero budgets vs the
+    plain path and gates the ratio as ``fault_overhead_speedup`` —
+    zero-cost-off (DESIGN.md §11.6) as a floor, not prose.  A
+    shed-policy record exercises the bounded queue (``shed_rate``).
+    Knobs:
     REPRO_SERVE_BENCH_REPS (default 15), REPRO_SERVE_CONC_REQUESTS (64),
     REPRO_SERVE_CONC_ROUNDS (5).  Writes BENCH_serve.json under the
     schema_version-2 header (``repro.serve.stamp_payload``).
@@ -594,6 +600,43 @@ def bench_serve() -> None:
             "concurrent_speedup": round(speedup, 3),
             **stamp,
         })
+
+    # -- fault-plane overhead: armed-but-empty plan vs plain (§11.6) --
+    # zero-cost-off is a gated invariant, not prose: a Server whose
+    # FaultPlan is armed but carries zero budgets (the injector branches
+    # + success bookkeeping, no faults) must not cost throughput vs the
+    # plain path.  fault_overhead_speedup = plain wall / armed wall
+    # (compare.py --floor: ~1.0 honest expectation, fires on collapse).
+    from repro.serve import FaultPlan
+
+    cfg, engine = engines[("vgg16", "float")]
+    plain_config = ServeConfig(buckets=buckets)
+    armed_config = ServeConfig(buckets=buckets,
+                               faults=FaultPlan(seed=0))
+    items = _serve_load_items(cfg, conc_requests, "float32")
+    _serve_round(engine, armed_config, items, producers)  # warm
+    walls_armed, walls_plain = [], []
+    for _ in range(conc_rounds):
+        walls_armed.append(
+            _serve_round(engine, armed_config, items, producers).wall_s)
+        walls_plain.append(
+            _serve_round(engine, plain_config, items, producers).wall_s)
+    wall_armed, wall_plain, overhead = aggregate_pair(
+        walls_armed, walls_plain)
+    name = "serve_fault_overhead_vgg16_float"
+    img_per_s = conc_requests / wall_armed if wall_armed else 0.0
+    print(f"serve,{name},{producers},{img_per_s:.1f},,,{overhead:.3f}")
+    records.append({
+        "name": name, "arch": cfg.name, "datapath": "float",
+        "producers": producers, "requests": conc_requests,
+        "rounds": conc_rounds,
+        "armed_images_per_s": round(
+            conc_requests / wall_armed, 1) if wall_armed else 0.0,
+        "plain_images_per_s": round(
+            conc_requests / wall_plain, 1) if wall_plain else 0.0,
+        "fault_overhead_speedup": round(overhead, 3),
+        **stamp,
+    })
 
     # shed policy under the same load: the bounded queue must reject,
     # not wedge — shed_rate documents how much this load overdrives a

@@ -223,3 +223,17 @@ def unpack_int5(packed: np.ndarray, count: int) -> np.ndarray:
 def packed_nbytes(n_weights: int) -> int:
     """Storage for ``n_weights`` packed int5 codes, in bytes."""
     return (n_weights * MSR_STORAGE_BITS + 7) // 8
+
+
+def wire_checksum(packed: np.ndarray) -> int:
+    """CRC-32 over a packed int5 byte stream (`pack_int5` output).
+
+    The integrity word a deployment stores next to each layer's BRAM
+    weight image: a soft-error bit-flip anywhere in the packed payload
+    changes the checksum, so a consumer that verifies before decoding
+    (``serve.faults.PackedWire``) can never materialize flipped weights.
+    """
+    import zlib
+
+    return zlib.crc32(np.ascontiguousarray(
+        np.asarray(packed, np.uint8)).tobytes()) & 0xFFFFFFFF

@@ -453,6 +453,15 @@ def calibrate_requant_int5(
 #: once across a whole request stream.
 EXECUTABLE_COMPILES: Dict[Tuple[ModelPlan, int, str], int] = {}
 
+#: Fault-injection seam for the serving chaos plane (DESIGN.md §11):
+#: when set, called as ``hook(plan, batch, datapath)`` at the top of
+#: :func:`executable_for` *before* any work — raising there simulates a
+#: rejected/failed AOT compile.  ``lru_cache`` never caches a call that
+#: raised, so a bounded retry after a transient fault recompiles cleanly.
+#: Installed/cleared by ``ServeEngine.warmup`` only; always ``None`` in
+#: production.
+COMPILE_FAULT_HOOK = None
+
 
 def _donate_images_argnums() -> tuple:
     """Donation spec for the serving executables' image argument.
@@ -495,6 +504,8 @@ def executable_for(plan: ModelPlan, batch: int, datapath: str = "float"):
 
     Cached per (plan, batch, datapath); equal plans share executables.
     """
+    if COMPILE_FAULT_HOOK is not None:
+        COMPILE_FAULT_HOOK(plan, batch, datapath)
     if datapath not in ("float", "int8", "int5"):
         raise ValueError(
             f"datapath {datapath!r} not in ('float', 'int8', 'int5')")

@@ -153,6 +153,16 @@ def serving_parent(
     p.add_argument("--producers", type=int, default=0,
                    help="producer threads submitting concurrently "
                         "(0 = single-threaded inline open loop)")
+    p.add_argument("--faults", default=None, metavar="SPEC",
+                   help="arm the seeded fault-injection plane "
+                        "(DESIGN.md §11): comma-separated budgets, e.g. "
+                        "'seed=7,stage=2,worker=1,bitflip=1,exec=2,"
+                        "nonfinite=1,latency=1,latency-ms=50'; omitted = "
+                        "the plane is compiled out (zero cost)")
+    p.add_argument("--breaker-threshold", type=int, default=None,
+                   help="consecutive batch failures per (arch, lane, "
+                        "bucket) before the circuit breaker trips and "
+                        "serving degrades to the next lane")
     return p
 
 

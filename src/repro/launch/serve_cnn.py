@@ -23,11 +23,19 @@ winners; ``--int8`` serves the fused integer datapath off calibrated
 per-channel requant pairs (the only batch-shape-independent int8 lane);
 ``--int5`` serves the same fused datapath off MSR-compressed 5-bit-stored
 weights (DESIGN.md §9.3).  ``--check`` (the CI
-serve-smoke / serve-stress gate) exits non-zero unless request
-conservation holds (served + shed + expired == submitted, no request
-left pending), metrics are non-empty, no executable compiled more than
-once — and, in the deterministic inline mode, every bucket flushed at
-least once.
+serve-smoke / serve-stress / chaos-smoke gate) exits non-zero unless
+extended request conservation holds (served + shed + expired + failed ==
+submitted, no request left pending), metrics are non-empty, no
+executable compiled more than once — and, in the deterministic inline
+mode, every bucket flushed at least once; on failure it also dumps the
+admission ledger (every request's terminal state + the fault ledger) as
+JSON to stderr.
+
+``--faults SPEC`` arms the seeded fault-injection plane (DESIGN.md §11)
+and the degradation ladder behind it: injected stage/compile/executable
+faults, worker crashes, int5 wire bit-flips, NaN batches, and latency
+spikes, recovered by bounded retries, the watchdog, checksummed-weight
+restore, and the circuit breaker's lane degradation.
 """
 
 import argparse
@@ -41,7 +49,7 @@ from repro.data.pipeline import SyntheticRequestStream
 from repro.engine import plan_model
 from repro.launch.cli import (execution_parent, policy_from_args,
                               serve_config_from_args, serving_parent)
-from repro.serve import Server
+from repro.serve import Lane, PackedWire, Server
 
 
 def make_stream(cfg, args, buckets):
@@ -70,28 +78,51 @@ def build_server(cfg, policy, serve_config, *, seed=0, calib_batch=8):
     The integer datapaths quantize the freshly-initialized float params
     (int8: symmetric per-tensor weights; int5: the MSR-compressed lane,
     DESIGN.md §9.3) and calibrate per-channel requant pairs on a sample
-    burst — both requirements of bit-faithful padded-bucket serving."""
+    burst — both requirements of bit-faithful padded-bucket serving.
+
+    With ``--faults`` armed the server also carries its degradation
+    ladder (DESIGN.md §11.3): int5 serves off the checksummed
+    ``PackedWire`` payload with an int8 fallback lane (calibrated off the
+    same float master, so degraded outputs are a native int8 server's);
+    int8/float get a substrate sibling (f32exact / oracle — bit-identical
+    numerics, throughput-only sacrifice)."""
     plan = plan_model(cfg, policy)
     params = plan.init(jax.random.PRNGKey(seed))
+    armed = serve_config.faults is not None
     if serve_config.datapath == "float":
-        return Server.from_plan(plan, params, serve_config)
+        fallbacks = [Lane("float-oracle", "float", params,
+                          substrate="oracle")] if armed else None
+        return Server.from_plan(plan, params, serve_config,
+                                fallbacks=fallbacks)
     sample = SyntheticRequestStream(
         hw=cfg.input_hw, channels=cfg.layers[0].M, n_classes=cfg.n_classes,
         seed=seed, dtype="uint8").sample_batch(calib_batch)
     if serve_config.datapath == "int5":
         qparams, _ = plan.quantize_int5(params)
         requant = plan.calibrate_requant_int5(qparams, sample)
-    else:
-        qparams, _ = plan.quantize(params)
-        requant = plan.calibrate_requant(qparams, sample)
-    return Server.from_plan(plan, qparams, serve_config, requant=requant)
+        fallbacks = wire = None
+        if armed:
+            wire = PackedWire(cfg, params)
+            q8, _ = plan.quantize(params)
+            fallbacks = [Lane("int8", "int8", q8,
+                              plan.calibrate_requant(q8, sample))]
+        return Server.from_plan(plan, qparams, serve_config,
+                                requant=requant, fallbacks=fallbacks,
+                                wire=wire)
+    qparams, _ = plan.quantize(params)
+    requant = plan.calibrate_requant(qparams, sample)
+    fallbacks = [Lane("int8-f32exact", "int8", qparams, requant,
+                      substrate="f32exact")] if armed else None
+    return Server.from_plan(plan, qparams, serve_config, requant=requant,
+                            fallbacks=fallbacks)
 
 
 def check_run(server, metrics, n_requests, *, expect_all_buckets) -> list:
     """The --check assertions; returns a list of failure strings.
 
-    Conservation is the invariant that must hold in every mode: every
-    submitted request ends in exactly one terminal state.  Per-bucket
+    Extended conservation (DESIGN.md §11.4) is the invariant that must
+    hold in every mode, fault plane armed or not: every submitted
+    request ends in exactly one terminal state.  Per-bucket
     flush coverage is only deterministic in the inline open loop (the
     bursts stream is sized to the buckets); under ``--producers N`` the
     interleaving decides bucket fills, so that check is skipped.
@@ -100,11 +131,14 @@ def check_run(server, metrics, n_requests, *, expect_all_buckets) -> list:
     tot = metrics.snapshot()["totals"]
     if tot["submitted"] != n_requests:
         fails.append(f"submitted {tot['submitted']} != offered {n_requests}")
-    if tot["images"] + tot["shed"] + tot["expired"] != tot["submitted"]:
+    failed = tot.get("failed", 0)
+    if tot["images"] + tot["shed"] + tot["expired"] + failed \
+            != tot["submitted"]:
         fails.append(
-            "conservation violated: served %d + shed %d + expired %d != "
-            "submitted %d" % (tot["images"], tot["shed"], tot["expired"],
-                              tot["submitted"]))
+            "conservation violated: served %d + shed %d + expired %d + "
+            "failed %d != submitted %d"
+            % (tot["images"], tot["shed"], tot["expired"], failed,
+               tot["submitted"]))
     statuses = [r.status for r in metrics.requests]
     if any(s == "pending" for s in statuses):
         fails.append(f"{statuses.count('pending')} requests left pending")
@@ -162,7 +196,7 @@ def main() -> None:
         server.close()
     snap = metrics.snapshot()
 
-    payload = metrics.write(args.out, extra={
+    extra = {
         "arch": cfg.name,
         "datapath": serve_config.datapath,
         "arrival": args.arrival,
@@ -173,7 +207,15 @@ def main() -> None:
         "overload": serve_config.overload,
         "plan": list(server.engine.plan.describe()),
         "executables": dict(server.engine.compile_counts),
-    })
+    }
+    injector = server.engine.injector
+    if injector is not None:
+        # stamp the chaos schedule + what actually fired, so a degraded
+        # run is visible in its artifact (DESIGN.md §11.3)
+        extra["faults"] = injector.plan.describe()
+        extra["fault_ledger"] = dict(injector.fired)
+        extra["lanes"] = [ln.name for ln in server.engine.lanes]
+    payload = metrics.write(args.out, extra=extra)
 
     tot = snap["totals"]
     mode = (f"{args.producers} producers" if args.producers
@@ -197,6 +239,22 @@ def main() -> None:
         if fails:
             for f in fails:
                 print(f"[serve_cnn] CHECK FAILED: {f}", file=sys.stderr)
+            # the admission ledger: every request's terminal state (plus
+            # what the fault plane fired), so a CI failure is debuggable
+            # from the log alone
+            ledger = {
+                "fails": fails,
+                "totals": tot,
+                "requests": [
+                    dict({"rid": r.rid, "status": r.status},
+                         **({"error": r.error} if r.error else {}))
+                    for r in sorted(metrics.requests, key=lambda r: r.rid)
+                ],
+            }
+            if injector is not None:
+                ledger["fault_ledger"] = dict(injector.fired)
+            json.dump(ledger, sys.stderr, indent=1)
+            print(file=sys.stderr)
             sys.exit(1)
         print("[serve_cnn] check OK: request conservation holds, every "
               "executable compiled exactly once"

@@ -12,6 +12,12 @@ p50/p99, queue depth, pad waste, and the admission counters
 (submitted/shed/expired/overlapped).  Both launchers —
 ``repro.launch.serve_cnn`` and ``repro.launch.serve`` — run on this.
 
+The fault-injection plane + self-healing machinery (DESIGN.md §11)
+lives in ``repro.serve.faults``: a seeded frozen ``FaultPlan`` (armed
+via ``ServeConfig.faults``), the degradation ``Lane`` ladder with its
+``CircuitBreaker``, the bounded-backoff ``RetryPolicy``, and the
+checksummed ``PackedWire`` int5 payload.
+
 ``serve_stream`` and ``ServeEngine.for_model_plan`` are deprecation
 shims over the ``Server`` facade.
 """
@@ -19,18 +25,32 @@ shims over the ``Server`` facade.
 from repro.serve.batching import BucketBatcher, Request, pad_batch
 from repro.serve.config import OVERLOAD_POLICIES, ServeConfig
 from repro.serve.engine import ServeEngine, serve_stream
+from repro.serve.faults import (CircuitBreaker, FaultInjector, FaultPlan,
+                                InjectedFault, Lane, NonFiniteOutput,
+                                PackedWire, RetryPolicy, TransientFault,
+                                WorkerCrash)
 from repro.serve.metrics import SCHEMA_VERSION, ServeMetrics, stamp_payload
 from repro.serve.server import Server
 
 __all__ = [
     "BucketBatcher",
+    "CircuitBreaker",
+    "FaultInjector",
+    "FaultPlan",
+    "InjectedFault",
+    "Lane",
+    "NonFiniteOutput",
     "OVERLOAD_POLICIES",
+    "PackedWire",
     "Request",
+    "RetryPolicy",
     "SCHEMA_VERSION",
     "Server",
     "ServeConfig",
     "ServeEngine",
     "ServeMetrics",
+    "TransientFault",
+    "WorkerCrash",
     "pad_batch",
     "serve_stream",
     "stamp_payload",

@@ -29,11 +29,15 @@ import numpy as np
 class Request:
     """One queued inference request; the serve loop fills ``result``.
 
-    ``status`` walks pending -> served | shed | expired exactly once
-    (conservation: every submitted request ends in exactly one terminal
-    state); ``done`` is set at that transition, so producer threads can
-    wait on their own handles.  ``deadline_s`` is the absolute clock time
-    past which queued work is expired instead of served stale.
+    ``status`` walks pending -> served | shed | expired | failed exactly
+    once (extended conservation, DESIGN.md §11: every submitted request
+    ends in exactly one terminal state — served + shed + expired +
+    failed == submitted); ``done`` is set at that transition, so
+    producer threads can wait on their own handles.  ``deadline_s`` is
+    the absolute clock time past which queued work is expired instead
+    of served stale.  ``failed`` is the Server's recovery-exhausted
+    terminal state: ``error`` then carries the last failure's summary
+    (the request never receives a ``result``).
     """
 
     rid: int
@@ -42,6 +46,7 @@ class Request:
     result: Any = field(default=None, repr=False)
     deadline_s: Optional[float] = None
     status: str = "pending"
+    error: Optional[str] = None
     done: threading.Event = field(
         default_factory=threading.Event, repr=False, compare=False)
 

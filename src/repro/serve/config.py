@@ -21,6 +21,8 @@ import argparse
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
+from repro.serve.faults import FaultPlan
+
 #: Overload policies for a full admission queue (``queue_capacity``):
 #: - "block":   producers wait for queue space (backpressure; the inline
 #:   open loop relieves pressure by flushing, since the caller IS the
@@ -51,6 +53,15 @@ class ServeConfig:
     overload: str = "block"
     datapath: str = "float"
     request_timeout_ms: Optional[float] = field(default=None)
+    #: The seeded chaos schedule (DESIGN.md §11); ``None`` compiles the
+    #: fault plane out of the serve path entirely (zero cost when off).
+    faults: Optional[FaultPlan] = field(default=None)
+    #: Bounded-retry budget per batch / stage / compile attempt chain.
+    retry_attempts: int = 3
+    retry_backoff_ms: float = 10.0
+    #: Consecutive failures per (arch, lane, bucket) before the circuit
+    #: breaker trips and the engine degrades to the next lane.
+    breaker_threshold: int = 3
 
     def __post_init__(self):
         buckets = tuple(sorted(set(int(b) for b in self.buckets)))
@@ -71,6 +82,21 @@ class ServeConfig:
         if self.request_timeout_ms is not None and self.request_timeout_ms <= 0:
             raise ValueError(
                 f"request_timeout_ms must be > 0, got {self.request_timeout_ms!r}")
+        if self.faults is not None and not isinstance(self.faults, FaultPlan):
+            raise ValueError(
+                f"faults must be a FaultPlan or None, got {self.faults!r}")
+        if int(self.retry_attempts) < 1:
+            raise ValueError(
+                f"retry_attempts must be >= 1, got {self.retry_attempts!r}")
+        object.__setattr__(self, "retry_attempts", int(self.retry_attempts))
+        if float(self.retry_backoff_ms) < 0:
+            raise ValueError(
+                f"retry_backoff_ms must be >= 0, got {self.retry_backoff_ms!r}")
+        if int(self.breaker_threshold) < 1:
+            raise ValueError(
+                f"breaker_threshold must be >= 1, got {self.breaker_threshold!r}")
+        object.__setattr__(
+            self, "breaker_threshold", int(self.breaker_threshold))
 
     @property
     def max_delay_s(self) -> float:
@@ -101,5 +127,9 @@ class ServeConfig:
         )
         if getattr(args, "request_timeout_ms", None) is not None:
             kw["request_timeout_ms"] = float(args.request_timeout_ms)
+        if getattr(args, "faults", None):
+            kw["faults"] = FaultPlan.parse(args.faults)
+        if getattr(args, "breaker_threshold", None) is not None:
+            kw["breaker_threshold"] = int(args.breaker_threshold)
         kw.update(overrides)
         return cls(**kw)

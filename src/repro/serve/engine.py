@@ -20,15 +20,19 @@ drive the whole loop on a fake clock.
 
 from __future__ import annotations
 
+import dataclasses
 import re
 import time
 import warnings
-from typing import Any, Callable, Dict, Iterable, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
 from repro.serve.batching import BucketBatcher, pad_batch
 from repro.serve.config import ServeConfig
+from repro.serve.faults import (CircuitBreaker, FaultInjector, Lane,
+                                PackedWire, RetryPolicy, with_retries)
 from repro.serve.metrics import ServeMetrics
 
 
@@ -46,6 +50,21 @@ class ServeEngine:
         self._params = None
         self._datapath = "float"
         self._requant = None
+        # -- resilience plane (DESIGN.md §11); inert until installed ----
+        #: degradation order: lanes[0] is the primary datapath, later
+        #: entries are what the circuit breaker falls back to.
+        self.lanes: List[Lane] = []
+        self._active: Dict[int, int] = {}  # bucket -> active lane index
+        self.breaker = CircuitBreaker()
+        self.injector: Optional[FaultInjector] = None
+        self.wire: Optional[PackedWire] = None
+        self.retry = RetryPolicy()
+        self.on_retry: Optional[Callable[[], None]] = None
+        self._retry_sleep: Callable[[float], None] = time.sleep
+        #: degradation events, in order (stamped into serve JSON headers).
+        self.degradations: List[dict] = []
+        self._wire_params = None
+        self._wire_version = -1
 
     # -- the executable cache -------------------------------------------
 
@@ -106,6 +125,8 @@ class ServeEngine:
         datapath: str = "float",
         requant: Optional[Sequence[Tuple[Any, Any]]] = None,
         warm: bool = True,
+        fallbacks: Optional[Sequence[Lane]] = None,
+        wire: Optional[PackedWire] = None,
     ) -> "ServeEngine":
         """A serving engine for one :class:`~repro.engine.ModelPlan`.
 
@@ -119,6 +140,16 @@ class ServeEngine:
         outputs — exactly what serving must never do.  ``warm=True``
         compiles every bucket's executable up front (production default:
         all compilation happens before the first request).
+
+        ``fallbacks`` registers the graceful-degradation ladder
+        (DESIGN.md §11): extra :class:`~repro.serve.faults.Lane` entries,
+        in degradation order, that the circuit breaker advances through
+        after repeated executable failures or non-finite outputs.  Every
+        lane is warmed alongside the primary, so degradation at serve
+        time is a dictionary lookup, never a compile.  ``wire`` arms the
+        packed int5 integrity check: the primary lane's weights are
+        materialized from the checksummed 5-bit wire payload instead of
+        the passed params (verified on every re-read).
         """
         if datapath not in ("float", "int8", "int5"):
             raise ValueError(
@@ -134,6 +165,16 @@ class ServeEngine:
         eng._params = params
         eng._datapath = datapath
         eng._requant = None if requant is None else [tuple(p) for p in requant]
+        eng.lanes = [Lane(datapath, datapath, params, eng._requant)]
+        for lane in (fallbacks or ()):
+            if lane.name in {x.name for x in eng.lanes}:
+                raise ValueError(f"duplicate lane name {lane.name!r}")
+            eng.lanes.append(lane)
+        if wire is not None:
+            if datapath != "int5":
+                raise ValueError(
+                    "a PackedWire payload only backs the int5 datapath")
+            eng.wire = wire
         if warm:
             eng.warmup()
         return eng
@@ -154,17 +195,141 @@ class ServeEngine:
             p.cfg, p.policy, c_in=p.layers[0].c_in, batch=int(bucket)
         )
 
+    # -- lanes + the circuit breaker (DESIGN.md §11) --------------------
+
+    def _ensure_lanes(self) -> List[Lane]:
+        if not self.lanes and self._plan is not None:
+            self.lanes = [
+                Lane(self._datapath, self._datapath, self._params,
+                     self._requant)
+            ]
+        return self.lanes
+
+    def active_lane(self, bucket: int) -> int:
+        """Index of the lane currently serving ``bucket`` (0 = primary;
+        advanced only by circuit-breaker trips, never backwards)."""
+        return self._active.get(int(bucket), 0)
+
+    def lane_of(self, bucket: int) -> Lane:
+        return self._ensure_lanes()[self.active_lane(bucket)]
+
+    def _lane_plan(self, lane: Lane, bucket: int):
+        from repro.engine import plan_model
+
+        p = self._plan
+        policy = p.policy
+        if lane.substrate is not None:
+            policy = dataclasses.replace(policy, substrate=lane.substrate)
+        return plan_model(p.cfg, policy, c_in=p.layers[0].c_in,
+                          batch=int(bucket))
+
+    def _lane_exec(self, lane: Lane, bucket: int):
+        plan = self._lane_plan(lane, bucket)
+        key = self.executable_key(plan.cfg.name, lane.name, f"n{bucket}")
+
+        def build():
+            # bounded retry absorbs transiently rejected compiles (the
+            # injected COMPILE_FAULT_HOOK fires inside executable_for,
+            # which never caches an attempt that raised)
+            return with_retries(
+                lambda: plan.executable_for(int(bucket),
+                                            datapath=lane.datapath),
+                self.retry, sleep=self._retry_sleep, salt=key,
+                on_retry=self._count_retry)
+
+        return self.executable(key, build)
+
+    def _count_retry(self, attempt: int, err: Exception) -> None:
+        if self.on_retry is not None:
+            self.on_retry()
+
     def _bucket_exec(self, bucket: int):
-        plan = self.bucket_plan(bucket)
-        key = self.executable_key(plan.cfg.name, self._datapath, f"n{bucket}")
-        return self.executable(
-            key, lambda: plan.executable_for(int(bucket), datapath=self._datapath)
-        )
+        return self._lane_exec(self.lane_of(bucket), bucket)
+
+    def _lane_params(self, lane_idx: int, lane: Lane):
+        """The lane's runtime params; the primary int5 lane re-reads them
+        from the checksummed wire payload whenever its version moves (the
+        integrity gate a bit-flip cannot get past)."""
+        if lane_idx == 0 and self.wire is not None:
+            if self._wire_params is None \
+                    or self._wire_version != self.wire.version:
+                self._wire_params = self.wire.qparams()
+                self._wire_version = self.wire.version
+            return self._wire_params
+        return lane.params
+
+    def breaker_key(self, bucket: int) -> str:
+        """The circuit breaker's (arch, lane, bucket) coordinate."""
+        lane = self.lane_of(bucket)
+        arch = self._plan.cfg.name if self._plan is not None else self.name
+        return f"{arch} {lane.name} n{int(bucket)}"
+
+    def note_failure(self, bucket: int) -> Optional[dict]:
+        """Feed one batch failure (executable exception, non-finite
+        output, worker crash mid-batch) to the breaker.  On trip:
+        re-verify the wire payload (restoring from the fp32 master if it
+        was flipped) and degrade the bucket to the next lane.  Returns
+        the degradation event dict, or None when nothing degraded."""
+        bucket = int(bucket)
+        key = self.breaker_key(bucket)
+        if not self.breaker.failure(key):
+            return None
+        if self.wire is not None:
+            self.wire.verify_or_restore()
+        idx = self.active_lane(bucket)
+        lanes = self._ensure_lanes()
+        if idx + 1 >= len(lanes):
+            return None  # tripped, but no lane left to degrade to
+        self._active[bucket] = idx + 1
+        ev = {"key": key, "bucket": bucket,
+              "from": lanes[idx].name, "to": lanes[idx + 1].name}
+        self.degradations.append(ev)
+        return ev
+
+    def note_success(self, bucket: int) -> None:
+        self.breaker.success(self.breaker_key(int(bucket)))
+
+    def install_resilience(
+        self,
+        *,
+        injector: Optional[FaultInjector] = None,
+        retry: Optional[RetryPolicy] = None,
+        breaker_threshold: Optional[int] = None,
+        sleep: Optional[Callable[[float], None]] = None,
+        on_retry: Optional[Callable[[], None]] = None,
+    ) -> None:
+        """Arm the fault/recovery plane (called by ``Server.__init__``
+        from its ServeConfig).  Binds the injector to the wire payload so
+        planned bit-flips land on the live bytes, and routes retry
+        sleeps through the server's (possibly fake) clock."""
+        if injector is not None:
+            self.injector = injector
+            injector.wire = self.wire
+        if retry is not None:
+            self.retry = retry
+        if breaker_threshold is not None:
+            self.breaker.threshold = max(1, int(breaker_threshold))
+        if sleep is not None:
+            self._retry_sleep = sleep
+        if on_retry is not None:
+            self.on_retry = on_retry
 
     def warmup(self) -> None:
-        """Compile every bucket's executable (idempotent)."""
-        for b in self.buckets:
-            self._bucket_exec(b)
+        """Compile every lane x bucket executable (idempotent), under the
+        bounded-retry policy so a transiently rejected compile does not
+        abort warmup; verify the wire payload's checksums if armed."""
+        from repro.engine import execute
+
+        if self.injector is not None:
+            execute.COMPILE_FAULT_HOOK = self.injector.fire_compile
+        try:
+            for lane in self._ensure_lanes():
+                for b in self.buckets:
+                    self._lane_exec(lane, b)
+        finally:
+            execute.COMPILE_FAULT_HOOK = None
+        if self.wire is not None:
+            self.wire.verify_or_restore()
 
     def bucket_for(self, n: int) -> int:
         for b in self.buckets:
@@ -181,16 +346,23 @@ class ServeEngine:
         implement donation (``execute.executable_for``)."""
         import jax
 
+        if self.injector is not None:
+            self.injector.fire_stage()
         return jax.device_put(images)
 
     def run_bucket(self, bucket: int, images):
         """Run one already-padded (bucket, H, W, C) batch (host array or
-        a ``stage``-d device array); returns the raw device output
-        (async — caller materializes)."""
-        ex = self._bucket_exec(bucket)
-        if self._datapath == "float":
-            return ex(self._params, images)
-        return ex(self._params, images, self._requant)
+        a ``stage``-d device array) on the bucket's *active lane*;
+        returns the raw device output (async — caller materializes)."""
+        lane_idx = self.active_lane(bucket)
+        lane = self._ensure_lanes()[lane_idx]
+        if self.injector is not None:
+            self.injector.fire_exec(lane_idx)
+        ex = self._lane_exec(lane, bucket)
+        params = self._lane_params(lane_idx, lane)
+        if lane.datapath == "float":
+            return ex(params, images)
+        return ex(params, images, lane.requant)
 
     def infer(self, images: np.ndarray) -> np.ndarray:
         """Pad ``n <= max(buckets)`` images into their bucket, run, slice

@@ -85,6 +85,38 @@ class ServeMetrics:
         #: flushes whose host->device staging overlapped a prior
         #: in-flight bucket's compute (the double-buffering win).
         self.overlapped = 0
+        # Resilience counters (DESIGN.md §11).  Extended conservation:
+        # served + shed + expired + failed == submitted.  They surface in
+        # snapshot() only when nonzero, so fault-off snapshots stay
+        # byte-identical to the fault-plane-free schema.
+        self.failed = 0
+        self.retried = 0
+        self.degraded = 0
+        self.worker_restarts = 0
+        self.integrity_restored = 0
+        #: breaker key -> lane name it degraded to (insertion-ordered).
+        self.degraded_lanes: Dict[str, str] = {}
+
+    def record_failed(self, n: int = 1) -> None:
+        with self._lock:
+            self.failed += int(n)
+
+    def record_retried(self, n: int = 1) -> None:
+        with self._lock:
+            self.retried += int(n)
+
+    def record_degraded(self, key: str, to_lane: str) -> None:
+        with self._lock:
+            self.degraded += 1
+            self.degraded_lanes[str(key)] = str(to_lane)
+
+    def record_worker_restart(self) -> None:
+        with self._lock:
+            self.worker_restarts += 1
+
+    def record_integrity_restored(self, n: int = 1) -> None:
+        with self._lock:
+            self.integrity_restored += int(n)
 
     def record_submit(self) -> None:
         with self._lock:
@@ -170,11 +202,23 @@ class ServeMetrics:
             "expired": self.expired,
             "overlapped": self.overlapped,
         }
+        # Fault-plane ledger: keyed in only when engaged, so a fault-free
+        # run's snapshot is byte-identical to the pre-§11 schema.
+        for k in ("failed", "retried", "degraded", "worker_restarts",
+                  "integrity_restored"):
+            v = getattr(self, k)
+            if v:
+                totals[k] = v
+        out_extra = {}
+        if self.degraded_lanes:
+            out_extra["degraded_lanes"] = dict(self.degraded_lanes)
         if self.wall_s:
             totals["wall_s"] = round(self.wall_s, 4)
             totals["images_per_s"] = round(self.total_images / self.wall_s, 1)
-        return {"buckets": list(self.buckets), "per_bucket": per_bucket,
-                "totals": totals}
+        out = {"buckets": list(self.buckets), "per_bucket": per_bucket,
+               "totals": totals}
+        out.update(out_extra)
+        return out
 
     def write(self, path: str, extra: Optional[dict] = None) -> dict:
         """Write ``snapshot()`` (plus ``extra`` stamp fields) as JSON,

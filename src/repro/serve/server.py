@@ -25,6 +25,20 @@ the arrival-timed stream across that many real producer threads and
 serves it through the worker.  Construct via ``Server.from_plan(plan,
 params, ServeConfig(...))`` — the serving-side mirror of
 ``ExecutionPolicy -> plan_model`` (§3).
+
+Self-healing (DESIGN.md §11): when ``ServeConfig.faults`` arms the
+fault plane — or the engine carries fallback lanes — the flush path is
+resilient: staging retries transient faults under bounded backoff, a
+batch whose executable raises or whose output is non-finite is re-run
+(each attempt re-consulting the bucket's active lane, so a circuit-
+breaker trip lands the retry on the degraded lane), and a batch that
+exhausts its budget reaches the terminal ``failed`` status instead of
+orphaning its requests.  A watchdog (checked from ``submit`` and
+``drain``) detects a dead flush worker, fails its in-flight work, and
+restarts it so queued requests still drain.  Conservation extends to
+served + shed + expired + failed == submitted.  With ``faults=None``
+and a single lane, every one of these paths collapses to the PR-7
+happy path: metrics snapshots are byte-identical.
 """
 
 from __future__ import annotations
@@ -37,6 +51,8 @@ import numpy as np
 
 from repro.serve.batching import BucketBatcher, Request, pad_batch
 from repro.serve.config import ServeConfig
+from repro.serve.faults import (FaultInjector, NonFiniteOutput, RetryPolicy,
+                                WorkerCrash)
 from repro.serve.metrics import ServeMetrics
 
 
@@ -74,6 +90,35 @@ class Server:
         self._running = False
         self._draining = False
         self._closed = False
+        #: (bucket, reqs) batches the worker took from the batcher but
+        #: has not finished (cv-guarded): what a dead worker's watchdog
+        #: cleanup fails terminally instead of orphaning.
+        self._worker_work: List = []
+        # -- fault/recovery plane (DESIGN.md §11) -----------------------
+        self._injector: Optional[FaultInjector] = None
+        if config.faults is not None:
+            self._injector = FaultInjector(config.faults)
+        self._retry = RetryPolicy(
+            max_attempts=config.retry_attempts,
+            backoff_s=config.retry_backoff_ms / 1e3,
+            seed=config.faults.seed if config.faults is not None else 0)
+        if hasattr(engine, "install_resilience"):
+            engine.install_resilience(
+                retry=self._retry,
+                breaker_threshold=config.breaker_threshold,
+                sleep=sleep, on_retry=self.metrics.record_retried)
+            # assign (not install) the injector so a fault-free Server
+            # around a previously chaos-armed engine disarms it
+            engine.injector = self._injector
+            if self._injector is not None:
+                self._injector.wire = engine.wire
+            if engine.wire is not None:
+                engine.wire.on_restore = self.metrics.record_integrity_restored
+        #: resilience bookkeeping (breaker success resets) is active only
+        #: when something can actually fail or degrade — keeps the
+        #: fault-off flush path identical to the PR-7 facade.
+        self._resilient = (self._injector is not None
+                           or len(getattr(engine, "lanes", ()) or ()) > 1)
 
     @classmethod
     def from_plan(
@@ -86,18 +131,28 @@ class Server:
         warm: bool = True,
         clock: Callable[[], float] = time.monotonic,
         sleep: Callable[[float], None] = time.sleep,
+        fallbacks=None,
+        wire=None,
     ) -> "Server":
         """A server for one :class:`~repro.engine.ModelPlan`: builds the
         compile-once engine (one AOT executable per bucket, warmed before
         the first request) and wraps it in the facade.  The int8 datapath
         requires calibrated ``requant`` pairs, exactly as the engine
-        does."""
+        does.  ``fallbacks``/``wire`` pass through to
+        ``ServeEngine.build_for_plan`` (the degradation ladder and the
+        checksummed int5 payload, DESIGN.md §11); warmup runs *after*
+        the facade arms the fault plane, so injected compile faults and
+        the bounded-retry policy cover warmup too."""
         from repro.serve.engine import ServeEngine
 
         engine = ServeEngine.build_for_plan(
             plan, params, buckets=config.buckets,
-            datapath=config.datapath, requant=requant, warm=warm)
-        return cls(engine, config, clock=clock, sleep=sleep)
+            datapath=config.datapath, requant=requant, warm=False,
+            fallbacks=fallbacks, wire=wire)
+        srv = cls(engine, config, clock=clock, sleep=sleep)
+        if warm:
+            engine.warmup()
+        return srv
 
     # -- lifecycle ------------------------------------------------------
 
@@ -110,14 +165,32 @@ class Server:
                 return self
             self._running = True
             self._worker = threading.Thread(
-                target=self._worker_loop,
+                target=self._worker_run,
                 name=f"serve-flush-{self.engine.name}", daemon=True)
             self._worker.start()
         return self
 
+    def _watchdog(self) -> None:
+        """A flush worker that died while the server is running is
+        replaced (its un-finalized batches were already failed
+        terminally by ``_record_worker_death``), so queued requests
+        still drain after a crash.  Takes the cv itself — it is backed
+        by an RLock, so callers already holding it re-enter safely."""
+        with self._cv:
+            if (self._running and self._worker is not None
+                    and not self._worker.is_alive()):
+                self.metrics.record_worker_restart()
+                self._worker = threading.Thread(
+                    target=self._worker_run,
+                    name=f"serve-flush-{self.engine.name}", daemon=True)
+                self._worker.start()
+
     def drain(self, timeout_s: float = 60.0) -> None:
         """Block until every admitted request reached a terminal state
-        (served or expired) — queued work is force-flushed sub-bucket."""
+        (served, expired, or failed) — queued work is force-flushed
+        sub-bucket.  The wait loop doubles as the watchdog's second
+        checkpoint: a worker that dies mid-drain is restarted so the
+        remaining queue still ships."""
         with self._cv:
             worker = self._worker
             if worker is not None:
@@ -130,10 +203,12 @@ class Server:
         end = time.monotonic() + timeout_s
         try:
             for r in pending:
-                if not r.done.wait(max(end - time.monotonic(), 0.0)):
-                    raise TimeoutError(
-                        f"drain: request {r.rid} not completed within "
-                        f"{timeout_s}s (flush worker stuck?)")
+                while not r.done.wait(0.05):
+                    self._watchdog()
+                    if time.monotonic() > end:
+                        raise TimeoutError(
+                            f"drain: request {r.rid} not completed within "
+                            f"{timeout_s}s (flush worker stuck?)")
         finally:
             with self._cv:
                 self._draining = False
@@ -205,9 +280,11 @@ class Server:
         with self._cv:
             if self._closed:
                 raise RuntimeError("submit() on a closed Server")
+            self._watchdog()
             if cfg.queue_capacity and cfg.overload == "block":
                 while (self.batcher.depth >= cfg.queue_capacity
                        and self._running):
+                    self._watchdog()
                     self._cv.wait(0.05)
             r = self._admit(payload, now=now, deadline_s=deadline_s)
             self._cv.notify_all()
@@ -220,6 +297,42 @@ class Server:
         self.metrics.record_expired()
         r.done.set()
 
+    def _finish_failed(self, reqs: List[Request], err=None) -> None:
+        """Terminal ``failed``: the requests never get a result, but
+        they ARE accounted — the conservation invariant is
+        served + shed + expired + failed == submitted."""
+        msg = f"{type(err).__name__}: {err}" if err is not None else "failed"
+        for r in reqs:
+            r.status = "failed"
+            r.error = msg
+            r.done.set()
+        self.metrics.record_failed(len(reqs))
+        self._done_with(reqs)
+
+    def _done_with(self, reqs: List[Request]) -> None:
+        """Drop a now-terminal batch from the worker's in-progress
+        registry (no-op in inline mode, where nothing registers)."""
+        with self._cv:
+            if self._worker_work:
+                self._worker_work[:] = [
+                    w for w in self._worker_work if w[1] is not reqs]
+
+    def _stage_retry(self, images):
+        """``engine.stage`` under the bounded-retry policy: a transient
+        staging fault (allocator race, injected TransientFault) is
+        absorbed by backoff; the final attempt's error propagates to the
+        batch-level recovery driver."""
+        attempts = self.config.retry_attempts
+        for attempt in range(attempts):
+            try:
+                return self.engine.stage(images)
+            except Exception as err:
+                if attempt == attempts - 1:
+                    raise
+                self.metrics.record_retried()
+                self._sleep(self._retry.delay(attempt, salt="stage"))
+        raise AssertionError("unreachable")  # pragma: no cover
+
     def _dispatch(self, bucket: int, reqs: List[Request]):
         """Stage one batch (pad + device_put) and launch its compute
         asynchronously.  Called back-to-back with a prior in-flight
@@ -227,16 +340,28 @@ class Server:
         double-buffering."""
         t0 = self._clock()
         depth = self.batcher.depth
-        staged = self.engine.stage(
+        if self._injector is not None:
+            self._injector.maybe_flip()
+            spike = self._injector.latency_s()
+            if spike > 0.0:
+                self._sleep(spike)
+        staged = self._stage_retry(
             pad_batch([r.payload for r in reqs], bucket))
         out = self.engine.run_bucket(bucket, staged)
         return (bucket, reqs, out, t0, depth)
 
     def _finalize(self, dispatched) -> None:
         """Result hand-off: the ONLY place the flush path blocks on
-        device work (np.asarray == block_until_ready)."""
+        device work (np.asarray == block_until_ready).  A float batch
+        with NaN/Inf is never delivered as valid — it raises
+        :class:`NonFiniteOutput` into the recovery driver instead."""
         bucket, reqs, out, t0, depth = dispatched
         arr = np.asarray(out)
+        if self._injector is not None:
+            arr = self._injector.corrupt(arr)
+        if arr.dtype.kind == "f" and not np.isfinite(arr).all():
+            raise NonFiniteOutput(
+                f"bucket {bucket}: non-finite values in served batch")
         t1 = self._clock()
         for i, r in enumerate(reqs):
             r.result = arr[i]
@@ -246,6 +371,72 @@ class Server:
             bucket, len(reqs), batch_s=t1 - t0,
             latencies_s=[t1 - r.t_submit for r in reqs],
             queue_depth=depth)
+
+    # -- recovery (DESIGN.md §11) ---------------------------------------
+
+    def _record_batch_failure(self, bucket: int, err) -> None:
+        """One failed batch attempt -> the engine's circuit breaker; a
+        trip degrades the bucket's lane and is recorded in metrics."""
+        ev = self.engine.note_failure(bucket) \
+            if hasattr(self.engine, "note_failure") else None
+        if ev is not None:
+            self.metrics.record_degraded(ev["key"], ev["to"])
+
+    def _run_batch(self, bucket: int, reqs: List[Request], err=None) -> bool:
+        """Recovery driver: entered only after a failed attempt.
+
+        Re-runs the batch synchronously under the remaining retry
+        budget with backoff; every attempt re-consults the bucket's
+        active lane, so a circuit-breaker trip mid-loop lands the next
+        attempt on the degraded lane.  Exhausting the budget fails the
+        batch terminally (never raises into the flush worker)."""
+        for attempt in range(self.config.retry_attempts - 1):
+            self.metrics.record_retried()
+            self._sleep(self._retry.delay(attempt, salt=f"batch-{bucket}"))
+            try:
+                self._finalize(self._dispatch(bucket, reqs))
+                if self._resilient:
+                    self.engine.note_success(bucket)
+                self._done_with(reqs)
+                return True
+            except WorkerCrash:
+                raise
+            except Exception as e:
+                err = e
+                self._record_batch_failure(bucket, e)
+        self._finish_failed(reqs, err)
+        return False
+
+    def _dispatch_async(self, bucket: int, reqs: List[Request]):
+        """One pipelined dispatch attempt for the flush path; on failure
+        the batch drops into the synchronous recovery driver (losing
+        only its staging overlap).  Returns the dispatched tuple, or
+        None when the batch already reached a terminal state."""
+        try:
+            return self._dispatch(bucket, reqs)
+        except WorkerCrash:
+            raise
+        except Exception as err:
+            self._record_batch_failure(bucket, err)
+            self._run_batch(bucket, reqs, err=err)
+            return None
+
+    def _complete(self, dispatched) -> None:
+        """Finalize one dispatched batch, routing failures (executable
+        exceptions surfacing at materialization, non-finite outputs)
+        into the recovery driver."""
+        bucket, reqs = dispatched[0], dispatched[1]
+        try:
+            self._finalize(dispatched)
+        except WorkerCrash:
+            raise
+        except Exception as err:
+            self._record_batch_failure(bucket, err)
+            self._run_batch(bucket, reqs, err=err)
+            return
+        if self._resilient:
+            self.engine.note_success(bucket)
+        self._done_with(reqs)
 
     def _overloaded_degrade(self) -> bool:
         cap = self.config.queue_capacity
@@ -263,7 +454,33 @@ class Server:
             got = self.batcher.poll(now=now, force=force)
             if got is None:
                 return
-            self._finalize(self._dispatch(*got))
+            d = self._dispatch_async(*got)
+            if d is not None:
+                self._complete(d)
+
+    def _worker_run(self) -> None:
+        """The flush worker's thread target: the detection seam the
+        watchdog relies on.  ANY escape — an injected WorkerCrash or a
+        real bug — is recorded (in-flight batches failed terminally,
+        waiters woken) instead of silently orphaning requests; the
+        watchdog then restarts the worker from ``submit``/``drain``."""
+        try:
+            self._worker_loop()
+        except BaseException as err:
+            self._record_worker_death(err)
+
+    def _record_worker_death(self, err) -> None:
+        """A dead worker's last act: every batch it had taken from the
+        batcher but not finished is failed terminally (extended
+        conservation stays intact) and counted against the circuit
+        breaker — a crash mid-batch is evidence against that lane."""
+        with self._cv:
+            work = list(self._worker_work)
+            self._worker_work.clear()
+            self._cv.notify_all()
+        for bucket, reqs in work:
+            self._record_batch_failure(bucket, err)
+            self._finish_failed(reqs, err)
 
     def _worker_loop(self) -> None:
         """The dedicated flush worker: the one consumer of the batcher.
@@ -281,6 +498,10 @@ class Server:
                 eager = (self._draining or not self._running
                          or self._overloaded_degrade())
                 got = self.batcher.poll(now=now, force=eager)
+                if got is not None:
+                    # register BEFORE any fallible work: a crash between
+                    # poll and finalize must not orphan the batch
+                    self._worker_work.append(got)
                 if expired or got:
                     # queue depth dropped: wake block-policy producers
                     self._cv.notify_all()
@@ -300,13 +521,16 @@ class Server:
             for r in expired:
                 self._finish_expired(r)
             if got is not None:
-                nxt = self._dispatch(*got)  # stage while inflight computes
+                if self._injector is not None:
+                    self._injector.crash_worker()
+                # stage while inflight computes (the double buffer)
+                nxt = self._dispatch_async(*got)
                 if inflight is not None:
                     self.metrics.record_overlap()
-                    self._finalize(inflight)
+                    self._complete(inflight)
                 inflight = nxt
             elif inflight is not None:
-                self._finalize(inflight)
+                self._complete(inflight)
                 inflight = None
 
     # -- stream drivers -------------------------------------------------

@@ -21,3 +21,14 @@ class BucketBatcher:
             self._last_t = max(self._last_t, now)
             self._q.append(payload)
             return next(self._rid)
+
+    def poll_safe(self, metrics):
+        """Broad handlers that re-raise or record are disciplined."""
+        try:
+            with self._lock:
+                return self._q.pop()
+        except IndexError:  # narrow catch: deliberate control flow, fine
+            return None
+        except Exception as err:
+            metrics.record_failed()  # records before swallowing: fine
+            raise err

@@ -90,6 +90,8 @@ RULE_FIXTURES = {
                      "src/repro/kernels/good_kernel.py"),
     "hygiene-deprecation-warns": ("src/repro/shims.py",
                                   "src/repro/suppressed.py"),
+    "silent-except": ("src/repro/serve/server.py",
+                      "src/repro/serve/batching.py"),
     "docs-link": ("DESIGN.md", "ROADMAP.md"),
     "docs-section-ref": ("src/repro/shims.py", "ROADMAP.md"),
     "suppress-needs-reason": ("src/repro/suppressed.py",

@@ -1,0 +1,448 @@
+"""The fault-injection plane + self-healing serving (DESIGN.md §11).
+
+Covers: FaultPlan parsing/validation and the deterministic budgets,
+RetryPolicy's replayable crc32 jitter and the with_retries driver, the
+CircuitBreaker state machine, PackedWire integrity (flip detection,
+restore-from-master, bit-identity of restored params — a flipped int5
+payload is structurally unservable), inline chaos on a fake clock
+(transient staging faults, NaN batches, latency spikes: extended
+conservation + bit-exact served results), breaker-driven int5 -> int8
+degradation whose outputs are bit-identical to a native int8 server's,
+the zero-cost-off contract (an unarmed server's snapshot carries none
+of the resilience keys), and the threaded chaos property test (producer
+threads under worker crashes + stage faults: extended conservation,
+unique terminal statuses, bit-exact served results, watchdog restart —
+deadlock-guarded, runtime-sanitized, retrace-sentineled).
+"""
+import faulthandler
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import CNN_SMOKES
+from repro.data.pipeline import SyntheticRequestStream
+from repro.engine import ExecutionPolicy, plan_model
+from repro.serve import (CircuitBreaker, FaultPlan, Lane, PackedWire,
+                         RetryPolicy, Server, ServeConfig, TransientFault,
+                         WorkerCrash)
+from repro.serve.faults import with_retries
+from tools.analysis.runtime import sanitize_server
+
+CFG = CNN_SMOKES["vgg16"]
+
+#: resilience counters that must NOT appear in a faults-off snapshot
+RESILIENCE_KEYS = {"failed", "retried", "degraded", "worker_restarts",
+                   "integrity_restored"}
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def sleep(self, dt: float) -> None:
+        self.t += max(dt, 0.0)
+
+
+def _stream(n=6, process="bursts", dtype="float32", seed=0, **kw):
+    return SyntheticRequestStream(
+        hw=CFG.input_hw, channels=CFG.layers[0].M, n_classes=CFG.n_classes,
+        n_requests=n, seed=seed, process=process, dtype=dtype, **kw)
+
+
+def _float_plan_params():
+    plan = plan_model(CFG, ExecutionPolicy())
+    return plan, plan.init(jax.random.PRNGKey(0))
+
+
+def _int5_ladder_server(faults, buckets=(1, 4), clock=None, **cfgkw):
+    """An int5 server with its full §11 ladder: PackedWire payload +
+    an int8 fallback lane calibrated off the same float master (what
+    ``launch.serve_cnn.build_server`` arms under ``--faults``)."""
+    plan, params = _float_plan_params()
+    calib = _stream(dtype="uint8").sample_batch(4)
+    qparams, _ = plan.quantize_int5(params)
+    requant = plan.calibrate_requant_int5(qparams, calib)
+    q8, _ = plan.quantize(params)
+    fallbacks = [Lane("int8", "int8", q8, plan.calibrate_requant(q8, calib))]
+    cfg = ServeConfig(buckets=buckets, datapath="int5", faults=faults,
+                      **cfgkw)
+    kw = {}
+    if clock is not None:
+        kw = dict(clock=clock, sleep=clock.sleep)
+    return Server.from_plan(plan, qparams, cfg, requant=requant,
+                            fallbacks=fallbacks,
+                            wire=PackedWire(CFG, params), **kw)
+
+
+@pytest.fixture
+def deadlock_guard():
+    """A stuck thread must fail the suite fast, not hang CI (pytest-
+    timeout covers this in CI; faulthandler covers local runs)."""
+    faulthandler.dump_traceback_later(180, exit=True)
+    yield
+    faulthandler.cancel_dump_traceback_later()
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: the seeded chaos schedule
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_parse_aliases_and_describe():
+    plan = FaultPlan.parse(
+        "seed=7,stage=2,worker=1,bitflip=1,latency=2,latency-ms=25")
+    assert plan.seed == 7
+    assert plan.stage_faults == 2 and plan.worker_crashes == 1
+    assert plan.bitflips == 1 and plan.latency_spikes == 2
+    assert plan.latency_spike_ms == 25.0
+    assert plan.total_budget == 6
+    d = plan.describe()
+    assert d["seed"] == 7 and d["stage_faults"] == 2
+    assert "exec_faults" not in d  # zero budgets stay out of the stamp
+
+
+def test_fault_plan_parse_rejects_unknown_and_negative():
+    with pytest.raises(ValueError, match="unknown --faults"):
+        FaultPlan.parse("seed=1,frobnicate=3")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("stage=-1")
+
+
+def test_fault_plan_empty_spec_is_armed_but_inert():
+    plan = FaultPlan.parse("seed=9")
+    assert plan.total_budget == 0
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy: bounded backoff with replayable jitter
+# ---------------------------------------------------------------------------
+
+
+def test_retry_delay_is_deterministic_and_grows():
+    pol = RetryPolicy(max_attempts=4, backoff_s=0.01, multiplier=2.0,
+                      jitter=0.5, seed=3)
+    d = [pol.delay(k, salt="x") for k in range(3)]
+    assert d == [pol.delay(k, salt="x") for k in range(3)]  # replayable
+    assert d[0] != pol.delay(0, salt="y")  # salted
+    for k, dk in enumerate(d):
+        base = 0.01 * 2.0 ** k
+        assert base <= dk <= base * 1.5
+
+
+def test_with_retries_recovers_transients_and_reraises_exhausted():
+    clk = FakeClock()
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise TransientFault("boom")
+        return "ok"
+
+    pol = RetryPolicy(max_attempts=3, backoff_s=0.01)
+    assert with_retries(flaky, pol, sleep=clk.sleep, salt="t") == "ok"
+    assert len(calls) == 3 and clk.t > 0
+
+    def always():
+        raise TransientFault("never")
+
+    with pytest.raises(TransientFault):
+        with_retries(always, pol, sleep=clk.sleep, salt="t")
+
+
+def test_with_retries_never_retries_worker_crash():
+    calls = []
+
+    def crash():
+        calls.append(1)
+        raise WorkerCrash("dead")
+
+    with pytest.raises(WorkerCrash):
+        with_retries(crash, RetryPolicy(max_attempts=5),
+                     sleep=lambda s: None, salt="w")
+    assert len(calls) == 1  # a dead thread cannot retry itself
+
+
+# ---------------------------------------------------------------------------
+# CircuitBreaker: closed -> open, success resets, open is permanent
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_trips_once_at_threshold_and_stays_open():
+    br = CircuitBreaker(threshold=3)
+    assert [br.failure("k") for _ in range(3)] == [False, False, True]
+    assert br.tripped("k")
+    assert br.failure("k") is False  # open key never re-trips
+    assert not br.tripped("other")
+
+
+def test_breaker_success_resets_the_count():
+    br = CircuitBreaker(threshold=2)
+    assert br.failure("k") is False
+    br.success("k")
+    assert br.failure("k") is False  # count restarted
+    assert br.failure("k") is True
+
+
+# ---------------------------------------------------------------------------
+# PackedWire: checksummed int5 payload, restore-from-master
+# ---------------------------------------------------------------------------
+
+
+def test_packed_wire_verifies_flips_and_restores():
+    plan, params = _float_plan_params()
+    wire = PackedWire(CFG, params)
+    assert wire.verify() == []
+    ref = wire.qparams()
+
+    wire.flip_bit(0, 13)
+    assert wire.verify() == [0]
+    restored = []
+    wire.on_restore = restored.append
+    fixed = wire.qparams()  # verify-first: decode never sees the flip
+    assert restored == [1] and wire.verify() == []
+    for a, b in zip(ref["conv"], fixed["conv"]):
+        np.testing.assert_array_equal(a["kernel"], b["kernel"])
+        np.testing.assert_array_equal(a["shift"], b["shift"])
+
+
+def test_packed_wire_params_match_plan_quantize_int5():
+    """Restored/materialized wire params are bit-identical to the plan's
+    own quantization — §9.3's requant calibration stays valid through an
+    integrity restore (no recalibration needed)."""
+    plan, params = _float_plan_params()
+    wire = PackedWire(CFG, params)
+    qparams, _ = plan.quantize_int5(params)
+    got = wire.qparams()
+    assert len(got["conv"]) == len(qparams["conv"])
+    for w, q in zip(got["conv"], qparams["conv"]):
+        np.testing.assert_array_equal(np.asarray(w["kernel"]),
+                                      np.asarray(q["kernel"]))
+        np.testing.assert_array_equal(np.asarray(w["shift"]),
+                                      np.asarray(q["shift"]))
+
+
+# ---------------------------------------------------------------------------
+# inline chaos on the fake clock: conservation + bit-exactness
+# ---------------------------------------------------------------------------
+
+
+def test_inline_chaos_serves_bit_exact_with_conservation():
+    """Transient staging faults, one NaN batch, one latency spike: every
+    request still serves, retries are counted, and every served result
+    is the bit-exact unbatched answer."""
+    plan, params = _float_plan_params()
+    clk = FakeClock()
+    cfg = ServeConfig(
+        buckets=(1, 4), faults=FaultPlan.parse(
+            "seed=5,stage=2,nonfinite=1,latency=1"))
+    srv = Server.from_plan(plan, params, cfg, clock=clk, sleep=clk.sleep)
+    stream = _stream(n=6)
+    metrics = srv.run_stream(stream)
+    srv.close()
+    tot = metrics.snapshot()["totals"]
+    assert tot["submitted"] == 6 == tot["images"]
+    assert tot.get("failed", 0) == 0
+    assert tot["retried"] >= 3  # 2 stage faults + the NaN batch redo
+    assert (tot["images"] + tot["shed"] + tot["expired"]
+            + tot.get("failed", 0)) == tot["submitted"]
+    imgs = list(_stream(n=6))
+    for r, (_, img, _) in zip(metrics.requests, imgs):
+        assert r.status == "served"
+        np.testing.assert_array_equal(
+            r.result, srv.engine.infer(img[None])[0])
+    assert srv.engine.injector.exhausted()
+
+
+def test_inline_chaos_latency_spike_can_expire_requests():
+    """A latency spike pushes queued work past its per-request deadline:
+    the spiked batch still serves, but conservation must absorb the
+    expiry — no request may vanish."""
+    plan, params = _float_plan_params()
+    clk = FakeClock()
+    cfg = ServeConfig(
+        buckets=(1,), request_timeout_ms=20.0,
+        faults=FaultPlan.parse("seed=2,latency=1,latency-ms=100"))
+    srv = Server.from_plan(plan, params, cfg, clock=clk, sleep=clk.sleep)
+    metrics = srv.run_stream(_stream(n=4, process="uniform", rate_hz=1e3))
+    srv.close()
+    tot = metrics.snapshot()["totals"]
+    assert (tot["images"] + tot["shed"] + tot["expired"]
+            + tot.get("failed", 0)) == tot["submitted"] == 4
+
+
+# ---------------------------------------------------------------------------
+# degradation: breaker trips int5 -> int8, bit-identical to native int8
+# ---------------------------------------------------------------------------
+
+
+def test_degradation_int5_to_int8_is_bit_identical(retrace_sentinel):
+    """Persistent executable faults on the primary int5 lane trip the
+    breaker; the bucket degrades to the int8 fallback lane and KEEPS
+    SERVING — and every degraded output is bit-identical to what a
+    native int8 server computes.  A planned bit-flip rides along: the
+    trip-time integrity sweep restores the wire payload from the fp32
+    master (counted, never served)."""
+    faults = FaultPlan.parse("seed=4,exec=2,bitflip=1")
+    clk = FakeClock()
+    srv = _int5_ladder_server(faults, buckets=(1,), clock=clk,
+                              breaker_threshold=2)
+    retrace_sentinel.arm()  # every lane x bucket compiled at warmup
+    stream = _stream(n=3, dtype="uint8")
+    metrics = srv.run_stream(stream)
+    srv.close()
+    snap = metrics.snapshot()
+    tot = snap["totals"]
+    assert tot["images"] == 3 == tot["submitted"]
+    assert tot.get("failed", 0) == 0
+    assert tot["degraded"] == 1
+    assert tot["integrity_restored"] >= 1
+    key = f"{CFG.name} int5 n1"
+    assert snap["degraded_lanes"] == {key: "int8"}
+    assert srv.engine.lane_of(1).name == "int8"
+    # compile-once held through the trip: one executable per lane/bucket
+    assert all(v == 1 for v in srv.engine.compile_counts.values())
+    # bit-identity with the int8 lane's own engine
+    int8_lane = srv.engine.lanes[1]
+    plan, _ = _float_plan_params()
+    from repro.serve import ServeEngine
+    eng8 = ServeEngine.build_for_plan(
+        plan, int8_lane.params, buckets=(1,), datapath="int8",
+        requant=int8_lane.requant)
+    for r, (_, img, _) in zip(metrics.requests,
+                          _stream(n=3, dtype="uint8")):
+        assert r.status == "served"
+        np.testing.assert_array_equal(r.result, eng8.infer(img[None])[0])
+
+
+def test_flipped_payload_is_restored_before_serving():
+    """A bit-flip with no executable faults: the next materialization's
+    verify-first sweep restores the payload — the flipped bytes are
+    never decoded into servable weights, and outputs stay bit-exact."""
+    faults = FaultPlan.parse("seed=8,bitflip=1")
+    clk = FakeClock()
+    srv = _int5_ladder_server(faults, buckets=(1,), clock=clk)
+    ref = [srv.engine.infer(img[None])[0]
+           for _, img, _ in _stream(n=3, dtype="uint8")]
+    metrics = srv.run_stream(_stream(n=3, dtype="uint8"))
+    srv.close()
+    tot = metrics.snapshot()["totals"]
+    assert tot["images"] == 3 and tot.get("failed", 0) == 0
+    assert tot["integrity_restored"] >= 1
+    assert srv.engine.wire.verify() == []
+    for r, want in zip(metrics.requests, ref):
+        np.testing.assert_array_equal(r.result, want)
+
+
+# ---------------------------------------------------------------------------
+# zero-cost-off: an unarmed server's snapshot carries no resilience keys
+# ---------------------------------------------------------------------------
+
+
+def test_faults_off_snapshot_has_no_resilience_keys():
+    plan, params = _float_plan_params()
+    clk = FakeClock()
+    srv = Server.from_plan(plan, params, ServeConfig(buckets=(1, 4)),
+                           clock=clk, sleep=clk.sleep)
+    snap = srv.run_stream(_stream(n=6)).snapshot()
+    srv.close()
+    assert not RESILIENCE_KEYS & set(snap["totals"])
+    assert "degraded_lanes" not in snap
+    assert srv.engine.injector is None
+
+
+def test_armed_but_empty_plan_matches_fault_free_snapshot():
+    """`--faults seed=N` with every budget zero: the plane is armed but
+    inert — the run's snapshot is identical (modulo nothing) to a
+    fault-free server's on the same fake-clock stream."""
+    plan, params = _float_plan_params()
+
+    def run(cfg):
+        clk = FakeClock()
+        srv = Server.from_plan(plan, params, cfg, clock=clk,
+                               sleep=clk.sleep)
+        snap = srv.run_stream(_stream(n=6)).snapshot()
+        srv.close()
+        return snap
+
+    plain = run(ServeConfig(buckets=(1, 4)))
+    armed = run(ServeConfig(buckets=(1, 4),
+                            faults=FaultPlan.parse("seed=6")))
+    assert plain == armed
+
+
+# ---------------------------------------------------------------------------
+# threaded chaos: worker crashes + stage faults under producer threads
+# ---------------------------------------------------------------------------
+
+
+def test_threaded_chaos_conserves_and_serves_bit_exact(deadlock_guard,
+                                                       retrace_sentinel):
+    """Property: N producers through an armed fault plane (one worker
+    crash mid-batch, transient stage faults) still conserve requests
+    exactly — served + shed + expired + failed == submitted, every
+    request terminal exactly once, unique rids — and every served
+    result is the bit-exact unbatched answer.  The watchdog must have
+    replaced the crashed worker (the queue drains).  Runs under the
+    runtime sanitizer: lock-order cycles or unguarded cv-state access
+    in the crash/restart interleaving fail the test."""
+    plan, params = _float_plan_params()
+    cfg = ServeConfig(buckets=(1, 4), max_delay_ms=2.0,
+                      faults=FaultPlan.parse("seed=11,worker=1,stage=2"))
+    srv = Server.from_plan(plan, params, cfg)
+    registry = sanitize_server(srv)
+    retrace_sentinel.arm()
+    n_threads, per_thread = 4, 8
+    results = [[] for _ in range(n_threads)]
+
+    def producer(k):
+        imgs = _stream(n=per_thread, seed=k).sample_batch(per_thread)
+        for i in range(per_thread):
+            results[k].append(srv.submit(imgs[i]))
+
+    threads = [threading.Thread(target=producer, args=(k,))
+               for k in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive(), "producer thread deadlocked"
+    srv.drain()
+    srv.close()
+    reqs = [r for rs in results for r in rs]
+    assert len(reqs) == n_threads * per_thread
+    assert all(r.done.is_set() for r in reqs)
+    statuses = [r.status for r in reqs]
+    assert statuses.count("pending") == 0
+    tot = srv.metrics.snapshot()["totals"]
+    assert tot["submitted"] == len(reqs)
+    assert (statuses.count("served") + statuses.count("shed")
+            + statuses.count("expired")
+            + statuses.count("failed")) == len(reqs)
+    assert tot["images"] == statuses.count("served")
+    assert tot.get("failed", 0) == statuses.count("failed")
+    rids = [r.rid for r in reqs]
+    assert len(set(rids)) == len(rids), "duplicate request ids"
+    # the crash fired iff its batch was in flight; when it did, the
+    # watchdog must have restarted the worker and the failed requests
+    # must carry the crash in their error
+    fired = srv.engine.injector.fired
+    if fired["worker"]:
+        assert tot.get("worker_restarts", 0) >= 1
+    for r in reqs:
+        if r.status == "failed":
+            assert r.error and r.result is None
+    assert all(v == 1 for v in srv.engine.compile_counts.values())
+    assert registry.errors == [], registry.errors
+    for k in range(n_threads):
+        imgs = _stream(n=per_thread, seed=k).sample_batch(per_thread)
+        for i, r in enumerate(results[k]):
+            if r.status == "served":
+                np.testing.assert_array_equal(
+                    r.result, srv.engine.infer(imgs[i:i + 1])[0])

@@ -60,6 +60,10 @@ RULES = {
         "a shim documented as Deprecated must emit DeprecationWarning "
         "(and any 'deprecated' warn must pass that category)"
     ),
+    "silent-except": (
+        "serve-layer `except Exception` handlers must re-raise or record "
+        "(metrics/log) — a swallowed failure breaks extended conservation"
+    ),
     "docs-link": (
         "relative markdown links in the tracked docs set must resolve"
     ),

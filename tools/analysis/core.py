@@ -11,7 +11,7 @@ Vocabulary:
   ``pallas-int64``, ...).  ``tools.analysis.RULES`` is the catalog
   (DESIGN.md §10 documents each rule's rationale).
 - A **pass** is a group of rules sharing one traversal (lock-ownership,
-  trace-safety, pallas-contract, api-hygiene).
+  trace-safety, pallas-contract, api-hygiene, silent-except).
 - A **Finding** is one violation at one source line.  ``python -m
   tools.analysis`` exits non-zero when any finding survives suppression.
 - A **suppression** is an inline ``# trimcheck: disable=<rule>[,...] --
@@ -214,6 +214,9 @@ class Config:
     pallas_dirs: Tuple[str, ...] = ("src/repro/kernels",)
     #: directories scanned by the api-hygiene (deprecation) pass.
     hygiene_dirs: Tuple[str, ...] = ("src/repro",)
+    #: directories scanned by the silent-except pass (the serve layer's
+    #: no-silent-swallow discipline, DESIGN.md §11).
+    except_dirs: Tuple[str, ...] = ("src/repro/serve",)
     #: run the repo-level docs rules (markdown links + §-citations).
     docs: bool = True
     #: restrict to these rules (None = all).
@@ -252,7 +255,7 @@ def load_source(root: str, rel: str) -> Optional[SourceFile]:
 
 def run_analysis(cfg: Optional[Config] = None) -> List[Finding]:
     """Run every selected pass under ``cfg``; returns surviving findings."""
-    from tools.analysis import docs, hygiene, locks, pallas_pass, trace
+    from tools.analysis import docs, excepts, hygiene, locks, pallas_pass, trace
 
     cfg = cfg or Config()
     lock_map = cfg.lock_map if cfg.lock_map is not None else locks.DEFAULT_LOCK_MAP
@@ -295,6 +298,12 @@ def run_analysis(cfg: Optional[Config] = None) -> List[Finding]:
         sf = get(rel)
         if sf is not None:
             raw.extend(hygiene.check(sf))
+
+    # Silent-except pass (serve-layer swallow discipline).
+    for rel in iter_py_files(cfg.root, cfg.except_dirs):
+        sf = get(rel)
+        if sf is not None:
+            raw.extend(excepts.check(sf))
 
     # Repo-level docs rules (absorbed tools/check_docs.py static half).
     if cfg.docs:

@@ -1,0 +1,93 @@
+"""Silent-exception pass (rule silent-except).
+
+The serve layer's recovery machinery (DESIGN.md §11) is built on one
+discipline: a broad ``except Exception`` handler is only legitimate when
+it either re-raises or *records* — feeds the failure into metrics, the
+breaker, or a log — because a swallowed exception there silently breaks
+extended conservation (a request that never reaches a terminal state).
+
+A handler is **broad** when it catches nothing in particular: bare
+``except:``, ``except Exception``, ``except BaseException``, or a tuple
+containing either.  Narrow catches (``except KeyError``) are deliberate
+control flow and stay out of scope.
+
+A broad handler is **accepted** when its body (nested functions
+excluded — they run later, if ever) contains:
+
+- a ``raise`` statement (bare re-raise or raise-from), or
+- a call that records: its terminal name — underscores stripped —
+  starts with ``record``/``warn``/``log``/``fail``, or its attribute
+  chain passes through ``metrics`` (``self.metrics.record_x``,
+  ``logging.warning``, ``self._record_batch_failure``, ...).
+
+Anything else is a finding.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from tools.analysis.core import Finding, SourceFile, attr_chain, terminal_name
+
+_BROAD_NAMES = {"Exception", "BaseException"}
+_RECORD_PREFIXES = ("record", "warn", "log", "fail")
+
+
+def _is_broad(handler_type: Optional[ast.AST]) -> bool:
+    if handler_type is None:
+        return True
+    if isinstance(handler_type, ast.Tuple):
+        return any(_is_broad(elt) for elt in handler_type.elts)
+    name = terminal_name(handler_type)
+    return name in _BROAD_NAMES
+
+
+def _records(call: ast.Call) -> bool:
+    name = terminal_name(call.func)
+    if name is not None and name.lstrip("_").startswith(_RECORD_PREFIXES):
+        return True
+    chain = attr_chain(call.func)
+    return chain is not None and "metrics" in chain.split(".")
+
+
+def _own_body_nodes(handler: ast.ExceptHandler):
+    """Walk the handler body without descending into nested functions —
+    a closure's ``raise``/record runs later (if ever), not on this
+    exception."""
+    stack = list(handler.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def check(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.ExceptHandler) or not _is_broad(node.type):
+            continue
+        handled = False
+        for sub in _own_body_nodes(node):
+            if isinstance(sub, ast.Raise):
+                handled = True
+                break
+            if isinstance(sub, ast.Call) and _records(sub):
+                handled = True
+                break
+        if not handled:
+            caught = (
+                "bare except" if node.type is None else ast.unparse(node.type)
+            )
+            findings.append(
+                sf.finding(
+                    "silent-except",
+                    node,
+                    f"broad handler ({caught}) neither re-raises nor "
+                    f"records — a swallowed serve-layer failure breaks "
+                    f"extended conservation (DESIGN.md §11)",
+                )
+            )
+    return findings

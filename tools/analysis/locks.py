@@ -36,7 +36,14 @@ DEFAULT_LOCK_MAP: Dict[str, Tuple[LockSpec, ...]] = {
         LockSpec(
             cls="Server",
             lock_attr="_cv",
-            guarded=("_running", "_draining", "_closed", "_worker", "requests"),
+            guarded=(
+                "_running",
+                "_draining",
+                "_closed",
+                "_worker",
+                "_worker_work",
+                "requests",
+            ),
         ),
     ),
     "src/repro/serve/batching.py": (
@@ -58,7 +65,11 @@ BLOCKING_NAMES = {
     "run_bucket",
     "stage",
     "_dispatch",
+    "_dispatch_async",
     "_finalize",
+    "_complete",
+    "_run_batch",
+    "_stage_retry",
 }
 #: ``.join`` is only blocking when the receiver smells like a thread —
 #: keeps ``", ".join(...)`` out of the blast radius.

@@ -31,7 +31,7 @@ from typing import Dict, List, Optional, Set, Tuple
 #: Runtime-checked guarded attributes for Server.  ``requests`` is in the
 #: static map but carries audited GIL-atomic suppressions (server.py), so
 #: the runtime check sticks to the strictly cv-owned state machine.
-SERVER_GUARDED = ("_running", "_draining", "_closed", "_worker")
+SERVER_GUARDED = ("_running", "_draining", "_closed", "_worker", "_worker_work")
 
 
 class LockRegistry:
